@@ -1,0 +1,57 @@
+"""Kernel oracles vs XLA-path wall time (CPU; interpret-mode kernels are not
+timed — they are correctness artifacts. The XLA chunked paths ARE the
+production CPU fallback)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import attention_ref
+from repro.kernels.rwkv6 import wkv6_ref
+from repro.models.rwkv6 import wkv_chunked
+from repro.models.layers import attention
+
+
+def _time(f, *args, n=3):
+    out = f(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(n):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / n * 1e6
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    B, H, KV, S, D = 1, 4, 2, 1024, 64
+    q = jax.random.normal(key, (B, S, H, D), jnp.float32)
+    k = jax.random.normal(key, (B, S, KV, D), jnp.float32)
+    v = jax.random.normal(key, (B, S, KV, D), jnp.float32)
+    chunked = jax.jit(lambda q, k, v: attention(q, k, v, chunk=256))
+    rows.append(("attn_chunked_xla_us", round(_time(chunked, q, k, v)),
+                 f"B{B} H{H} S{S} chunked"))
+    qt = jnp.transpose(q, (0, 2, 1, 3))
+    kt = jnp.transpose(k, (0, 2, 1, 3))
+    vt = jnp.transpose(v, (0, 2, 1, 3))
+    full = jax.jit(lambda q, k, v: attention_ref(q, k, v))
+    rows.append(("attn_full_ref_us", round(_time(full, qt, kt, vt)),
+                 "materialized S^2 oracle"))
+
+    r = jax.random.normal(key, (1, 64, 2, 64))      # (B,S,H,dh) model layout
+    kk = jax.random.normal(key, (1, 64, 2, 64))
+    vv = jax.random.normal(key, (1, 64, 2, 64))
+    lw = -jnp.exp(jax.random.normal(key, (1, 64, 2, 64)) * 0.3 - 2)
+    u = jax.random.normal(key, (2, 64)) * 0.3
+    st = jnp.zeros((1, 2, 64, 64))
+    ch = jax.jit(lambda *a: wkv_chunked(*a, 32)[0])
+    rows.append(("rwkv6_chunked_xla_us", round(_time(ch, r, kk, vv, lw, u, st)),
+                 "chunk=32"))
+    tr = lambda a: jnp.transpose(a, (0, 2, 1, 3))
+    ref = jax.jit(lambda r_, k_, v_, l_, u_: wkv6_ref(tr(r_), tr(k_), tr(v_), tr(l_), u_))
+    rows.append(("rwkv6_exact_scan_us", round(_time(ref, r, kk, vv, lw, u)),
+                 "sequential oracle"))
+    return rows

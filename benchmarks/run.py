@@ -1,0 +1,28 @@
+# One function per paper table/figure. Prints ``name,value,derived`` CSV.
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import table1_cost, pipeline_throughput, train_step_bench, kernel_bench
+    mods = [("table1_cost", table1_cost), ("pipeline_throughput", pipeline_throughput),
+            ("train_step", train_step_bench), ("kernels", kernel_bench)]
+    print("name,value,derived")
+    failed = 0
+    for name, mod in mods:
+        try:
+            for row in mod.run():
+                n, v, d = row
+                print(f"{n},{v},{str(d).replace(',', ';')}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failed += 1
+            print(f"{name}_FAILED,,{type(e).__name__}: {e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

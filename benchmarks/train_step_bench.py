@@ -1,0 +1,32 @@
+"""Wall-clock step time of the reduced-config training step per family
+(CPU — relative numbers; the TPU projection lives in the roofline table)."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.data import make_lm_batches
+from repro.train import OptConfig, init_train_state, make_train_step
+
+ARCHS = ("llama3.2-1b", "rwkv6-1.6b", "zamba2-1.2b", "moonshot-v1-16b-a3b")
+
+
+def run():
+    rows = []
+    for arch in ARCHS:
+        cfg = get_config(arch).reduced()
+        params, opt = init_train_state(cfg, jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(cfg, OptConfig()))
+        batch = make_lm_batches(cfg, 2, 128, 1)[0]
+        params, opt, m = step(params, opt, batch)       # compile + warm
+        jax.block_until_ready(m["loss"])
+        t0 = time.time()
+        n = 3
+        for _ in range(n):
+            params, opt, m = step(params, opt, batch)
+        jax.block_until_ready(m["loss"])
+        us = (time.time() - t0) / n * 1e6
+        rows.append((f"train_step_{arch}_us", round(us), "reduced config, B=2 S=128"))
+    return rows

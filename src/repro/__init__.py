@@ -1,0 +1,10 @@
+"""repro: scalable, reproducible, cost-effective large-scale processing — in JAX.
+
+A multi-pod training/inference framework whose data/orchestration substrate
+implements Kim et al. 2024 (BIDS-style manifests, automated work queries,
+content-addressed pipelines, checksummed tiered storage, provenance, cost
+modeling) and whose compute plane supports 10 published architectures on a
+512-chip production mesh. See DESIGN.md.
+"""
+
+__version__ = "1.0.0"

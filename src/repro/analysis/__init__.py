@@ -1,0 +1,5 @@
+from .roofline import (HW, collective_bytes_from_hlo, roofline_terms,
+                       summarize_memory, model_flops)
+
+__all__ = ["HW", "collective_bytes_from_hlo", "roofline_terms",
+           "summarize_memory", "model_flops"]

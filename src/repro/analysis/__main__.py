@@ -1,0 +1,43 @@
+"""Render the roofline tables from dry-run records:
+
+    PYTHONPATH=src python -m repro.analysis [--mesh single|multi] [--tag opt]
+"""
+import argparse
+
+from .report import load_records, roofline_table
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    recs = load_records(args.mesh, args.tag)
+    print(f"## Roofline — mesh={args.mesh} tag={args.tag or 'baseline'} "
+          f"({len(recs)} cells)\n")
+    print(roofline_table_with_tag(args.mesh, args.tag))
+
+
+def roofline_table_with_tag(mesh, tag):
+    rows = ["| arch | shape | bound | compute s | memory s | collective s | "
+            "useful FLOP ratio | HBM/chip GB |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in load_records(mesh, tag):
+        if "skipped" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | skipped | — | — | — | — | — |")
+            continue
+        if "error" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR | — | — | — | — | — |")
+            continue
+        t = r["roofline"]
+        ur = r.get("useful_flop_ratio")
+        urs = f"{ur:.3f}" if ur else "—"
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | **{t['bound']}** | "
+            f"{t['compute_s']:.4f} | {t['memory_s']:.4f} | "
+            f"{t['collective_s']:.4f} | {urs} | {r['hbm_per_chip_gb']} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    main()

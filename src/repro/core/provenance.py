@@ -1,0 +1,66 @@
+"""Provenance records (paper §2.3): every derivative ships with a config file
+recording when it ran, who ran it, the exact inputs (with checksums), and the
+pipeline's content digest — file-level reproducibility years later."""
+from __future__ import annotations
+
+import dataclasses
+import getpass
+import json
+import platform
+import time
+from pathlib import Path
+from typing import Dict, List, Optional
+
+PROVENANCE_NAME = "provenance.json"
+
+
+@dataclasses.dataclass
+class Provenance:
+    pipeline: str
+    pipeline_digest: str           # content hash of config+code ("container digest")
+    user: str
+    started_at: float
+    finished_at: float
+    inputs: Dict[str, str]         # path -> sha256
+    outputs: Dict[str, str]
+    status: str                    # ok | failed
+    host: str = ""
+    error: Optional[str] = None
+    attempt: int = 1
+
+    def save(self, out_dir: Path):
+        out_dir = Path(out_dir)
+        out_dir.mkdir(parents=True, exist_ok=True)
+        (out_dir / PROVENANCE_NAME).write_text(
+            json.dumps(dataclasses.asdict(self), indent=1))
+
+    @classmethod
+    def load(cls, out_dir: Path) -> Optional["Provenance"]:
+        p = Path(out_dir) / PROVENANCE_NAME
+        if not p.exists():
+            return None
+        try:
+            return cls(**json.loads(p.read_text()))
+        except (json.JSONDecodeError, TypeError):
+            return None
+
+
+def make_provenance(pipeline: str, digest: str, inputs: Dict[str, str],
+                    outputs: Dict[str, str], started: float, status: str = "ok",
+                    error: Optional[str] = None, attempt: int = 1) -> Provenance:
+    return Provenance(
+        pipeline=pipeline, pipeline_digest=digest,
+        user=getpass.getuser(), host=platform.node(),
+        started_at=started, finished_at=time.time(),
+        inputs=inputs, outputs=outputs, status=status, error=error,
+        attempt=attempt)
+
+
+def is_complete(out_dir: Path, digest: Optional[str] = None) -> bool:
+    """A derivative counts as done iff its provenance says ok — and, when a
+    digest is given, was produced by the same pipeline version (a changed
+    pipeline re-runs everything, the paper's reproducibility contract)."""
+    prov = Provenance.load(out_dir)
+    if prov is None or prov.status != "ok":
+        return False
+    return digest is None or prov.pipeline_digest == digest

@@ -1,0 +1,72 @@
+"""Automated work query (paper §2.3): given a dataset manifest and a pipeline,
+return exactly the sessions that (a) have the required inputs and (b) have no
+completed, digest-matching derivative — plus a CSV of excluded sessions with
+the cause (the paper's accompanying CSV)."""
+from __future__ import annotations
+
+import csv
+import dataclasses
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+from .manifest import DatasetManifest, ImageRecord
+from .pipelines import Pipeline
+from .provenance import is_complete
+
+
+@dataclasses.dataclass
+class WorkUnit:
+    dataset: str
+    subject: str
+    session: str
+    pipeline: str
+    pipeline_digest: str
+    inputs: Dict[str, str]          # suffix -> path relative to dataset root
+    out_dir: str                    # derivatives/<pipeline>/sub-x/ses-y
+
+    @property
+    def job_id(self) -> str:
+        return f"{self.dataset}_{self.pipeline}_sub-{self.subject}_ses-{self.session}"
+
+
+@dataclasses.dataclass
+class Exclusion:
+    subject: str
+    session: str
+    reason: str
+
+
+def query_available_work(manifest: DatasetManifest, pipeline: Pipeline
+                         ) -> Tuple[List[WorkUnit], List[Exclusion]]:
+    work: List[WorkUnit] = []
+    excluded: List[Exclusion] = []
+    digest = pipeline.digest()
+    for (sub, ses), recs in sorted(manifest.sessions().items()):
+        by_suffix: Dict[str, ImageRecord] = {}
+        for r in recs:
+            by_suffix.setdefault(r.suffix, r)
+        missing = [s for s in pipeline.spec.required_suffixes if s not in by_suffix]
+        if missing:
+            excluded.append(Exclusion(sub, ses, f"missing input(s): {','.join(missing)}"))
+            continue
+        out_dir = (Path(manifest.root) / "derivatives" / pipeline.name /
+                   f"sub-{sub}" / f"ses-{ses}")
+        if is_complete(out_dir, digest):
+            excluded.append(Exclusion(sub, ses, "already processed (digest match)"))
+            continue
+        work.append(WorkUnit(
+            dataset=manifest.name, subject=sub, session=ses,
+            pipeline=pipeline.name, pipeline_digest=digest,
+            inputs={s: by_suffix[s].path for s in pipeline.spec.required_suffixes},
+            out_dir=str(out_dir)))
+    return work, excluded
+
+
+def write_exclusion_csv(excluded: List[Exclusion], path: Path):
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["subject", "session", "reason"])
+        for e in excluded:
+            w.writerow([e.subject, e.session, e.reason])

@@ -1,0 +1,4 @@
+from .checksum import device_checksum
+from .ref import device_checksum_ref
+
+__all__ = ["device_checksum", "device_checksum_ref"]

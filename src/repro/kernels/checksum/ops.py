@@ -1,0 +1,1 @@
+from .checksum import device_checksum as device_checksum_op  # noqa: F401

@@ -1,0 +1,21 @@
+"""Numpy oracle — bit-exact with the kernel."""
+from __future__ import annotations
+
+import numpy as np
+
+M_POS = 65521
+
+
+def device_checksum_ref(x: np.ndarray) -> np.ndarray:
+    b = np.ascontiguousarray(x).tobytes()
+    pad = (-len(b)) % 4
+    if pad:
+        b += b"\0" * pad
+    words = np.frombuffer(b, "<u4").astype(np.uint32)
+    idx = (np.arange(words.size, dtype=np.uint64) % M_POS).astype(np.uint32)
+    s1 = np.uint32(0)
+    s2 = np.uint32(0)
+    with np.errstate(over="ignore"):
+        s1 = np.sum(words, dtype=np.uint32)
+        s2 = np.sum(words * idx, dtype=np.uint32)
+    return np.array([s1, s2], dtype=np.uint32).view(np.int32)

@@ -1,0 +1,106 @@
+"""Flash attention (forward) as a Pallas TPU kernel.
+
+Canonical TPU pattern: grid (B, H, nQ, nKV) with the KV dimension innermost
+(sequential on TPU), online-softmax running max/denominator/accumulator in
+VMEM scratch, written out on the last KV block. GQA is handled in the
+BlockSpec index maps (q head h reads kv head h // G) — K/V are never
+repeated. Blocks are MXU-aligned (multiples of 128 on the matmul dims).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window, blk_q: int, blk_k: int,
+                  seq_k: int):
+    ik = pl.program_id(3)
+    n_k = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[:] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[:] = jnp.zeros_like(l_ref)
+        acc_ref[:] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (blk_q, dh)
+    k = k_ref[0, 0].astype(jnp.float32)            # (blk_k, dh)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+
+    iq = pl.program_id(2)
+    rows = iq * blk_q + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0)
+    cols = ik * blk_k + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
+    mask = cols < seq_k
+    if causal:
+        mask &= rows >= cols
+    if window is not None:
+        mask &= (rows - cols) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[:]                              # (blk_q,)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_ref[:] = l_ref[:] * alpha + jnp.sum(p, axis=1)
+    acc_ref[:] = acc_ref[:] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+    m_ref[:] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[:], 1e-30)
+        o_ref[0, 0] = (acc_ref[:] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "blk_q",
+                                             "blk_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    blk_q: int = 128, blk_k: int = 128,
+                    interpret: bool = False):
+    """q: (B, H, Sq, Dh); k, v: (B, KV, Sk, Dh). Returns (B, H, Sq, Dh)."""
+    B, H, Sq, Dh = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(Dh)
+    blk_q = min(blk_q, Sq)
+    blk_k = min(blk_k, Sk)
+    pad_q = (-Sq) % blk_q
+    pad_k = (-Sk) % blk_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    n_q = q.shape[2] // blk_q
+    n_k = k.shape[2] // blk_k
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        blk_q=blk_q, blk_k=blk_k, seq_k=Sk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, blk_q, Dh), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, blk_k, Dh), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, blk_k, Dh), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, blk_q, Dh), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, Dh), jnp.float32),
+            pltpu.VMEM((blk_q,), jnp.float32),
+            pltpu.VMEM((blk_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :Sq] if pad_q else out

@@ -1,0 +1,17 @@
+"""Jitted public wrapper: (B, S, H, Dh) layout in, kernel layout inside."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention
+
+
+def flash_attention_op(q, k, v, *, causal=True, window=None, interpret=False):
+    """q: (B, S, H, Dh); k, v: (B, S, KV, Dh) — model-layer layout."""
+    qt = jnp.transpose(q, (0, 2, 1, 3))
+    kt = jnp.transpose(k, (0, 2, 1, 3))
+    vt = jnp.transpose(v, (0, 2, 1, 3))
+    out = flash_attention(qt, kt, vt, causal=causal, window=window,
+                          interpret=interpret)
+    return jnp.transpose(out, (0, 2, 1, 3))

@@ -1,0 +1,4 @@
+from .mamba2_ssd import ssd_chunked
+from .ref import ssd_ref
+
+__all__ = ["ssd_chunked", "ssd_ref"]

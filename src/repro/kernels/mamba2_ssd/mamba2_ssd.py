@@ -1,0 +1,81 @@
+"""Mamba-2 SSD chunk scan as a Pallas TPU kernel.
+
+Grid (B, H, n_chunks), chunk innermost (sequential); the (dh x N) SSM state is
+VMEM scratch carried across chunks. Per chunk (matching
+``models/mamba2.ssd_chunked``):
+
+    Lmat = exp(segsum(lw))                    (T, T) lower-triangular decay
+    y    = (C B^T ∘ Lmat) (dt x)  +  C S0^T decayed
+    S'   = exp(cum_T) S0 + sum_s exp(cum_T - cum_s) (dt x)_s B_s^T
+
+All matmuls are (T,T)x(T,dh) / (T,N)-shaped — MXU-aligned for T=128+, N=64.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, lw_ref, b_ref, c_ref, o_ref, state_ref):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    xb = x_ref[0, 0].astype(jnp.float32)        # (T, dh) — already dt-weighted
+    lw = lw_ref[0, 0].astype(jnp.float32)       # (T,) log-decay, <= 0
+    Bm = b_ref[0].astype(jnp.float32)           # (T, N)
+    Cm = c_ref[0].astype(jnp.float32)           # (T, N)
+    S0 = state_ref[...]                         # (dh, N)
+
+    T = xb.shape[0]
+    cum = jnp.cumsum(lw)                        # (T,)
+    seg = cum[:, None] - cum[None, :]           # cum_t - cum_s
+    tri = jax.lax.broadcasted_iota(jnp.int32, (T, T), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (T, T), 1)
+    Lmat = jnp.where(tri, jnp.exp(seg), 0.0)
+    CB = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())))     # (T, T)
+    y = jax.lax.dot_general(CB * Lmat, xb, (((1,), (0,)), ((), ())))
+    # inter-chunk: y_t += exp(cum_t) C_t @ S0^T
+    y = y + jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        Cm, S0, (((1,), (1,)), ((), ())))
+    o_ref[0, 0] = y.astype(o_ref.dtype)
+    # state update
+    w = jnp.exp(cum[-1] - cum)                  # (T,)
+    state_ref[...] = jnp.exp(cum[-1]) * S0 + jax.lax.dot_general(
+        xb * w[:, None], Bm, (((0,), (0,)), ((), ())))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunked(x, lw, Bm, Cm, *, chunk: int = 128, interpret: bool = False):
+    """x: (B, H, S, dh) dt-weighted inputs; lw: (B, H, S) log-decay;
+    Bm, Cm: (B, S, N). Returns y (B, H, S, dh) f32."""
+    B, H, S, dh = x.shape
+    N = Bm.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        lw = jnp.pad(lw, ((0, 0), (0, 0), (0, pad)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[2] // chunk
+    out = pl.pallas_call(
+        _ssd_kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, dh), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, dh), lambda b, h, c: (b, h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        scratch_shapes=[pltpu.VMEM((dh, N), jnp.float32)],
+        interpret=interpret,
+    )(x, lw, Bm, Cm)
+    return out[:, :, :S] if pad else out

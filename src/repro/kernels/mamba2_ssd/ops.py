@@ -1,0 +1,1 @@
+from .mamba2_ssd import ssd_chunked as ssd_op  # noqa: F401

@@ -1,0 +1,26 @@
+"""Oracle: exact sequential SSD recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, lw, Bm, Cm):
+    """x: (B,H,S,dh) dt-weighted; lw: (B,H,S); Bm,Cm: (B,S,N).
+        S_t = a_t S_{t-1} + x_t B_t^T ;  y_t = S_t C_t   (a_t = exp(lw_t))
+    """
+    B, H, S, dh = x.shape
+    N = Bm.shape[-1]
+    x32 = x.astype(jnp.float32)
+    a = jnp.exp(lw.astype(jnp.float32))
+    B32, C32 = Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+    def step(S_, t):
+        upd = jnp.einsum("bhd,bn->bhdn", x32[:, :, t], B32[:, t])
+        S_ = a[:, :, t][..., None, None] * S_ + upd
+        y = jnp.einsum("bhdn,bn->bhd", S_, C32[:, t])
+        return S_, y
+
+    S0 = jnp.zeros((B, H, dh, N), jnp.float32)
+    _, ys = jax.lax.scan(step, S0, jnp.arange(S))
+    return ys.transpose(1, 2, 0, 3)

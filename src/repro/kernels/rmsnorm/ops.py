@@ -1,0 +1,1 @@
+from .rmsnorm import rmsnorm as rmsnorm_op  # noqa: F401

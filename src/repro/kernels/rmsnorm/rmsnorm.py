@@ -1,0 +1,45 @@
+"""Fused RMSNorm Pallas kernel: one VMEM pass computes the f32 moment and the
+scaled output (XLA emits separate reduce + broadcast-multiply passes)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, scale_ref, o_ref, *, eps: float):
+    # mirrors models/layers.rmsnorm: f32 moment accumulation, compute-dtype
+    # multiplies (no materialized f32 copy of x)
+    x = x_ref[...]                                      # (blk, D)
+    var = jnp.sum(x.astype(jnp.float32) * x.astype(jnp.float32),
+                  axis=-1, keepdims=True) / x.shape[-1]
+    r = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    o_ref[...] = ((x * r) * scale_ref[...].astype(x.dtype)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "blk", "interpret"))
+def rmsnorm(x, scale, *, eps: float = 1e-5, blk: int = 256,
+            interpret: bool = False):
+    """x: (..., D); scale: (D,)."""
+    orig_shape = x.shape
+    D = x.shape[-1]
+    xf = x.reshape(-1, D)
+    R = xf.shape[0]
+    blk = min(blk, R)
+    pad = (-R) % blk
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(xf.shape[0] // blk,),
+        in_specs=[pl.BlockSpec((blk, D), lambda i: (i, 0)),
+                  pl.BlockSpec((D,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((blk, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xf.shape, x.dtype),
+        interpret=interpret,
+    )(xf, scale)
+    if pad:
+        out = out[:R]
+    return out.reshape(orig_shape)

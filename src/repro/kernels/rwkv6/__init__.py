@@ -1,0 +1,4 @@
+from .rwkv6 import wkv6_chunked
+from .ref import wkv6_ref
+
+__all__ = ["wkv6_chunked", "wkv6_ref"]

@@ -1,0 +1,1 @@
+from .rwkv6 import wkv6_chunked as wkv6_op  # noqa: F401

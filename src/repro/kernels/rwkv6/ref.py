@@ -1,0 +1,26 @@
+"""Oracle: exact sequential RWKV-6 recurrence (pure jnp lax.scan)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, logw, u):
+    """r,k,v,logw: (B, H, S, dh); u: (H, dh). Exact step-by-step recurrence:
+        o_t = r_t (S_{t-1} + diag(u) k_t^T v_t);  S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    """
+    B, H, S, dh = r.shape
+    r32, k32, v32 = (a.astype(jnp.float32) for a in (r, k, v))
+    w = jnp.exp(logw.astype(jnp.float32))
+    u32 = u.astype(jnp.float32)
+
+    def step(S_, t):
+        rt, kt, vt, wt = r32[:, :, t], k32[:, :, t], v32[:, :, t], w[:, :, t]
+        kv = jnp.einsum("bhd,bhe->bhde", kt, vt)
+        ot = jnp.einsum("bhd,bhde->bhe", rt, S_ + u32[None, :, :, None] * kv)
+        S_ = wt[..., None] * S_ + kv
+        return S_, ot
+
+    S0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    _, outs = jax.lax.scan(step, S0, jnp.arange(S))
+    return outs.transpose(1, 2, 0, 3)        # (B, H, S, dh)

@@ -1,0 +1,83 @@
+"""RWKV-6 chunked WKV as a Pallas TPU kernel.
+
+Grid (B, H, n_chunks) with the chunk dimension innermost (sequential on TPU);
+the (dh x dh) recurrent state lives in VMEM scratch and carries across chunk
+iterations. Per-chunk math matches ``models/rwkv6.wkv_chunked``: pairwise
+decay factors exp(cum_t - cum_s) computed directly (always <= 1, stable).
+Working set per (b, h): 4 x (T, dh) inputs + (T, T, dh) decay ~ 4.3 MB at
+T=128, dh=64 — fits VMEM with the MXU-aligned (T, T) score matmuls.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, state_ref, *,
+                chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    r = r_ref[0, 0].astype(jnp.float32)          # (T, dh)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    lw = lw_ref[0, 0].astype(jnp.float32)        # (T, dh) log-decay < 0
+    u = u_ref[0].astype(jnp.float32)             # (dh,)
+    S0 = state_ref[...]                          # (dh, dh)
+
+    cum = jnp.cumsum(lw, axis=0)                 # inclusive
+    cumex = cum - lw                             # exclusive
+    T = r.shape[0]
+    # intra-chunk: scores[t,s] = sum_d r[t,d] k[s,d] exp(cumex[t,d]-cum[s,d])
+    decay = jnp.exp(cumex[:, None, :] - cum[None, :, :])       # (T,T,dh)
+    scores = jnp.sum(r[:, None, :] * k[None, :, :] * decay, axis=-1)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (T, T), 0) > \
+        jax.lax.broadcasted_iota(jnp.int32, (T, T), 1)
+    scores = jnp.where(tri, scores, 0.0)
+    diag = jnp.sum(u[None, :] * r * k, axis=-1)                # (T,)
+    out = jax.lax.dot_general(scores, v, (((1,), (0,)), ((), ())))
+    out = out + diag[:, None] * v
+    # inter-chunk: r_t decayed to chunk start @ S0
+    out = out + jax.lax.dot_general(r * jnp.exp(cumex), S0,
+                                    (((1,), (0,)), ((), ())))
+    o_ref[0, 0] = out.astype(o_ref.dtype)
+    # state update: S' = diag(exp(cum_T)) S0 + sum_s diag(exp(cum_T-cum_s)) k_s^T v_s
+    pT = jnp.exp(cum[-1])                                      # (dh,)
+    ksc = k * jnp.exp(cum[-1][None, :] - cum)                  # (T, dh)
+    state_ref[...] = pT[:, None] * S0 + jax.lax.dot_general(
+        ksc, v, (((0,), (0,)), ((), ())))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_chunked(r, k, v, logw, u, *, chunk: int = 128, interpret: bool = False):
+    """r,k,v,logw: (B, H, S, dh); u: (H, dh). Returns out (B, H, S, dh) f32."""
+    B, H, S, dh = r.shape
+    pad = (-S) % chunk
+    if pad:
+        pw = ((0, 0), (0, 0), (0, pad), (0, 0))
+        r, k, v = (jnp.pad(a, pw) for a in (r, k, v))
+        logw = jnp.pad(logw, pw)         # logw=0 on pad: decay 1, k=v=0
+    nc = r.shape[2] // chunk
+    out = pl.pallas_call(
+        functools.partial(_wkv_kernel, chunk=chunk),
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, dh), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, dh), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, dh), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, dh), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, dh), lambda b, h, c: (h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, dh), lambda b, h, c: (b, h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct(r.shape, jnp.float32),
+        scratch_shapes=[pltpu.VMEM((dh, dh), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, logw, u)
+    return out[:, :, :S] if pad else out

@@ -1,0 +1,31 @@
+"""Production mesh construction (v5e-like pods).
+
+A function — not a module-level constant — so importing never touches jax
+device state (the dry-run must set XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_tp2d_mesh(*, multi_pod: bool = False):
+    """Same chips, 'model' axis factored (8, 2): attention TP uses the 8-way
+    sub-axis (KV=8 archs shard kv-heads exactly), expert/vocab TP uses the
+    full 16 via ('model','model2'). §Perf L3 — for archs whose head counts
+    cannot carry a 16-way axis (llama4: H=40, KV=8)."""
+    shape = (2, 16, 8, 2) if multi_pod else (16, 8, 2)
+    axes = (("pod", "data", "model", "model2") if multi_pod
+            else ("data", "model", "model2"))
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """Whatever devices exist, as a 1x1xN 'model' mesh (tests/CPU)."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))

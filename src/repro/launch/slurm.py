@@ -1,0 +1,44 @@
+"""SLURM launch-script generation for multi-pod training (the paper's job
+machinery pointed at TPU/TRN pods instead of MRI pipelines).
+
+One array task per host; each host joins the jax distributed runtime and runs
+``launch/train.py`` with the production mesh. Burst-to-local fallback mirrors
+the paper's §2.3 (same entrypoint, local mesh).
+"""
+from __future__ import annotations
+
+from pathlib import Path
+
+POD_TEMPLATE = """#!/bin/bash
+#SBATCH --job-name={name}
+#SBATCH --array=0-{last_host}
+#SBATCH --nodes=1
+#SBATCH --cpus-per-task={cpus}
+#SBATCH --time={walltime}
+#SBATCH --output={log_dir}/%x_%a.out
+set -euo pipefail
+
+export JAX_COORDINATOR_ADDRESS={coordinator}
+export JAX_NUM_PROCESSES={n_hosts}
+export JAX_PROCESS_ID=$SLURM_ARRAY_TASK_ID
+
+srun python -m repro.launch.train \\
+    --arch {arch} --full --steps {steps} \\
+    --data-dir {data_dir} --ckpt-dir {ckpt_dir} --resume
+"""
+
+
+def write_pod_launch(out_dir: Path, *, arch: str, n_hosts: int = 64,
+                     coordinator: str = "pod0-host0:8476", steps: int = 10000,
+                     data_dir: str = "/data/shards", ckpt_dir: str = "/ckpt",
+                     cpus: int = 16, walltime: str = "48:00:00") -> Path:
+    out_dir = Path(out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    script = POD_TEMPLATE.format(
+        name=f"train_{arch}", last_host=n_hosts - 1, n_hosts=n_hosts,
+        coordinator=coordinator, arch=arch, steps=steps, data_dir=data_dir,
+        ckpt_dir=ckpt_dir, cpus=cpus, walltime=walltime,
+        log_dir=str(out_dir / "logs"))
+    p = out_dir / f"train_{arch}.slurm"
+    p.write_text(script)
+    return p

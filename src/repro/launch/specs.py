@@ -1,0 +1,145 @@
+"""ShapeDtypeStruct input specs + shardings for every (arch x shape) cell.
+
+This is the dry-run's contract: weak-type-correct, shardable stand-ins for
+every model input — no device allocation ever happens for full-size configs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import ModelConfig, ShapeConfig
+from ..dist.sharding import Rules, param_specs, shardings_for
+from ..models import init_cache, init_params
+from ..train.optimizer import adamw_init
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def safe_sharding(mesh: Mesh, spec: P, shape) -> NamedSharding:
+    """NamedSharding with axes that don't divide the dim dropped."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def axis_n(ax):
+        if ax is None:
+            return 1
+        axs = (ax,) if isinstance(ax, str) else ax
+        n = 1
+        for a in axs:
+            n *= sizes.get(a, 1)
+        return n
+
+    padded = tuple(spec) + (None,) * (len(shape) - len(spec))
+    return NamedSharding(mesh, P(*[ax if dim % axis_n(ax) == 0 else None
+                                   for dim, ax in zip(shape, padded)]))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, rules: Rules,
+                kind: str) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Returns (ShapeDtypeStruct batch, matching NamedSharding tree)."""
+    mesh = rules.mesh
+    B, S = shape.global_batch, shape.seq_len
+    bspec = rules.spec("batch", None)
+    b3spec = rules.spec("batch", None, None)
+    batch: Dict[str, Any] = {}
+    shard: Dict[str, Any] = {}
+
+    n_text = S
+    if cfg.vlm is not None:
+        n_text = S - cfg.vlm.n_patches
+        batch["embeds"] = sds((B, cfg.vlm.n_patches, cfg.d_model), jnp.bfloat16)
+        shard["embeds"] = NamedSharding(mesh, b3spec)
+    if cfg.encoder is not None:
+        batch["enc_embeds"] = sds((B, cfg.encoder.enc_seq, cfg.d_model), jnp.bfloat16)
+        shard["enc_embeds"] = NamedSharding(mesh, b3spec)
+
+    batch["tokens"] = sds((B, n_text), jnp.int32)
+    shard["tokens"] = NamedSharding(mesh, bspec)
+    if kind == "train":
+        batch["targets"] = sds((B, S), jnp.int32)
+        shard["targets"] = NamedSharding(mesh, bspec)
+    return batch, shard
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, rules: Rules):
+    """ShapeDtypeStructs + shardings for the decode cache."""
+    mesh = rules.mesh
+    cache = jax.eval_shape(lambda: init_cache(cfg, shape.global_batch,
+                                              shape.seq_len, jnp.bfloat16))
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def _axis_n(ax):
+        if ax is None:
+            return 1
+        axs = (ax,) if isinstance(ax, str) else ax
+        n = 1
+        for a in axs:
+            n *= sizes.get(a, 1)
+        return n
+
+    def spec_for(path, leaf):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else str(path[-1])
+        nd = leaf.ndim
+        if name in ("k", "v", "ck", "cv"):
+            s = rules.spec(*([None, "batch", "cache_seq"] + [None] * (nd - 3)))
+        elif name in ("wkv", "ssm"):
+            s = rules.spec(*([None, "batch", "act_model"] + [None] * (nd - 3)))
+        else:
+            s = rules.spec(*([None, "batch"] + [None] * (nd - 2)))
+        # divisibility guard (e.g. whisper's 1500-frame cross-attn cache)
+        return P(*[ax if dim % _axis_n(ax) == 0 else None
+                   for dim, ax in zip(leaf.shape, tuple(s) + (None,) * (nd - len(s)))])
+
+    specs = jax.tree_util.tree_map_with_path(spec_for, cache)
+    shards = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                          is_leaf=lambda x: isinstance(x, P))
+    return cache, shards
+
+
+SERVE_REPLICATE_BUDGET = 6 * 2**30     # bf16 params/chip to allow TP-only
+
+
+def state_specs(cfg: ModelConfig, rules: Rules, dtype=jnp.float32):
+    """Param (+ optimizer) ShapeDtypeStructs and shardings.
+
+    Serving (bf16 params, kind != train): FSDP-sharded weights would be
+    re-all-gathered EVERY decode token (e.g. 12.75 GB/chip/token for llama4).
+    When the TP-only footprint fits the budget, drop the 'data' axis from
+    weight shardings — weights stream from local HBM instead of the wire
+    (§Perf S2); big models keep FSDP storage (they cannot fit replicated).
+    """
+    params = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0), dtype))
+    pspecs = param_specs(params, rules.mesh)
+    if rules.kind != "train" and dtype == jnp.bfloat16:
+        tp = dict(zip(rules.mesh.axis_names, rules.mesh.devices.shape)
+                  ).get("model", 1)
+        if cfg.n_params() * 2 / max(tp, 1) <= SERVE_REPLICATE_BUDGET:
+            def drop_data(spec):
+                return P(*[None if ax == "data" else
+                           (tuple(a for a in ax if a != "data") or None
+                            if isinstance(ax, tuple) else ax)
+                           for ax in spec])
+            pspecs = jax.tree.map(drop_data, pspecs,
+                                  is_leaf=lambda x: isinstance(x, P))
+    pshard = shardings_for(rules.mesh, pspecs)
+    opt = jax.eval_shape(lambda: adamw_init(params))
+    ospecs = {"m": pspecs, "v": pspecs, "step": P()}
+    oshard = shardings_for(rules.mesh, ospecs)
+    return params, pshard, opt, oshard
+
+
+def decode_inputs(cfg: ModelConfig, shape: ShapeConfig, rules: Rules):
+    """(token, pos) specs for a decode step."""
+    mesh = rules.mesh
+    B = shape.global_batch
+    token = sds((B, 1), jnp.int32)
+    tshard = NamedSharding(mesh, rules.spec("batch", None))
+    pos = sds((), jnp.int32)
+    pshard = NamedSharding(mesh, P())
+    return (token, tshard), (pos, pshard)

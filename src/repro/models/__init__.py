@@ -1,0 +1,5 @@
+from .model import (init_params, forward_train, forward_prefill, forward_decode,
+                    init_cache, cache_max_len, cross_entropy)
+
+__all__ = ["init_params", "forward_train", "forward_prefill", "forward_decode",
+           "init_cache", "cache_max_len", "cross_entropy"]

@@ -1,0 +1,321 @@
+"""Core transformer layers: RMSNorm, RoPE, GQA/SWA attention (chunked for long
+sequences), SwiGLU/GELU MLPs.
+
+All functions are pure; parameters are plain dict pytrees. Attention never
+materializes ``(B, H, S, S)`` for long sequences — queries are processed in
+chunks via ``lax.scan`` so 32k prefill stays within per-device memory.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import attn_shard_choice, constrain
+
+# Query-chunk size for chunked attention. 2048 keeps the per-chunk score
+# slice (B, KV, G, Cq, Sk) a few hundred MB/device on the production mesh.
+ATTN_CHUNK = 2048
+
+
+def _constrain_q(qg, choice, chunked: bool):
+    """qg: (B,Sq,KV,G,Dh) or chunked (nc,B,Cq,KV,G,Dh)."""
+    if choice is None:
+        return qg
+    lead = ("None_", "batch") if chunked else ("batch",)
+    names = {"kv": (None, "act_model", None, None),
+             "g": (None, None, "act_model", None),
+             "q": ("act_model", None, None, None)}[choice]
+    spec = tuple(None if n == "None_" else n for n in lead) + names
+    return constrain(qg, *spec)
+
+
+def _constrain_kv(k, choice):
+    """k/v: (B,Sk,KV,Dh) — shard kv-head dim when that's the chosen axis."""
+    if choice == "kv":
+        return constrain(k, "batch", None, "act_model", None)
+    return k
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm with f32 moment accumulation but NO materialized f32 copy of
+    ``x``: the variance comes from an f32-accumulating einsum and the
+    normalizer is cast down before the multiply. (A full ``x.astype(f32)`` as
+    the first op of a scanned layer invites XLA to hoist the convert out of
+    the backward loop, duplicating the entire saved-activation stack in f32 —
+    measured +8.8 GB/chip on granite-34b; EXPERIMENTS.md §Perf G1.)"""
+    var = jnp.einsum("...d,...d->...", x, x,
+                     preferred_element_type=jnp.float32) / x.shape[-1]
+    r = jax.lax.rsqrt(var + eps)[..., None].astype(x.dtype)   # (..., 1) small
+    return (x * r) * scale.astype(x.dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, ..., Dh); positions: (S,) or (B, S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., S, dh/2)
+    # align: angles (..., S, dh/2) -> (..., S, 1...1, dh/2) matching x (B, S, H.., Dh/2)
+    mid = x.ndim - angles.ndim - 1
+    angles = angles.reshape(angles.shape[:-1] + (1,) * mid + angles.shape[-1:])
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+@partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable,
+         static_argnums=(4,))
+def _attend_block(q, k, v, mask, scale):
+    """q: (B, Cq, KV, G, Dh); k,v: (B, Sk, KV, Dh); mask: (Cq, Sk) or None.
+
+    Returns (B, Cq, KV, G, Dh). GQA is handled by the extra group dim G —
+    k/v are never repeated in memory. ``jax.checkpoint`` makes the backward
+    recompute scores/probs from (q,k,v) instead of saving the O(S^2) prob
+    tensor — flash-attention's memory behaviour, in XLA (the Pallas kernel
+    in kernels/flash_attention is the on-TPU hot path).
+    """
+    scores = jnp.einsum("biegd,bjed->begij", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if mask is not None:
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("begij,bjed->biegd", probs, v)
+
+
+def _causal_mask(q_pos: jax.Array, k_pos: jax.Array,
+                 window: Optional[int], causal: bool) -> Optional[jax.Array]:
+    if not causal and window is None:
+        return None
+    m = None
+    if causal:
+        m = q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        w = (q_pos[:, None] - k_pos[None, :]) < window
+        m = w if m is None else (m & w)
+    return m
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True,
+              window: Optional[int] = None,
+              q_offset: int | jax.Array = 0,
+              chunk: int = ATTN_CHUNK) -> jax.Array:
+    """Multi-head attention with GQA + optional sliding window.
+
+    q: (B, Sq, H, Dh); k, v: (B, Sk, KV, Dh). H must be a multiple of KV.
+    ``q_offset`` is the absolute position of q[:, 0] (decode / chunking).
+    Long query sequences are processed in chunks of ``chunk`` to bound the
+    score matrix to (B, KV, G, chunk, Sk).
+    """
+    B, Sq, H, Dh = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(Dh)
+    qg = q.reshape(B, Sq, KV, G, Dh)
+    k_pos = jnp.arange(Sk)
+    # When GSPMD can factor the TP axis across (KV, G) (e.g. 8x2 for
+    # KV=8,G=4) we leave sharding to it — manual constraints only cause
+    # involuntary resharding. When it CANNOT (llama4, whisper) it would shard
+    # the Dh contraction dim and all-reduce raw scores; query-position
+    # sharding is the clean alternative (§Perf L1).
+    choice = attn_shard_choice(KV, G, min(Sq, chunk))
+
+    if Sq <= chunk:
+        if choice == "q":
+            qg = constrain(qg, "batch", "act_model", None, None, None)
+        q_pos = jnp.arange(Sq) + q_offset
+        mask = _causal_mask(q_pos, k_pos, window, causal)
+        out = _attend_block(qg, k, v, mask, scale)
+        if choice == "q":
+            out = constrain(out, "batch", "act_model", None, None, None)
+        return out.reshape(B, Sq, H, Dh)
+
+    assert Sq % chunk == 0, (Sq, chunk)
+    nc = Sq // chunk
+    qc = qg.reshape(B, nc, chunk, KV, G, Dh).transpose(1, 0, 2, 3, 4, 5)
+    if choice == "q":
+        qc = constrain(qc, None, "batch", "act_model", None, None, None)
+
+    def body(_, args):
+        ci, qb = args
+        q_pos = ci * chunk + jnp.arange(chunk) + q_offset
+        mask = _causal_mask(q_pos, k_pos, window, causal)
+        return None, _attend_block(qb, k, v, mask, scale)
+
+    _, out = jax.lax.scan(body, None, (jnp.arange(nc), qc))
+    return out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, Dh)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array, *, window: Optional[int] = None) -> jax.Array:
+    """Single-token attention against a (possibly longer-than-pos) cache.
+
+    q: (B, 1, H, Dh); caches: (B, Smax, KV, Dh); pos: scalar int32 — the
+    position of the new token (cache entries > pos are masked out).
+
+    With ``window`` the cache is a RING buffer of length Smax == window:
+    slot indices are not absolute positions. Once the ring has wrapped
+    (pos >= Smax) every slot holds one of the last ``window`` tokens, so all
+    are valid; before wrapping, slots <= pos are valid. RoPE is applied
+    before writing, so attention is permutation-invariant over slots.
+    """
+    B, _, H, Dh = q.shape
+    Smax, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(Dh)
+    qg = q.reshape(B, 1, KV, G, Dh)
+    k_pos = jnp.arange(Smax)
+    if window is not None:
+        valid = (k_pos <= pos) | (pos >= Smax)
+    else:
+        valid = k_pos <= pos
+    scores = jnp.einsum("biegd,bjed->begij", qg, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("begij,bjed->biegd", probs, v_cache)
+    return out.reshape(B, 1, H, Dh)
+
+
+# ---------------------------------------------------------------------------
+# projections / MLP
+# ---------------------------------------------------------------------------
+
+def split_fused(x, widths, interleave: int):
+    """Split the last dim of ``x`` into ``widths``, where the fused dim is
+    laid out in ``interleave`` blocks of [w0/t | w1/t | ...]. Extraction is a
+    reshape + slice of an UNSHARDED sub-dim, so a TP-sharded fused dim splits
+    with zero collectives (shard boundaries align by construction)."""
+    t = interleave
+    if t <= 1 or any(w % t for w in widths):
+        import numpy as _np
+        return jnp.split(x, list(_np.cumsum(widths[:-1])), axis=-1)
+    tot = x.shape[-1]
+    xr = x.reshape(x.shape[:-1] + (t, tot // t))
+    parts = []
+    off = 0
+    for w in widths:
+        parts.append(xr[..., off:off + w // t].reshape(x.shape[:-1] + (w,)))
+        off += w // t
+    return parts
+
+
+def qkv_fusable(cfg) -> bool:
+    """Fused+interleaved qkv requires the head dim to carry the TP sharding
+    after the final (B,S,H,Dh) reshape: H, H*Dh and KV*Dh must all divide
+    ``tp_fuse``. Otherwise (llama4 H=40, whisper H=12) GSPMD would migrate
+    the sharding onto Dh — the attention CONTRACTION dim — and all-reduce raw
+    score tensors (measured 960 GiB/step for llama4; §Perf L1)."""
+    t = cfg.tp_fuse
+    return (t > 1 and cfg.n_heads % t == 0
+            and (cfg.n_heads * cfg.d_head) % t == 0
+            and (cfg.n_kv_heads * cfg.d_head) % t == 0)
+
+
+def attn_qkv(x, p, cfg):
+    """x: (B, S, D) -> q (B,S,H,Dh), k,v (B,S,KV,Dh).
+
+    Q/K/V are ONE fused matmul (`wqkv`) where shardable: under Megatron TP
+    the backward dx of a column-parallel matmul needs a full (B,S,D)
+    all-reduce — fusing turns three such all-reduces into one (§Perf P1).
+    The fused columns are interleaved per TP shard (``cfg.tp_fuse``) so the
+    split is collective-free (§Perf P2). Head order is therefore a fixed
+    permutation of the published layout — irrelevant for training from
+    scratch; pretrained imports must permute columns accordingly."""
+    B, S, _ = x.shape
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    if "wqkv" in p:
+        qkv = jnp.einsum("bsd,dh->bsh", x, p["wqkv"].astype(x.dtype))
+        q, k, v = split_fused(qkv, [H * Dh, KV * Dh, KV * Dh], cfg.tp_fuse)
+    else:
+        q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(x.dtype))
+        k = jnp.einsum("bsd,dh->bsh", x, p["wk"].astype(x.dtype))
+        v = jnp.einsum("bsd,dh->bsh", x, p["wv"].astype(x.dtype))
+    return (q.reshape(B, S, H, Dh), k.reshape(B, S, KV, Dh),
+            v.reshape(B, S, KV, Dh))
+
+
+def attn_out(o, p):
+    B, S, H, Dh = o.shape
+    return jnp.einsum("bsh,hd->bsd", o.reshape(B, S, H * Dh), p["wo"].astype(o.dtype))
+
+
+def mlp(x, p, kind: str = "swiglu", fuse: int = 1):
+    if kind == "swiglu":
+        # fused gate+up (`w13`): one dx all-reduce in backward instead of two
+        # (§Perf P1); interleaved layout keeps the split collective-free (P2)
+        gu = jnp.einsum("bsd,df->bsf", x, p["w13"].astype(x.dtype))
+        F = gu.shape[-1] // 2
+        gate, up = split_fused(gu, [F, F], fuse)
+        h = jax.nn.silu(gate) * up
+    else:  # gelu
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w1"].astype(x.dtype)))
+    return jnp.einsum("bsf,fd->bsd", h, p["w2"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def normal_init(key, shape, scale=0.02, dtype=jnp.float32):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def init_attn(key, cfg, n_layers=None, dtype=jnp.float32):
+    """Stacked attention params (fused qkv where shardable)."""
+    D, H, KV, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    L = () if n_layers is None else (n_layers,)
+    ks = jax.random.split(key, 4)
+    out_scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+    if qkv_fusable(cfg):
+        return {
+            "wqkv": normal_init(ks[0], L + (D, (H + 2 * KV) * Dh), dtype=dtype),
+            "wo": normal_init(ks[1], L + (H * Dh, D), out_scale, dtype=dtype),
+        }
+    return {
+        "wq": normal_init(ks[0], L + (D, H * Dh), dtype=dtype),
+        "wk": normal_init(ks[1], L + (D, KV * Dh), dtype=dtype),
+        "wv": normal_init(ks[2], L + (D, KV * Dh), dtype=dtype),
+        "wo": normal_init(ks[3], L + (H * Dh, D), out_scale, dtype=dtype),
+    }
+
+
+def init_mlp(key, d_model, d_ff, kind="swiglu", n_layers=None, n_scale_layers=24,
+             dtype=jnp.float32):
+    L = () if n_layers is None else (n_layers,)
+    ks = jax.random.split(key, 2)
+    out_scale = 0.02 / math.sqrt(2 * n_scale_layers)
+    p = {"w2": normal_init(ks[1], L + (d_ff, d_model), out_scale, dtype=dtype)}
+    if kind == "swiglu":
+        p["w13"] = normal_init(ks[0], L + (d_model, 2 * d_ff), dtype=dtype)
+    else:
+        p["w1"] = normal_init(ks[0], L + (d_model, d_ff), dtype=dtype)
+    return p

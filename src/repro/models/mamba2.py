@@ -1,0 +1,156 @@
+"""Mamba-2 (SSD) layer — used by zamba2 (hybrid) and available standalone.
+
+State-space dual form: per head h with state S in R^{dh x N}:
+    S_t = a_t S_{t-1} + (dt_t x_t) B_t^T        (a_t = exp(dt_t * A_h), A_h < 0)
+    y_t = C_t^T S_t^T + D_h x_t
+Training runs the chunked SSD algorithm (Dao & Gu 2024, "minimal SSD"):
+within-chunk quadratic attention-like term + cross-chunk state scan.
+Decode is the exact recurrence. ``kernels/mamba2_ssd`` is the Pallas version.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import constrain
+from .layers import normal_init, rmsnorm
+
+
+def init_mamba_layer(key, cfg, n_layers, dtype=jnp.float32):
+    D = cfg.d_model
+    s = cfg.ssm
+    di = s.expand * D
+    H = di // s.d_head
+    N = s.d_state
+    L = (n_layers,)
+    ks = jax.random.split(key, 6)
+    return {
+        "ln": jnp.ones(L + (D,), dtype),
+        # fused input projection -> [z(di), x(di), B(N), C(N), dt(H)]
+        "in_proj": normal_init(ks[0], L + (D, 2 * di + 2 * N + H), dtype=dtype),
+        "conv_w": normal_init(ks[1], L + (s.d_conv, di + 2 * N), 0.2, dtype),
+        "conv_b": jnp.zeros(L + (di + 2 * N,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)
+                         )[None].repeat(n_layers, 0).astype(dtype),
+        "D": jnp.ones(L + (H,), dtype),
+        "dt_bias": jnp.zeros(L + (H,), dtype),
+        "norm": jnp.ones(L + (di,), dtype),
+        "out_proj": normal_init(ks[2], L + (di, D), 0.02 / (2 * max(cfg.n_layers, 1)) ** 0.5,
+                                dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """Depthwise causal conv. x: (B,S,C); w: (K,C); returns (y, new_state (B,K-1,C))."""
+    K = w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((x.shape[0], K - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([conv_state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(K))
+    return y + b.astype(x.dtype), xp[:, -(K - 1):]
+
+
+def _segsum(lw):
+    """lw: (..., T). Returns (..., T, T) with out[t,s] = sum_{s<tau<=t} lw[tau], -inf above diag."""
+    T = lw.shape[-1]
+    cum = jnp.cumsum(lw, axis=-1)
+    out = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(xh, dt, a_log, Bm, Cm, state, chunk):
+    """Chunked SSD. xh: (B,S,H,dh); dt: (B,S,H) (post-softplus);
+    a_log: (H,) = A_log; Bm, Cm: (B,S,N); state: (B,H,dh,N) fp32.
+    Returns y (B,S,H,dh), new state."""
+    B, S, H, dh = xh.shape
+    N = Bm.shape[-1]
+    Sorig = S
+    if S % chunk:
+        # identity padding: x=0 (no state update), lw=0 (decay 1)
+        pad = chunk - S % chunk
+        xh = jnp.pad(xh, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        dt = jnp.pad(dt, [(0, 0), (0, pad), (0, 0)])
+        Bm = jnp.pad(Bm, [(0, 0), (0, pad), (0, 0)])
+        Cm = jnp.pad(Cm, [(0, 0), (0, pad), (0, 0)])
+        S += pad
+    nc = S // chunk
+    A = -jnp.exp(a_log.astype(jnp.float32))              # (H,) negative
+    lw = dt.astype(jnp.float32) * A                      # (B,S,H) log-decay per step
+    xs = (xh.astype(jnp.float32) * dt.astype(jnp.float32)[..., None])  # dt-weighted input
+
+    rs = lambda t, d: t.reshape((B, nc, chunk) + t.shape[2:]).transpose(1, 0, 2, *range(3, t.ndim + 1)) if d else t
+    xc = xs.reshape(B, nc, chunk, H, dh).transpose(1, 0, 2, 3, 4)
+    lc = lw.reshape(B, nc, chunk, H).transpose(1, 0, 2, 3)
+    Bc = Bm.astype(jnp.float32).reshape(B, nc, chunk, N).transpose(1, 0, 2, 3)
+    Cc = Cm.astype(jnp.float32).reshape(B, nc, chunk, N).transpose(1, 0, 2, 3)
+
+    def body(S0, args):
+        xb, lb, Bb, Cb = args                            # (B,T,H,dh),(B,T,H),(B,T,N)
+        Lmat = jnp.exp(_segsum(lb.transpose(0, 2, 1)))   # (B,H,T,T)
+        # intra-chunk: y[t] = sum_{s<=t} C_t.B_s exp(seg) x_s
+        CB = jnp.einsum("btn,bsn->bts", Cb, Bb)          # (B,T,T)
+        y = jnp.einsum("bts,bhts,bshd->bthd", CB, Lmat, xb)
+        # inter-chunk: y[t] += C_t S0 decayed to t
+        cum = jnp.cumsum(lb, axis=1)                     # (B,T,H)
+        y += jnp.einsum("btn,bhdn,bth->bthd", Cb, S0, jnp.exp(cum))
+        # state: S1 = exp(cum_T) S0 + sum_s exp(cum_T - cum_s) x_s B_s^T
+        pT = jnp.exp(cum[:, -1])                         # (B,H)
+        w = jnp.exp(cum[:, -1:, :] - cum)                # (B,T,H)
+        S1 = pT[..., None, None] * S0 + jnp.einsum("bshd,bsn,bsh->bhdn", xb, Bb, w)
+        return S1, y
+
+    state, yc = jax.lax.scan(body, state.astype(jnp.float32), (xc, lc, Bc, Cc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dh)
+    return y[:, :Sorig], state
+
+
+def ssd_step(xh, dt, a_log, Bm, Cm, state):
+    """Exact single-step. xh: (B,1,H,dh); dt: (B,1,H); Bm,Cm: (B,1,N)."""
+    A = -jnp.exp(a_log.astype(jnp.float32))
+    a = jnp.exp(dt[:, 0].astype(jnp.float32) * A)        # (B,H)
+    xb = xh[:, 0].astype(jnp.float32) * dt[:, 0].astype(jnp.float32)[..., None]
+    upd = jnp.einsum("bhd,bn->bhdn", xb, Bm[:, 0].astype(jnp.float32))
+    state = a[..., None, None] * state + upd
+    y = jnp.einsum("bhdn,bn->bhd", state, Cm[:, 0].astype(jnp.float32))
+    return y[:, None], state
+
+
+def mamba_block(x, p, cfg, state):
+    """One Mamba2 layer. state: {ssm (B,H,dh,N) fp32, conv (B,K-1,di+2N)}."""
+    s = cfg.ssm
+    D = cfg.d_model
+    di = s.expand * D
+    H, dh, N = di // s.d_head, s.d_head, s.d_state
+    B, S, _ = x.shape
+    h = rmsnorm(x, p["ln"], cfg.norm_eps)
+    proj = jnp.einsum("bsd,dk->bsk", h, p["in_proj"].astype(x.dtype))
+    z, xin, Bm, Cm, dt = jnp.split(proj, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], -1)
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    conv_out, conv_state = _causal_conv(conv_in, p["conv_w"], p["conv_b"], state["conv"])
+    conv_out = jax.nn.silu(conv_out)
+    xin, Bm, Cm = jnp.split(conv_out, [di, di + N], -1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    xh = xin.reshape(B, S, H, dh)
+    # TP over SSD heads: bounds the (B,H,T,T) intra-chunk tensors per device
+    xh = constrain(xh, "batch", None, "act_model", None)
+    dt = constrain(dt, "batch", None, "act_model")
+    if S == 1:
+        y, ssm = ssd_step(xh, dt, p["A_log"], Bm, Cm, state["ssm"])
+    else:
+        y, ssm = ssd_chunked(xh, dt, p["A_log"], Bm, Cm, state["ssm"], s.chunk)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(x.dtype))
+    return x + out, {"ssm": ssm, "conv": conv_state}
+
+
+def init_mamba_state(cfg, n_layers, batch, dtype=jnp.float32):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    H, dh, N = di // s.d_head, s.d_head, s.d_state
+    return {
+        "ssm": jnp.zeros((n_layers, batch, H, dh, N), jnp.float32),
+        "conv": jnp.zeros((n_layers, batch, s.d_conv - 1, di + 2 * N), dtype),
+    }

@@ -1,0 +1,545 @@
+"""Unified model: one init/train/prefill/decode API across all 10 assigned
+architectures (dense / moe / ssm / hybrid / audio / vlm).
+
+Layers are **scanned** (stacked ``(L, ...)`` weights) so HLO size and compile
+time are O(1) in depth; the train path wraps the scan body in
+``jax.checkpoint`` (nothing saveable) for activation rematerialization.
+
+Caches:
+  * transformer: ``{"k","v": (L, B, Smax, KV, Dh)}`` + scalar ``pos``;
+    SWA archs use a ring buffer of length ``window``.
+  * rwkv6:      ``{shift, wkv, cshift}`` stacked over L (O(1) in sequence).
+  * hybrid:     mamba ``{ssm, conv}`` + shared-attn KV slots.
+  * audio:      decoder self-attn KV + precomputed cross-attn KV.
+"""
+from __future__ import annotations
+
+import math
+import os
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.ad_checkpoint
+import jax.numpy as jnp
+
+from ..dist.sharding import constrain, constrain_residual
+from . import rwkv6 as rwkv_mod
+from . import mamba2 as mamba_mod
+from .layers import (apply_rope, attention, attn_out, attn_qkv, decode_attention,
+                     init_attn, init_mlp, mlp, normal_init, rmsnorm)
+from .moe import init_moe, moe_mlp
+
+Params = Dict[str, Any]
+
+
+def scan_unroll():
+    """Layer-scan unroll factor. The dry-run sets REPRO_SCAN_UNROLL=full so
+    ``cost_analysis()`` sees straight-line HLO (XLA does not multiply while-
+    loop bodies by trip count); training keeps the rolled scan for O(1)
+    compile time."""
+    v = os.environ.get("REPRO_SCAN_UNROLL", "1")
+    return True if v == "full" else int(v)
+
+
+def _scan(body, carry, xs, **kw):
+    return jax.lax.scan(body, carry, xs, unroll=scan_unroll(), **kw)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg, key, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 8)
+    D, V, L = cfg.d_model, cfg.vocab_size, cfg.n_layers
+    params: Params = {"embed": {"tok": normal_init(ks[0], (V, D), dtype=dtype)},
+                      "final_norm": jnp.ones((D,), dtype)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = normal_init(ks[1], (D, V), dtype=dtype)
+
+    if cfg.family == "ssm" and cfg.rwkv is not None:
+        params["layers"] = {"rwkv": rwkv_mod.init_rwkv_layer(ks[2], cfg, L, dtype)}
+        return params
+
+    if cfg.family == "hybrid":
+        params["layers"] = {"mamba": mamba_mod.init_mamba_layer(ks[2], cfg, L, dtype)}
+        params["shared"] = {
+            "ln1": jnp.ones((D,), dtype),
+            "attn": init_attn(ks[3], cfg, None, dtype),
+            "ln2": jnp.ones((D,), dtype),
+            "mlp": init_mlp(ks[4], D, cfg.d_ff, cfg.mlp, None, cfg.n_layers, dtype),
+        }
+        return params
+
+    # transformer families (dense / moe / vlm / audio-decoder)
+    layers: Params = {
+        "ln1": jnp.ones((L, D), dtype),
+        "attn": init_attn(ks[2], cfg, L, dtype),
+        "ln2": jnp.ones((L, D), dtype),
+    }
+    if cfg.moe is not None:
+        layers["moe"] = init_moe(ks[3], cfg, L, dtype)
+    else:
+        layers["mlp"] = init_mlp(ks[3], D, cfg.d_ff, cfg.mlp, L, cfg.n_layers, dtype)
+    if cfg.encoder is not None:   # whisper: cross-attention + encoder stack
+        layers["xattn"] = init_attn(ks[4], cfg, L, dtype)
+        Le = cfg.encoder.n_layers
+        params["encoder"] = {
+            "layers": {
+                "ln1": jnp.ones((Le, D), dtype),
+                "attn": init_attn(ks[5], cfg, Le, dtype),
+                "ln2": jnp.ones((Le, D), dtype),
+                "mlp": init_mlp(ks[6], D, cfg.d_ff, cfg.mlp, Le, cfg.n_layers, dtype),
+            },
+            "final_norm": jnp.ones((D,), dtype),
+        }
+        params["pos_emb"] = normal_init(ks[7], (min(cfg.max_seq, 32_768), D), 0.01, dtype)
+    params["layers"] = layers
+    return params
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_tokens(cfg, params, tokens, compute_dtype):
+    x = jnp.take(params["embed"]["tok"], tokens, axis=0).astype(compute_dtype)
+    return x * math.sqrt(cfg.d_model) if cfg.family == "audio" else x
+
+
+def lm_logits(cfg, params, x):
+    head = params["embed"]["tok"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    return constrain(logits, "batch", None, "vocab")
+
+
+def _build_inputs(cfg, params, batch, compute_dtype):
+    """Token embeddings, with modality-stub embeddings (vlm/audio) prepended."""
+    x = embed_tokens(cfg, params, batch["tokens"], compute_dtype)
+    if cfg.vlm is not None and "embeds" in batch:
+        x = jnp.concatenate([batch["embeds"].astype(compute_dtype), x], axis=1)
+    return constrain(x, "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# transformer stack (train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+def _pin_kv(cfg, k):
+    """Prefill: the decode cache is sequence-sharded; without pinning, that
+    constraint propagates back into the attention contraction and every
+    q-chunk all-reduces partial outputs (measured 80 GB/step on glm4 prefill,
+    §Perf S1). Pin kv head-sharded when divisible, else replicated-heads
+    (GQA kv is tiny); the cache reshard then happens once per layer."""
+    from ..dist.sharding import tp_size
+    ax = "act_model" if cfg.n_kv_heads % max(tp_size(), 1) == 0 else None
+    return constrain(k, "batch", None, ax, None)
+
+
+def _txf_layer(cfg, x, lp, positions, enc_out, aux, pin_kv=False):
+    h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    q, k, v = attn_qkv(h, lp["attn"], cfg)
+    if cfg.family != "audio":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if pin_kv:
+        k = _pin_kv(cfg, k)
+        v = _pin_kv(cfg, v)
+    o = attention(q, k, v, causal=True, window=cfg.sliding_window)
+    x = constrain_residual(x + attn_out(o, lp["attn"]))
+    if enc_out is not None:
+        h = rmsnorm(x, lp["ln_x"], cfg.norm_eps) if "ln_x" in lp else rmsnorm(
+            x, lp["ln2"], cfg.norm_eps)
+        qx, _, _ = attn_qkv(h, lp["xattn"], cfg)
+        _, kx, vx = attn_qkv(enc_out, lp["xattn"], cfg)
+        ox = attention(qx, kx, vx, causal=False)
+        x = x + attn_out(ox, lp["xattn"])
+    h = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    if "moe" in lp:
+        y, a = moe_mlp(h, lp["moe"], cfg)
+        aux = aux + a
+    else:
+        y = mlp(h, lp["mlp"], cfg.mlp, cfg.tp_fuse)
+    x = constrain_residual(x + y)
+    return x, aux, (k, v)
+
+
+def _encoder_forward(cfg, params, enc_embeds, compute_dtype):
+    x = enc_embeds.astype(compute_dtype)
+
+    def body(carry, lp):
+        x = carry
+        h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = attn_qkv(h, lp["attn"], cfg)
+        x = x + attn_out(attention(q, k, v, causal=False), lp["attn"])
+        h = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        return x + mlp(h, lp["mlp"], cfg.mlp, cfg.tp_fuse), None
+
+    x, _ = _scan(body, x, params["encoder"]["layers"])
+    return rmsnorm(x, params["encoder"]["final_norm"], cfg.norm_eps)
+
+
+def _txf_stack(cfg, params, x, positions, enc_out, *, remat: bool,
+               collect_cache: bool):
+    """Scan over stacked transformer layers. Returns (x, aux, cache_or_None)."""
+
+    def body(carry, lp):
+        x, aux = carry
+        x, aux, kv = _txf_layer(cfg, x, lp, positions, enc_out, aux,
+                                pin_kv=collect_cache)
+        ys = None
+        if collect_cache:
+            k, v = kv
+            if enc_out is not None:
+                _, kx, vx = attn_qkv(enc_out, lp["xattn"], cfg)
+                ys = (k, v, kx, vx)
+            else:
+                ys = (k, v)
+        return (x, aux), ys
+
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    (x, aux), ys = _scan(body, (x, jnp.float32(0.0)), params["layers"])
+    cache = None
+    if collect_cache:
+        if enc_out is not None:
+            cache = {"k": ys[0], "v": ys[1], "ck": ys[2], "cv": ys[3]}
+        else:
+            cache = {"k": ys[0], "v": ys[1]}
+        cache = {n: constrain(c, None, "batch", "cache_seq", None, None)
+                 for n, c in cache.items()}
+    return x, aux, cache
+
+
+def _txf_decode(cfg, params, x, cache, pos, enc_out):
+    """Single-token decode through the scanned stack, updating the KV cache."""
+    positions = jnp.array([0]) if cfg.family == "audio" else None
+    window = cfg.sliding_window
+    Smax = cache["k"].shape[2]
+    write_pos = jnp.mod(pos, Smax) if window is not None else pos
+    rope_pos = jnp.reshape(pos, (1,))
+
+    def body(carry, xs):
+        x = carry
+        if "ck" in cache:
+            lp, kc, vc, ckc, cvc = xs
+        else:
+            lp, kc, vc = xs
+        h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = attn_qkv(h, lp["attn"], cfg)
+        if cfg.family != "audio":
+            q = apply_rope(q, rope_pos, cfg.rope_theta)
+            k = apply_rope(k, rope_pos, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, write_pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, write_pos, 0, 0))
+        o = decode_attention(q, kc, vc, pos, window=window)
+        x = x + attn_out(o, lp["attn"])
+        if "ck" in cache:
+            h = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+            qx, _, _ = attn_qkv(h, lp["xattn"], cfg)
+            ox = decode_attention(qx, ckc, cvc, jnp.int32(ckc.shape[1] - 1))
+            x = x + attn_out(ox, lp["xattn"])
+        h = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        if "moe" in lp:
+            y, _ = moe_mlp(h, lp["moe"], cfg)
+        else:
+            y = mlp(h, lp["mlp"], cfg.mlp, cfg.tp_fuse)
+        ys = (kc, vc, ckc, cvc) if "ck" in cache else (kc, vc)
+        return x + y, ys
+
+    xs = (params["layers"], cache["k"], cache["v"])
+    if "ck" in cache:
+        xs = xs + (cache["ck"], cache["cv"])
+    x, ys = _scan(body, x, xs)
+    new_cache = dict(zip(("k", "v", "ck", "cv"), ys)) if "ck" in cache else \
+        {"k": ys[0], "v": ys[1]}
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# rwkv / hybrid stacks
+# ---------------------------------------------------------------------------
+
+def _rwkv_stack(cfg, params, x, state, *, remat: bool):
+    def body(carry, xs):
+        x = carry
+        lp, st = xs
+        x, st = rwkv_mod.rwkv_block(x, lp["rwkv"], cfg, st)
+        return x, st
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, new_state = _scan(body, x, (params["layers"], state))
+    return x, new_state
+
+
+def _shared_block(cfg, sp, x, positions):
+    h = rmsnorm(x, sp["ln1"], cfg.norm_eps)
+    q, k, v = attn_qkv(h, sp["attn"], cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    x = x + attn_out(attention(q, k, v, causal=True), sp["attn"])
+    h = rmsnorm(x, sp["ln2"], cfg.norm_eps)
+    return x + mlp(h, sp["mlp"], cfg.mlp, cfg.tp_fuse), (k, v)
+
+
+def _hybrid_stack(cfg, params, x, state, positions, *, remat: bool,
+                  collect_cache: bool):
+    """Zamba2: scanned Mamba2 layers; shared attn block every Nth layer."""
+    every = cfg.shared_attn_every
+    n_slots = cfg.n_layers // every
+    sp = params["shared"]
+    B, S = x.shape[0], x.shape[1]
+    KV, Dh = cfg.n_kv_heads, cfg.d_head
+
+    def body(carry, xs):
+        x = carry
+        i, lp, st = xs
+        x, st = mamba_mod.mamba_block(x, lp["mamba"], cfg, st)
+        apply_shared = (i % every) == (every - 1)
+
+        def yes(x):
+            return _shared_block(cfg, sp, x, positions)
+
+        def no(x):
+            zkv = (jnp.zeros((B, S, KV, Dh), x.dtype),) * 2
+            return x, zkv
+        x, kv = jax.lax.cond(apply_shared, yes, no, x)
+        ys = (st, kv, apply_shared) if collect_cache else (st,)
+        return x, ys
+
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    idx = jnp.arange(cfg.n_layers)
+    x, ys = _scan(body, x, (idx, params["layers"], state))
+    new_state = ys[0]
+    cache = None
+    if collect_cache:
+        kv, flags = ys[1], ys[2]
+        # keep only the slots where the shared block ran: (n_slots, B, S, KV, Dh)
+        sel = jnp.nonzero(flags, size=n_slots)[0]
+        cache = {"k": jnp.take(kv[0], sel, axis=0), "v": jnp.take(kv[1], sel, axis=0)}
+        cache = {n: constrain(c, None, "batch", "cache_seq", None, None)
+                 for n, c in cache.items()}
+    return x, new_state, cache
+
+
+def _hybrid_decode(cfg, params, x, cache, pos):
+    every = cfg.shared_attn_every
+    sp = params["shared"]
+    rope_pos = jnp.reshape(pos, (1,))
+    kc_all, vc_all = cache["k"], cache["v"]          # (n_slots, B, Smax, KV, Dh)
+
+    def body(carry, xs):
+        x, kc_all, vc_all = carry
+        i, lp, st = xs
+        x, st = mamba_mod.mamba_block(x, lp["mamba"], cfg, st)
+        apply_shared = (i % every) == (every - 1)
+        slot = i // every
+
+        def yes(args):
+            x, kc_all, vc_all = args
+            h = rmsnorm(x, sp["ln1"], cfg.norm_eps)
+            q, k, v = attn_qkv(h, sp["attn"], cfg)
+            q = apply_rope(q, rope_pos, cfg.rope_theta)
+            k = apply_rope(k, rope_pos, cfg.rope_theta)
+            kc = jax.lax.dynamic_slice_in_dim(kc_all, slot, 1, 0)[0]
+            vc = jax.lax.dynamic_slice_in_dim(vc_all, slot, 1, 0)[0]
+            kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, pos, 0, 0))
+            vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, pos, 0, 0))
+            o = decode_attention(q, kc, vc, pos)
+            x = x + attn_out(o, sp["attn"])
+            h = rmsnorm(x, sp["ln2"], cfg.norm_eps)
+            x = x + mlp(h, sp["mlp"], cfg.mlp, cfg.tp_fuse)
+            kc_all = jax.lax.dynamic_update_slice_in_dim(kc_all, kc[None], slot, 0)
+            vc_all = jax.lax.dynamic_update_slice_in_dim(vc_all, vc[None], slot, 0)
+            return x, kc_all, vc_all
+
+        x, kc_all, vc_all = jax.lax.cond(apply_shared, yes, lambda a: a,
+                                         (x, kc_all, vc_all))
+        return (x, kc_all, vc_all), st
+
+    idx = jnp.arange(cfg.n_layers)
+    (x, kc_all, vc_all), new_state = _scan(
+        body, (x, kc_all, vc_all), (idx, params["layers"], cache["state"]))
+    return x, {"k": kc_all, "v": vc_all, "state": new_state}
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+def forward_train(cfg, params, batch, compute_dtype=jnp.bfloat16, remat=True):
+    """Returns (per-token mean loss, metrics dict). batch: tokens, targets,
+    optional embeds / enc_embeds."""
+    x = _build_inputs(cfg, params, batch, compute_dtype)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    aux = jnp.float32(0.0)
+    if cfg.family == "ssm" and cfg.rwkv is not None:
+        state = rwkv_mod.init_rwkv_state(cfg, x.shape[0], compute_dtype)
+        x, _ = _rwkv_stack(cfg, params, x, state, remat=remat)
+    elif cfg.family == "hybrid":
+        state = mamba_mod.init_mamba_state(cfg, cfg.n_layers, x.shape[0], compute_dtype)
+        x, _, _ = _hybrid_stack(cfg, params, x, state, positions, remat=remat,
+                                collect_cache=False)
+    else:
+        enc_out = None
+        if cfg.encoder is not None:
+            enc_out = _encoder_forward(cfg, params, batch["enc_embeds"], compute_dtype)
+            x = x + params["pos_emb"][:S].astype(compute_dtype)
+        x, aux, _ = _txf_stack(cfg, params, x, positions, enc_out, remat=remat,
+                               collect_cache=False)
+    x = constrain(x, "batch", None, None)   # gather seq back from SP once
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    loss, metrics = chunked_cross_entropy(cfg, params, x, batch["targets"])
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.router_aux_weight * aux / cfg.n_layers
+        metrics["aux_loss"] = aux / cfg.n_layers
+    return loss, metrics
+
+
+def chunked_cross_entropy(cfg, params, x, targets, chunk=512):
+    """Sequence-chunked loss: the (B, chunk, V) logits slice is computed,
+    reduced, and discarded inside a rematerialized scan, so the full
+    (B, S, V) logits tensor never exists — the dominant memory saving for
+    202k-vocab training (EXPERIMENTS.md §Perf)."""
+    B, S, D = x.shape
+    if S % chunk or S <= chunk:
+        return cross_entropy(lm_logits(cfg, params, x), targets)
+    nc = S // chunk
+    xc = x.reshape(B, nc, chunk, D).transpose(1, 0, 2, 3)
+    tc = targets.reshape(B, nc, chunk).transpose(1, 0, 2)
+    # gather/cast the head ONCE, explicitly replicated, outside the chunk
+    # scan: otherwise the partitioner re-all-gathers the (D, V) head inside
+    # every chunk's dot (§Perf P4b)
+    head = params["embed"]["tok"].T if cfg.tie_embeddings else params["lm_head"]
+    head = constrain(head.astype(x.dtype), "embed", "vocab")
+    head = jax.ad_checkpoint.checkpoint_name(head, "ce_head")
+
+    @partial(jax.checkpoint,
+             policy=jax.checkpoint_policies.save_only_these_names("ce_head"))
+    def body(carry, xs):
+        xb, tb = xs
+        logits = constrain(jnp.einsum("bsd,dv->bsv", xb, head),
+                           "batch", None, "vocab")
+        mask = (tb >= 0).astype(jnp.float32)
+        tgt = jnp.maximum(tb, 0)
+        lg = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(lg, axis=-1)
+        onehot = constrain(jax.nn.one_hot(tgt, lg.shape[-1], dtype=logits.dtype),
+                           "batch", None, "vocab")
+        ll = jnp.einsum("bsv,bsv->bs", logits, onehot,
+                        preferred_element_type=jnp.float32)
+        nll = jnp.sum((logz - ll) * mask)
+        acc = jnp.sum((jnp.argmax(lg, -1) == tgt).astype(jnp.float32) * mask)
+        c_nll, c_acc, c_n = carry
+        return (c_nll + nll, c_acc + acc, c_n + mask.sum()), None
+
+    (nll, acc, n), _ = jax.lax.scan(
+        body, (jnp.float32(0), jnp.float32(0), jnp.float32(0)), (xc, tc))
+    n = jnp.maximum(n, 1.0)
+    loss = nll / n
+    return loss, {"loss": loss, "acc": acc / n, "tokens": n}
+
+
+def cross_entropy(logits, targets):
+    """logits (B,S,V); targets (B,S) int32, -100 = masked."""
+    mask = (targets >= 0).astype(jnp.float32)
+    tgt = jnp.maximum(targets, 0)
+    lg = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lg, axis=-1)
+    # vocab-sharded label pick: one-hot stays (batch, seq, vocab)-sharded and
+    # fuses into the reduce — never materialized replicated (DESIGN.md §6)
+    onehot = constrain(jax.nn.one_hot(tgt, lg.shape[-1], dtype=logits.dtype),
+                       "batch", None, "vocab")
+    ll = jnp.einsum("bsv,bsv->bs", lg.astype(logits.dtype), onehot,
+                    preferred_element_type=jnp.float32)
+    nll = (logz - ll) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = nll.sum() / denom
+    acc = (jnp.argmax(lg, -1) == tgt).astype(jnp.float32)
+    return loss, {"loss": loss, "acc": (acc * mask).sum() / denom,
+                  "tokens": mask.sum()}
+
+
+def forward_prefill(cfg, params, batch, compute_dtype=jnp.bfloat16):
+    """Process a full prompt; returns (last-token logits (B,V), cache)."""
+    x = _build_inputs(cfg, params, batch, compute_dtype)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.arange(S)
+    if cfg.family == "ssm" and cfg.rwkv is not None:
+        state = rwkv_mod.init_rwkv_state(cfg, B, compute_dtype)
+        x, state = _rwkv_stack(cfg, params, x, state, remat=False)
+        cache = state
+    elif cfg.family == "hybrid":
+        state = mamba_mod.init_mamba_state(cfg, cfg.n_layers, B, compute_dtype)
+        x, state, kv = _hybrid_stack(cfg, params, x, state, positions, remat=False,
+                                     collect_cache=True)
+        cache = {"state": state, **kv}
+    else:
+        enc_out = None
+        if cfg.encoder is not None:
+            enc_out = _encoder_forward(cfg, params, batch["enc_embeds"], compute_dtype)
+            x = x + params["pos_emb"][:S].astype(compute_dtype)
+        x, _, cache = _txf_stack(cfg, params, x, positions, enc_out, remat=False,
+                                 collect_cache=True)
+    x = rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(cfg, params, x)[:, 0]
+    return logits, cache
+
+
+def forward_decode(cfg, params, cache, token, pos, compute_dtype=jnp.bfloat16):
+    """One decode step. token: (B,1) int32; pos: scalar int32 (position being
+    written). Returns (logits (B,1,V), new cache)."""
+    x = embed_tokens(cfg, params, token, compute_dtype)
+    if cfg.family == "audio":
+        x = x + jax.lax.dynamic_slice_in_dim(params["pos_emb"], pos, 1, 0
+                                             ).astype(compute_dtype)[None]
+    if cfg.family == "ssm" and cfg.rwkv is not None:
+        def body(carry, xs):
+            x = carry
+            lp, st = xs
+            x, st = rwkv_mod.rwkv_block(x, lp["rwkv"], cfg, st)
+            return x, st
+        x, new_state = _scan(body, x, (params["layers"], cache))
+        new_cache = new_state
+    elif cfg.family == "hybrid":
+        x, new_cache = _hybrid_decode(cfg, params, x, cache, pos)
+    else:
+        x, new_cache = _txf_decode(cfg, params, x, cache, pos, None)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return lm_logits(cfg, params, x), new_cache
+
+
+# ---------------------------------------------------------------------------
+# cache construction
+# ---------------------------------------------------------------------------
+
+def cache_max_len(cfg, seq_len: int) -> int:
+    if cfg.sliding_window is not None:
+        return min(seq_len, cfg.sliding_window)
+    return seq_len
+
+
+def init_cache(cfg, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    """Zero cache sized for decoding up to seq_len."""
+    if cfg.family == "ssm" and cfg.rwkv is not None:
+        return rwkv_mod.init_rwkv_state(cfg, batch, dtype)
+    Smax = cache_max_len(cfg, seq_len)
+    KV, Dh = cfg.n_kv_heads, cfg.d_head
+    if cfg.family == "hybrid":
+        n_slots = cfg.n_layers // cfg.shared_attn_every
+        return {
+            "state": mamba_mod.init_mamba_state(cfg, cfg.n_layers, batch, dtype),
+            "k": jnp.zeros((n_slots, batch, Smax, KV, Dh), dtype),
+            "v": jnp.zeros((n_slots, batch, Smax, KV, Dh), dtype),
+        }
+    L = cfg.n_layers
+    cache = {"k": jnp.zeros((L, batch, Smax, KV, Dh), dtype),
+             "v": jnp.zeros((L, batch, Smax, KV, Dh), dtype)}
+    if cfg.encoder is not None:
+        Se = cfg.encoder.enc_seq
+        cache["ck"] = jnp.zeros((L, batch, Se, KV, Dh), dtype)
+        cache["cv"] = jnp.zeros((L, batch, Se, KV, Dh), dtype)
+    return cache

@@ -1,0 +1,182 @@
+"""RWKV-6 (Finch) — attention-free time-mix with data-dependent decay.
+
+Recurrence (per head, state S in R^{dh x dh}):
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+with per-channel decay w_t = exp(-exp(w0 + lora(x_w))) data-dependent per token.
+
+Training uses a **chunked parallel form**: within a chunk the pairwise decay
+factors exp(cum_t - cum_s) are computed directly (always <= 1, numerically
+stable), cross-chunk state is carried by a scan. Decode is the exact
+single-step recurrence. ``kernels/rwkv6`` provides the Pallas TPU version of
+the chunk kernel; this module is the XLA path and the oracle's building block.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import constrain
+from .layers import normal_init, rmsnorm
+
+
+def init_rwkv_layer(key, cfg, n_layers, dtype=jnp.float32):
+    D, F = cfg.d_model, cfg.d_ff
+    H, dh = cfg.n_heads, cfg.rwkv.head_size
+    r = cfg.rwkv.decay_lora
+    L = (n_layers,)
+    ks = jax.random.split(key, 12)
+    return {
+        "ln1": jnp.ones(L + (D,), dtype),
+        "ln2": jnp.ones(L + (D,), dtype),
+        # static token-shift lerp coefficients for r,k,v,w,g
+        "mu": 0.5 * jnp.ones(L + (5, D), dtype),
+        "wr": normal_init(ks[0], L + (D, H * dh), dtype=dtype),
+        "wk": normal_init(ks[1], L + (D, H * dh), dtype=dtype),
+        "wv": normal_init(ks[2], L + (D, H * dh), dtype=dtype),
+        "wg": normal_init(ks[3], L + (D, H * dh), dtype=dtype),
+        "wo": normal_init(ks[4], L + (H * dh, D), 0.02 / (2 * cfg.n_layers) ** 0.5,
+                          dtype=dtype),
+        "w0": -6.0 * jnp.ones(L + (H, dh), dtype),          # decay base (slow decay)
+        "wa": normal_init(ks[5], L + (D, r), 0.01, dtype),   # decay lora in
+        "wb": normal_init(ks[6], L + (r, H * dh), 0.01, dtype),
+        "u": normal_init(ks[7], L + (H, dh), 0.5, dtype),    # bonus
+        "gn": jnp.ones(L + (H * dh,), dtype),                # output group-norm scale
+        # channel-mix
+        "mu_c": 0.5 * jnp.ones(L + (2, D), dtype),
+        "wck": normal_init(ks[8], L + (D, F), dtype=dtype),
+        "wcv": normal_init(ks[9], L + (F, D), 0.02 / (2 * cfg.n_layers) ** 0.5, dtype),
+        "wcr": normal_init(ks[10], L + (D, D), dtype=dtype),
+    }
+
+
+def _shift(x, prev):
+    """Token shift: x_{t-1}, with `prev` (B,1,D) filling position 0."""
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _projections(x, xprev, p, H, dh):
+    mu = p["mu"].astype(x.dtype)
+    xr, xk, xv, xw, xg = [x + (xprev - x) * mu[i] for i in range(5)]
+    B, S, _ = x.shape
+    r = jnp.einsum("bsd,dh->bsh", xr, p["wr"].astype(x.dtype)).reshape(B, S, H, dh)
+    k = jnp.einsum("bsd,dh->bsh", xk, p["wk"].astype(x.dtype)).reshape(B, S, H, dh)
+    v = jnp.einsum("bsd,dh->bsh", xv, p["wv"].astype(x.dtype)).reshape(B, S, H, dh)
+    g = jnp.einsum("bsd,dh->bsh", xg, p["wg"].astype(x.dtype))
+    lora = jnp.einsum("br,rh->bh",
+                      jnp.tanh(jnp.einsum("bsd,dr->bsr", xw, p["wa"].astype(x.dtype))
+                               ).reshape(B * S, -1),
+                      p["wb"].astype(x.dtype)).reshape(B, S, H, dh)
+    logw = -jnp.exp(p["w0"].astype(jnp.float32) + lora.astype(jnp.float32))
+    logw = jnp.clip(logw, -20.0, -1e-6)                  # (B,S,H,dh), < 0
+    # TP: shard heads so the chunked (B,H,T,T,dh) decay tensor is 1/tp-sized
+    r, k, v, logw = (constrain(a, "batch", None, "act_model", None)
+                     for a in (r, k, v, logw))
+    return r, k, v, g, logw
+
+
+def wkv_chunked(r, k, v, logw, u, state, chunk):
+    """Chunked RWKV6 core. r,k,v,logw: (B,S,H,dh); u: (H,dh);
+    state: (B,H,dh,dh). Returns out (B,S,H,dh), new state."""
+    B, S, H, dh = r.shape
+    Sorig = S
+    if S % chunk:
+        # pad with identity contributions: k=v=0 (no state update), logw=0 (decay 1)
+        pad = chunk - S % chunk
+        pw = [(0, 0), (0, pad), (0, 0), (0, 0)]
+        r, k, v = (jnp.pad(a, pw) for a in (r, k, v))
+        logw = jnp.pad(logw, pw)
+        S += pad
+    nc = S // chunk
+    rc, kc, vc, lwc = [a.reshape(B, nc, chunk, H, dh).transpose(1, 0, 3, 2, 4)
+                       for a in (r, k, v, logw)]         # (nc,B,H,T,dh)
+    uf = u.astype(jnp.float32)
+
+    def body(S0, args):
+        rb, kb, vb, lwb = args                           # (B,H,T,dh)
+        rb32, kb32, vb32 = rb.astype(jnp.float32), kb.astype(jnp.float32), vb.astype(jnp.float32)
+        cum = jnp.cumsum(lwb, axis=2)                    # inclusive
+        cumex = cum - lwb                                # exclusive
+        # intra-chunk: scores[t,s] = sum_d r[t,d] k[s,d] exp(cumex[t,d]-cum[s,d]), s<t
+        decay = jnp.exp(cumex[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,H,T,T,dh)
+        scores = jnp.einsum("bhtd,bhsd,bhtsd->bhts", rb32, kb32, decay)
+        T = rb.shape[2]
+        tri = jnp.tril(jnp.ones((T, T), bool), -1)
+        scores = jnp.where(tri, scores, 0.0)
+        diag = jnp.einsum("hd,bhtd,bhtd->bht", uf, rb32, kb32)
+        out = jnp.einsum("bhts,bhsd->bhtd", scores, vb32)
+        out += diag[..., None] * vb32
+        # inter-chunk: r_t * P_{t-1} @ S0
+        out += jnp.einsum("bhtd,bhde->bhte", rb32 * jnp.exp(cumex), S0)
+        # state update: S' = diag(P_T) S0 + sum_s diag(exp(cum_T-cum_s)) k_s^T v_s
+        pT = jnp.exp(cum[:, :, -1])                      # (B,H,dh)
+        ksc = kb32 * jnp.exp(cum[:, :, -1:, :] - cum)    # (B,H,T,dh)
+        S1 = pT[..., None] * S0 + jnp.einsum("bhtd,bhte->bhde", ksc, vb32)
+        return S1, out
+
+    state, out = jax.lax.scan(body, state.astype(jnp.float32), (rc, kc, vc, lwc))
+    out = out.transpose(1, 0, 3, 2, 4).reshape(B, S, H, dh)
+    return out[:, :Sorig], state
+
+
+def wkv_step(r, k, v, logw, u, state):
+    """Exact single-token recurrence. r,k,v,logw: (B,1,H,dh); state (B,H,dh,dh)."""
+    r32 = r[:, 0].astype(jnp.float32)
+    k32 = k[:, 0].astype(jnp.float32)
+    v32 = v[:, 0].astype(jnp.float32)
+    kv = jnp.einsum("bhd,bhe->bhde", k32, v32)
+    out = jnp.einsum("bhd,bhde->bhe", r32, state + u.astype(jnp.float32)[None, :, :, None] * kv)
+    state = jnp.exp(logw[:, 0].astype(jnp.float32))[..., None] * state + kv
+    return out[:, None], state
+
+
+def time_mix(x, p, cfg, state):
+    """state: dict(shift (B,1,D), wkv (B,H,dh,dh)). Returns (y, new_state)."""
+    H, dh = cfg.n_heads, cfg.rwkv.head_size
+    B, S, D = x.shape
+    xprev = _shift(x, state["shift"]) if S > 1 else state["shift"]
+    r, k, v, g, logw = _projections(x, xprev, p, H, dh)
+    if S == 1:
+        out, wkv = wkv_step(r, k, v, logw, p["u"], state["wkv"])
+    else:
+        out, wkv = wkv_chunked(r, k, v, logw, p["u"], state["wkv"], cfg.rwkv.chunk)
+    out = out.reshape(B, S, H * dh).astype(x.dtype)
+    # per-head group norm
+    out = out.reshape(B, S, H, dh)
+    out = out * jax.lax.rsqrt(jnp.mean(jnp.square(out.astype(jnp.float32)), -1,
+                                       keepdims=True) + 1e-5).astype(x.dtype)
+    out = out.reshape(B, S, H * dh) * p["gn"].astype(x.dtype)
+    out = out * jax.nn.silu(g)
+    y = jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(x.dtype))
+    new_state = {"shift": x[:, -1:], "wkv": wkv}
+    return y, new_state
+
+
+def channel_mix(x, p, state_shift):
+    xprev = _shift(x, state_shift) if x.shape[1] > 1 else state_shift
+    mu = p["mu_c"].astype(x.dtype)
+    xk = x + (xprev - x) * mu[0]
+    xr = x + (xprev - x) * mu[1]
+    kk = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["wck"].astype(x.dtype))))
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wcr"].astype(x.dtype)))
+    return rr * jnp.einsum("bsf,fd->bsd", kk, p["wcv"].astype(x.dtype)), x[:, -1:]
+
+
+def rwkv_block(x, p, cfg, state):
+    """One RWKV layer. state: {shift, wkv, cshift}."""
+    h, tm_state = time_mix(rmsnorm(x, p["ln1"], cfg.norm_eps), p, cfg,
+                           {"shift": state["shift"], "wkv": state["wkv"]})
+    x = x + h
+    h, cshift = channel_mix(rmsnorm(x, p["ln2"], cfg.norm_eps), p, state["cshift"])
+    x = x + h
+    return x, {"shift": tm_state["shift"], "wkv": tm_state["wkv"], "cshift": cshift}
+
+
+def init_rwkv_state(cfg, batch, dtype=jnp.float32):
+    H, dh, D = cfg.n_heads, cfg.rwkv.head_size, cfg.d_model
+    L = cfg.n_layers
+    return {
+        "shift": jnp.zeros((L, batch, 1, D), dtype),
+        "wkv": jnp.zeros((L, batch, H, dh, dh), jnp.float32),
+        "cshift": jnp.zeros((L, batch, 1, D), dtype),
+    }

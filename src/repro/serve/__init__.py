@@ -1,0 +1,3 @@
+from .serve_step import make_prefill_step, make_decode_step, greedy_sample
+
+__all__ = ["make_prefill_step", "make_decode_step", "greedy_sample"]

@@ -1,0 +1,24 @@
+"""Serving steps: batched prefill and single-token decode with KV/SSM caches."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models import forward_prefill, forward_decode
+
+
+def make_prefill_step(cfg, compute_dtype=jnp.bfloat16):
+    def prefill(params, batch):
+        return forward_prefill(cfg, params, batch, compute_dtype)
+    return prefill
+
+
+def make_decode_step(cfg, compute_dtype=jnp.bfloat16):
+    """decode(params, cache, token (B,1), pos scalar) -> (logits (B,1,V), cache)."""
+    def decode(params, cache, token, pos):
+        return forward_decode(cfg, params, cache, token, pos, compute_dtype)
+    return decode
+
+
+def greedy_sample(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,5 @@
+from .optimizer import OptConfig, adamw_init, adamw_update, lr_schedule, global_norm
+from .train_step import make_train_step, init_train_state
+
+__all__ = ["OptConfig", "adamw_init", "adamw_update", "lr_schedule", "global_norm",
+           "make_train_step", "init_train_state"]

@@ -1,0 +1,77 @@
+"""Training step: mixed-precision forward/backward + AdamW, pjit-ready."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import forward_train
+from .optimizer import OptConfig, adamw_init, adamw_update
+
+
+def make_train_step(cfg, opt: OptConfig, compute_dtype=jnp.bfloat16, remat=True,
+                    accum_steps: int = 1):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    Params stay fp32 (master); compute runs in ``compute_dtype``.
+    ``accum_steps`` > 1 splits the global batch into microbatches and
+    accumulates gradients in a scan — the saved-activation stack (the peak
+    memory term for deep models) shrinks by the same factor (§Perf G3).
+    """
+
+    def loss_and_grads(params, batch):
+        def loss_fn(p):
+            # pre-cast fp32 master weights to bf16 ONCE — FSDP all-gathers then
+            # move bf16 (half the wire bytes) instead of gathering fp32 and
+            # casting after (EXPERIMENTS.md §Perf P4a). With accumulation, the
+            # cast copy is additionally constrained TP-only (FSDP axis
+            # gathered) so the gather hoists out of the microbatch scan (G3b).
+            pc = jax.tree.map(
+                lambda w: w.astype(compute_dtype)
+                if w.dtype == jnp.float32 and w.ndim > 1 else w, p)
+            if accum_steps > 1:
+                from ..dist.sharding import constrain_params_gathered
+                pc = constrain_params_gathered(pc)
+            return forward_train(cfg, pc, batch, compute_dtype, remat=remat)
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def step(params, opt_state, batch):
+        if accum_steps <= 1:
+            (loss, metrics), grads = loss_and_grads(params, batch)
+        else:
+            mbs = jax.tree.map(
+                lambda a: a.reshape((accum_steps, a.shape[0] // accum_steps)
+                                    + a.shape[1:]), batch)
+
+            def micro(carry, mb):
+                g_acc, m_acc = carry
+                (loss, m), g = loss_and_grads(params, mb)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                     g_acc, g)
+                m_acc = jax.tree.map(lambda a, b: a + b, m_acc, m)
+                return (g_acc, m_acc), None
+
+            zeros_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            zeros_m = {"loss": jnp.float32(0), "acc": jnp.float32(0),
+                       "tokens": jnp.float32(0)}
+            if cfg.moe is not None:
+                zeros_m["aux_loss"] = jnp.float32(0)
+            (grads, msum), _ = jax.lax.scan(micro, (zeros_g, zeros_m), mbs)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            metrics = {k: v / accum_steps for k, v in msum.items()}
+            metrics["tokens"] = msum["tokens"]
+        params, opt_state, opt_metrics = adamw_update(grads, opt_state, params, opt)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    return step
+
+
+def init_train_state(cfg, key, dtype=jnp.float32):
+    from ..models import init_params
+    params = init_params(cfg, key, dtype)
+    return params, adamw_init(params)

@@ -1,0 +1,130 @@
+"""End-to-end paper workflow: synthesize BIDS dataset -> manifest -> query ->
+job generation -> execution -> provenance -> idempotent re-query. Plus fault
+injection (retry), straggler duplication, and the exclusion CSV."""
+import csv
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import (DatasetManifest, IntegrityError, LocalRunner,
+                        builtin_pipelines, generate_jobs, is_complete,
+                        query_available_work, resource_status, run_unit,
+                        synthesize_dataset)
+
+
+@pytest.fixture()
+def dataset(tmp_path):
+    return synthesize_dataset(tmp_path, "testds", n_subjects=3,
+                              sessions_per_subject=2, shape=(12, 12, 12))
+
+
+def test_manifest_scan_and_validate(dataset):
+    assert len(dataset.images) > 0
+    assert dataset.validate() == []
+    sessions = dataset.sessions()
+    assert len(sessions) == 6
+    # round-trip persistence
+    p = Path(dataset.root) / "manifest.json"
+    dataset.save(p)
+    loaded = DatasetManifest.load(p)
+    assert len(loaded.images) == len(dataset.images)
+    assert loaded.images[0].sha256 == dataset.images[0].sha256
+
+
+def test_query_and_exclusions(dataset, tmp_path):
+    pipe = builtin_pipelines()["dwi_prequal"]      # needs T1w + dwi
+    work, excluded = query_available_work(dataset, pipe)
+    # odd-numbered subjects have no DWI (synthesized that way)
+    assert len(work) > 0 and len(excluded) > 0
+    assert all("missing input" in e.reason for e in excluded)
+
+
+def test_full_processing_loop(dataset, tmp_path):
+    pipe = builtin_pipelines()["bias_correct"]
+    plan = generate_jobs(dataset, pipe, tmp_path / "jobs")
+    assert plan.slurm_script and Path(plan.slurm_script).exists()
+    slurm = Path(plan.slurm_script).read_text()
+    assert "#SBATCH --array=0-" in slurm
+    assert Path(plan.exclusion_csv).exists()
+    assert len(plan.units) == 6
+
+    runner = LocalRunner(pipe, dataset.root)
+    results = runner.run(plan.units)
+    assert all(r.status == "ok" for r in results)
+    # outputs + provenance exist
+    for u in plan.units:
+        assert is_complete(Path(u.out_dir), pipe.digest())
+        prov = json.loads((Path(u.out_dir) / "provenance.json").read_text())
+        assert prov["status"] == "ok" and prov["inputs"]
+
+    # idempotency: re-query finds nothing to do
+    work2, excluded2 = query_available_work(dataset, pipe)
+    assert work2 == []
+    assert all("already processed" in e.reason for e in excluded2)
+
+
+def test_digest_change_triggers_reprocessing(dataset, tmp_path):
+    pipes = builtin_pipelines()
+    pipe = pipes["bias_correct"]
+    plan = generate_jobs(dataset, pipe, tmp_path / "jobs")
+    LocalRunner(pipe, dataset.root).run(plan.units)
+    # same pipeline, new version -> different digest -> everything re-queues
+    import dataclasses
+    pipe2 = type(pipe)(dataclasses.replace(pipe.spec, version="2.0"), pipe.fn)
+    work, _ = query_available_work(dataset, pipe2)
+    assert len(work) == 6
+
+
+def test_retry_on_injected_failure(dataset):
+    pipe = builtin_pipelines()["bias_correct"]
+    work, _ = query_available_work(dataset, pipe)
+    fails = {"n": 0}
+
+    def flaky(unit, attempt):
+        if attempt == 1:          # every unit fails once, succeeds on retry
+            fails["n"] += 1
+            raise RuntimeError("injected node failure")
+
+    runner = LocalRunner(pipe, dataset.root, max_retries=2, fault_hook=flaky)
+    results = runner.run(work)
+    ok = [r for r in results if r.status == "ok"]
+    assert len(ok) == len(work)
+    assert fails["n"] == len(work)
+    assert all(r.attempts == 2 for r in ok)
+
+
+def test_failed_unit_records_failed_provenance(dataset):
+    pipe = builtin_pipelines()["bias_correct"]
+    work, _ = query_available_work(dataset, pipe)
+
+    def always_fail(unit, attempt):
+        raise RuntimeError("dead node")
+
+    res = run_unit(work[0], pipe, dataset.root, fault_hook=always_fail)
+    assert res.status == "failed"
+    assert not is_complete(Path(work[0].out_dir), pipe.digest())
+    # and the work unit is still queryable (not lost)
+    work2, _ = query_available_work(dataset, pipe)
+    assert any(u.job_id == work[0].job_id for u in work2)
+
+
+def test_resource_status(tmp_path):
+    st = resource_status(tmp_path)
+    assert st["disk_free_gb"] > 0
+    assert st["disk_total_gb"] >= st["disk_free_gb"]
+
+
+def test_pipeline_outputs_sensible(dataset):
+    pipes = builtin_pipelines()
+    t1 = np.load(Path(dataset.root) / dataset.images[0].path)
+    out = pipes["bias_correct"].run({"T1w": t1})
+    assert out["T1w_biascorr"].shape == t1.shape
+    assert np.all(np.isfinite(out["T1w_biascorr"]))
+    # bias correction should reduce the coefficient of variation
+    cv = lambda a: a.std() / a.mean()
+    assert cv(out["T1w_biascorr"]) < cv(t1) * 1.05
+    seg = pipes["segment_unest"].run({"T1w": t1})
+    assert seg["segmentation"].shape == t1.shape
+    assert set(np.unique(seg["segmentation"])) <= {0, 1, 2, 3}

@@ -1,0 +1,57 @@
+"""Loop-aware HLO accounting: nested loops, f32 adjustment, breakdown tool."""
+from repro.analysis.hlo_parse import HloCosts, loop_trip_summary
+
+
+NESTED = """
+inner_cond {
+  t = s32[] constant(4)
+  ROOT lt = pred[] compare(i, t), direction=LT
+}
+
+inner_body {
+  ar = bf16[1000] all-gather(x), dimensions={0}
+  ROOT out = (s32[]) tuple(i)
+}
+
+outer_cond {
+  t = s32[] constant(8)
+  ROOT lt = pred[] compare(i, t), direction=LT
+}
+
+outer_body {
+  w = (s32[]) while(init), condition=inner_cond, body=inner_body
+  ar2 = f32[500] all-reduce(y), to_apply=add
+  ROOT out = (s32[]) tuple(i)
+}
+
+ENTRY main {
+  w = (s32[]) while(init), condition=outer_cond, body=outer_body
+  ROOT r = s32[] get-tuple-element(w), index=0
+}
+"""
+
+
+def test_nested_loop_multiplication():
+    c = HloCosts(NESTED).collective_bytes()
+    # inner all-gather: 8 outer x 4 inner x 1000 bf16 = 64000 bytes
+    assert c["per_op"]["all-gather"] == 8 * 4 * 1000 * 2
+    # outer all-reduce: 8 x 500 f32
+    assert c["per_op"]["all-reduce"] == 8 * 500 * 4
+    # weighted: AR x2
+    assert c["weighted_bytes"] == 64000 + 2 * 8 * 500 * 4
+    # f32 adjustment halves only the f32 share
+    assert c["tpu_bf16_adjusted_bytes"] == c["weighted_bytes"] - (2 * 8 * 500 * 4) // 2
+
+
+def test_loop_trip_summary():
+    trips = dict(loop_trip_summary(NESTED))
+    assert trips["inner_body"] == 4
+    assert trips["outer_body"] == 8
+
+
+def test_collective_breakdown_orders_by_total():
+    from repro.analysis.report import collective_breakdown
+    rows = collective_breakdown(NESTED)
+    assert rows[0]["total"] >= rows[-1]["total"]
+    ops = {r["op"] for r in rows}
+    assert "all-gather" in ops and "all-reduce" in ops

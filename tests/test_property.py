@@ -1,0 +1,109 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.integrity import fletcher64
+from repro.core.cost import job_cost, PAPER_ENVS
+from repro.kernels.checksum import device_checksum, device_checksum_ref
+from repro.analysis.hlo_parse import split_computations, HloCosts
+
+import jax.numpy as jnp
+
+
+@given(st.binary(min_size=0, max_size=2048))
+@settings(max_examples=50, deadline=None)
+def test_fletcher64_deterministic_and_padded(data):
+    a = fletcher64(data)
+    assert a == fletcher64(data)
+    assert 0 <= a < 2 ** 64
+
+
+@given(st.binary(min_size=4, max_size=512), st.integers(0, 3))
+@settings(max_examples=50, deadline=None)
+def test_fletcher64_sensitive_to_flips(data, pos):
+    flipped = bytearray(data)
+    flipped[pos % len(data)] ^= 0x01
+    if bytes(flipped) != data:
+        assert fletcher64(data) != fletcher64(bytes(flipped))
+
+
+@given(st.lists(st.floats(-1e3, 1e3, allow_nan=False, width=32),
+                min_size=1, max_size=300))
+@settings(max_examples=25, deadline=None)
+def test_device_checksum_matches_ref(xs):
+    arr = np.asarray(xs, np.float32)
+    got = np.asarray(device_checksum(jnp.asarray(arr), interpret=True))
+    ref = device_checksum_ref(arr)
+    assert np.array_equal(got, ref)
+
+
+@given(st.integers(1, 1000), st.floats(1.0, 600.0), st.floats(0.01, 100.0))
+@settings(max_examples=50, deadline=None)
+def test_job_cost_monotone(n_jobs, minutes, gb):
+    """More jobs / longer jobs never cost less; cloud >= hpc per-hour."""
+    for env in PAPER_ENVS.values():
+        c1 = job_cost(env, n_jobs, minutes, gb)
+        c2 = job_cost(env, n_jobs + 1, minutes, gb)
+        c3 = job_cost(env, n_jobs, minutes * 2, gb)
+        assert c2["dollars"] >= c1["dollars"]
+        assert c3["dollars"] >= c1["dollars"]
+
+
+@given(st.integers(1, 64), st.integers(1, 8))
+@settings(max_examples=20, deadline=None)
+def test_hlo_loop_multiplication(trips, nbytes_mb):
+    """Synthetic HLO: collective inside a while body is multiplied by the
+    trip count inferred from the condition."""
+    n = nbytes_mb * 262144     # f32 elements per MB
+    hlo = f"""
+cond {{
+  p = (s32[]) parameter(0)
+  i = s32[] get-tuple-element(p), index=0
+  t = s32[] constant({trips})
+  ROOT lt = pred[] compare(i, t), direction=LT
+}}
+
+body {{
+  p = (s32[]) parameter(0)
+  ar = f32[{n}] all-reduce(x), to_apply=add
+  ROOT out = (s32[]) tuple(i)
+}}
+
+ENTRY main {{
+  w = (s32[]) while(init), condition=cond, body=body
+  ROOT r = s32[] get-tuple-element(w), index=0
+}}
+"""
+    costs = HloCosts(hlo)
+    got = costs.collective_bytes()
+    assert got["per_op"]["all-reduce"] == trips * n * 4
+
+
+def test_split_computations_basic():
+    hlo = "comp_a {\n  x = f32[2] parameter(0)\n}\n\nENTRY main {\n  y = f32[2] constant(0)\n}\n"
+    comps = split_computations(hlo)
+    assert set(comps) == {"comp_a", "main"}
+
+
+@given(st.integers(2, 16), st.integers(2, 8), st.integers(2, 8))
+@settings(max_examples=10, deadline=None)
+def test_moe_dispatch_conservation(S, E, C):
+    """Scatter-dispatch: every kept token appears exactly once in the buffer;
+    combine-gather reconstructs identity when experts are identity."""
+    import jax
+    from repro.models.moe import _dispatch_seq
+    key = jax.random.PRNGKey(S * 100 + E * 10 + C)
+    x = jax.random.normal(key, (S, 4))
+    sel = jax.random.randint(key, (S, 1), 0, E)
+    w = jnp.ones((S, 1))
+    buf, idx, keep = _dispatch_seq(x, sel, w, E, C)
+    # gather back the kept tokens: must equal the originals
+    kept = np.asarray(keep)[:, 0]
+    got = np.asarray(buf)[np.asarray(idx)[:, 0][kept]]
+    want = np.asarray(x)[kept]
+    assert np.allclose(got, want, atol=1e-6)
+    # buffer rows not pointed to by any kept slot are zero
+    used = set(np.asarray(idx)[:, 0][kept].tolist())
+    for row in range(E * C):
+        if row not in used:
+            assert np.allclose(np.asarray(buf)[row], 0.0)
