@@ -1,0 +1,171 @@
+"""Paper Table-1 trajectory: data-plane throughput of the parallel executor.
+
+Runs the same >=16-unit synthetic workload through ``LocalRunner`` at
+workers in {1, 2, 4, 8} and reports wall-clock, images/s, and Gb/s of bytes
+moved through the verified load -> compute -> committed-store path. The
+paper's headline is 0.60 Gb/s storage<->compute with checksummed transfers;
+this bench makes the executor's share of that measurable per host.
+
+Throughput mode: the sweep executes in a subprocess with XLA/BLAS intra-op
+parallelism pinned to one thread, so each unit's compute occupies one core
+and worker scaling — not operator-level thread contention — is what gets
+measured. Shared hosts drift 3-4x in effective CPU on second timescales, so
+the sweep is INTERLEAVED and repeated ``REPS`` times with per-config MEDIANS
+reported — medians (not minima) because parallel workers also hedge
+per-core steal: a stalled core slows a serial sweep ~4x but a 4-worker sweep
+only marginally, and that robustness is part of what the executor buys.
+The serial baseline row (``serial_loop``) reproduces the SEED's data plane
+faithfully: a plain ``for unit: ...`` loop (no prefetch, no workers) with the
+seed's multi-pass integrity — ``sha256_file`` then ``np.load`` per input,
+``np.save`` then ``sha256_file`` per output — so the speedup row measures
+what this PR changed: concurrency plus bytes-hashed-per-byte-moved dropping
+from ~3 to ~1.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import subprocess
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+WORKER_SWEEP = (0, 1, 2, 4, 8)    # 0 = serial plain-loop baseline
+N_SUBJECTS = 8
+SESSIONS = 2                      # 8 x 2 = 16 units
+SHAPE = (48, 48, 48)
+PIPELINE = "bias_correct"
+REPS = 5
+
+_INPROC_FLAG = "REPRO_BENCH_INPROC"
+_PIN_ENV = {
+    "XLA_FLAGS": "--xla_cpu_multi_thread_eigen=false "
+                 "intra_op_parallelism_threads=1",
+    "OMP_NUM_THREADS": "1",
+    "OPENBLAS_NUM_THREADS": "1",
+    "MKL_NUM_THREADS": "1",
+}
+
+
+def _unit_bytes(ds, units, results, ok_ids=None) -> int:
+    """Bytes moved by the data plane: inputs read once + outputs committed."""
+    total = 0
+    if ok_ids is None:
+        ok_ids = {r.unit.job_id for r in results if r.status == "ok"}
+    for u in units:
+        if u.job_id not in ok_ids:
+            continue
+        for rel in u.inputs.values():
+            total += (Path(ds.root) / rel).stat().st_size
+        out_dir = Path(u.out_dir)
+        total += sum(p.stat().st_size for p in out_dir.glob("*.npy"))
+    return total
+
+
+def _seed_serial_unit(unit, pipe, data_root):
+    """The seed's execution path: serial, with its hash/load double-reads."""
+    import numpy as np
+    from repro.core.integrity import sha256_file
+    from repro.core.provenance import is_complete, make_provenance
+    t0 = time.time()
+    data_root = Path(data_root)
+    out_dir = Path(unit.out_dir)
+    if is_complete(out_dir, unit.pipeline_digest):
+        return "skipped"
+    inputs, in_sums = {}, {}
+    for suffix, rel in unit.inputs.items():
+        p = data_root / rel
+        in_sums[rel] = sha256_file(p)          # pass 1: hash
+        inputs[suffix] = np.load(p)            # pass 2: load
+    outputs = pipe.run(inputs)
+    out_sums = {}
+    out_dir.mkdir(parents=True, exist_ok=True)
+    for name, arr in outputs.items():
+        op = out_dir / f"sub-{unit.subject}_ses-{unit.session}_{name}.npy"
+        np.save(op, arr)                       # write
+        out_sums[op.name] = sha256_file(op)    # pass 3: re-read + hash
+    make_provenance(unit.pipeline, unit.pipeline_digest, in_sums, out_sums,
+                    t0).save(out_dir)
+    return "ok"
+
+
+def _run_inproc():
+    from repro.core import (LocalRunner, builtin_pipelines,
+                            query_available_work, synthesize_dataset)
+    rows = []
+    with tempfile.TemporaryDirectory() as td:
+        ds = synthesize_dataset(Path(td), "bench", n_subjects=N_SUBJECTS,
+                                sessions_per_subject=SESSIONS, shape=SHAPE)
+        pipe = builtin_pipelines()[PIPELINE]
+        deriv = Path(ds.root) / "derivatives"
+
+        # warm the jit caches so the serial baseline doesn't pay compile time
+        units, _ = query_available_work(ds, pipe)
+        LocalRunner(pipe, ds.root).run(units[:2])
+        shutil.rmtree(deriv, ignore_errors=True)
+
+        def measure(w):
+            units, _ = query_available_work(ds, pipe)
+            t0 = time.time()
+            if w == 0:                      # the seed's serial data plane
+                statuses = [_seed_serial_unit(u, pipe, ds.root) for u in units]
+                dt = time.time() - t0
+                ok = sum(s == "ok" for s in statuses)
+                ok_ids = {u.job_id for u, s in zip(units, statuses) if s == "ok"}
+                results = None
+            else:
+                results = LocalRunner(pipe, ds.root, workers=w).run(units)
+                dt = time.time() - t0
+                ok = sum(r.status == "ok" for r in results)
+                ok_ids = None
+            nbytes = _unit_bytes(ds, units, results, ok_ids=ok_ids)
+            shutil.rmtree(deriv, ignore_errors=True)
+            return dt, ok, len(units), nbytes
+
+        samples = {w: [] for w in WORKER_SWEEP}
+        for _ in range(REPS):
+            for w in WORKER_SWEEP:
+                samples[w].append(measure(w))
+        med = {}
+        for w in WORKER_SWEEP:
+            ms = sorted(samples[w], key=lambda m: m[0])
+            med[w] = ms[len(ms) // 2]
+            dt, ok, n, nbytes = med[w]
+            tag = "serial_loop" if w == 0 else f"w{w}"
+            rows.append((f"executor_images_per_s_{tag}", round(ok / dt, 3),
+                         f"{ok}/{n} units in {dt:.2f}s (median of {REPS})"))
+            rows.append((f"executor_gbps_{tag}",
+                         round(nbytes * 8 / dt / 1e9, 4),
+                         f"{nbytes / 2**20:.1f} MiB verified load+commit "
+                         f"(paper hot tier: 0.60 Gb/s)"))
+        rows.append(("executor_speedup_w4_vs_serial",
+                     round(med[0][0] / med[4][0], 3),
+                     "median wall-clock: serial loop / workers=4"))
+    return rows
+
+
+def run():
+    """Benchmark entry (benchmarks.run): re-exec in a pinned subprocess so
+    the one-core-per-unit XLA flags apply before jax initializes — without
+    leaking single-threaded compute into the other benchmarks."""
+    if os.environ.get(_INPROC_FLAG):
+        return _run_inproc()
+    env = dict(os.environ, **_PIN_ENV, **{_INPROC_FLAG: "1"})
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.executor_throughput"],
+        env=env, cwd=Path(__file__).resolve().parents[1],
+        capture_output=True, text=True, timeout=1200)
+    if proc.returncode != 0:
+        raise RuntimeError(f"pinned bench subprocess failed:\n{proc.stderr}")
+    rows = []
+    for line in proc.stdout.splitlines():
+        if line.startswith("executor_"):
+            name, value, derived = line.split(",", 2)
+            rows.append((name, float(value), derived))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(",".join(str(c) for c in row))

@@ -21,7 +21,10 @@ def run():
             t0 = time.time()
             results = LocalRunner(pipe, ds.root).run(plan.units)
             dt = time.time() - t0
-            ok = sum(r.status == "ok" for r in results)
+            # speculative straggler duplicates are reported with
+            # status="speculative" and must not inflate per-image counts;
+            # dedupe by job_id as a second guard
+            ok = len({r.unit.job_id for r in results if r.status == "ok"})
             rows.append((f"pipeline_{name}_s_per_image",
                          round(dt / max(ok, 1), 3),
                          f"{ok} images (paper FreeSurfer: 375.5 min/img at scale)"))

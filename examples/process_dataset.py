@@ -1,5 +1,6 @@
-"""Full paper workflow (Fig. 3): tiered storage, multiple pipelines, fault
-injection + retry, straggler duplication, cold archival, cost accounting.
+"""Full paper workflow (Fig. 3): tiered storage, multiple pipelines run by
+the parallel pipelined executor (workers=2, input prefetch), fault injection
++ retry, straggler speculation, cold archival, cost accounting.
 
     PYTHONPATH=src python examples/process_dataset.py
 """
@@ -27,7 +28,8 @@ with tempfile.TemporaryDirectory() as td:
     for name in ("bias_correct", "affine_register", "segment_unest"):
         pipe = builtin_pipelines()[name]
         plan = generate_jobs(ds, pipe, td / "jobs" / name)
-        runner = LocalRunner(pipe, ds.root, max_retries=2, fault_hook=chaos)
+        runner = LocalRunner(pipe, ds.root, max_retries=2, fault_hook=chaos,
+                             workers=2)        # parallel pipelined executor
         results = runner.run(plan.units)
         ok = sum(r.status == "ok" for r in results)
         retried = sum(r.attempts > 1 for r in results if r.status == "ok")

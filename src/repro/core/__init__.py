@@ -1,27 +1,31 @@
 """The paper's contribution as a composable substrate: manifests, automated
 work queries, content-addressed pipelines, checksummed tiered storage,
 provenance, the workflow engine, and the cost model."""
-from .integrity import (IntegrityError, fletcher64, sha256_file, array_checksum,
-                        verified_copy)
+from .integrity import (IntegrityError, fletcher64, fletcher64_file,
+                        sha256_file, sha256_load_array, sha256_save_array,
+                        array_checksum, verified_copy)
 from .manifest import DatasetManifest, ImageRecord, synthesize_dataset
 from .pipelines import Pipeline, PipelineSpec, builtin_pipelines
 from .provenance import Provenance, make_provenance, is_complete
 from .query import WorkUnit, Exclusion, query_available_work, write_exclusion_csv
 from .storage import TieredStore, TIERS
-from .workflow import (JobPlan, LocalRunner, UnitResult, generate_jobs,
-                       resource_status, run_unit)
+from .workflow import (JobPlan, LocalRunner, UnitResult, dedupe_results,
+                       generate_jobs, load_unit_inputs, resource_status,
+                       run_unit)
 from .cost import (PAPER_ENVS, TPU_ENVS, job_cost, paper_table1,
                    cost_ratio_cloud_vs_hpc, training_run_cost)
 from .ingest import IngestRule, ingest_directory, write_raw_dump
 
 __all__ = [
-    "IntegrityError", "fletcher64", "sha256_file", "array_checksum",
+    "IntegrityError", "fletcher64", "fletcher64_file", "sha256_file",
+    "sha256_load_array", "sha256_save_array", "array_checksum",
     "verified_copy", "DatasetManifest", "ImageRecord", "synthesize_dataset",
     "Pipeline", "PipelineSpec", "builtin_pipelines", "Provenance",
     "make_provenance", "is_complete", "WorkUnit", "Exclusion",
     "query_available_work", "write_exclusion_csv", "TieredStore", "TIERS",
-    "JobPlan", "LocalRunner", "UnitResult", "generate_jobs", "resource_status",
-    "run_unit", "PAPER_ENVS", "TPU_ENVS", "job_cost", "paper_table1",
+    "JobPlan", "LocalRunner", "UnitResult", "dedupe_results", "generate_jobs",
+    "load_unit_inputs", "resource_status", "run_unit",
+    "PAPER_ENVS", "TPU_ENVS", "job_cost", "paper_table1",
     "cost_ratio_cloud_vs_hpc", "training_run_cost",
     "IngestRule", "ingest_directory", "write_raw_dump",
 ]

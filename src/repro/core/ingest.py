@@ -11,7 +11,9 @@ Here the scanner hand-off is a directory of raw dumps: ``<id>.raw.npz``
      carrying acquisition metadata through; corrupted dumps are quarantined
      with a reason (the paper asks providers for complete versions).
   2. filter: protocol allow-list, resolution / matrix-dimension bounds.
-  3. fast QA: intensity sanity (finite, non-constant, SNR proxy).
+  3. fast QA: intensity sanity (finite, non-constant, SNR proxy); with
+     ``device_qa`` the finite/constant/mean passes and the transfer checksum
+     fuse into ONE Pallas kernel launch per volume (kernels/checksum).
   4. organize: BIDS tree ``sub-*/ses-*/<modality>/...`` + manifest scan.
 
 Everything is recorded in an ingestion report (the paper's curation trail).
@@ -20,6 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import os
 from pathlib import Path
 from typing import Dict, List, Optional, Tuple
 
@@ -45,6 +48,7 @@ class IngestRecord:
     status: str                  # ok | corrupted | filtered | failed_qa
     reason: str = ""
     dest: str = ""
+    checksum: str = ""           # fused-QA device checksum (device_qa mode)
 
 
 def write_raw_dump(path: Path, vol: np.ndarray, *, subject: str, session: str,
@@ -71,24 +75,65 @@ def _convert(raw: Path) -> Tuple[Optional[np.ndarray], Optional[dict], str]:
     return vol, meta, ""
 
 
+def _bg_corner(vol: np.ndarray) -> np.ndarray:
+    """Corner octant (air) used as the SNR-proxy background region."""
+    c = tuple(slice(0, max(s // 4, 1)) for s in vol.shape[:3])
+    return vol[c]
+
+
 def _fast_qa(vol: np.ndarray, rule: IngestRule) -> str:
     if not np.all(np.isfinite(vol)):
         return "non-finite voxels"
     if float(vol.std()) == 0.0:
         return "constant image"
     # SNR proxy: foreground mean over background std (corner octant = air)
-    c = tuple(slice(0, max(s // 4, 1)) for s in vol.shape[:3])
-    bg = vol[c]
+    bg = _bg_corner(vol)
     snr = float(np.abs(vol.mean()) / (bg.std() + 1e-6))
     if snr < rule.min_snr:
         return f"low SNR proxy ({snr:.2f})"
     return ""
 
 
+def _fast_qa_fused(vol: np.ndarray, rule: IngestRule) -> Tuple[str, str]:
+    """QA + transfer checksum in ONE device pass (kernels/checksum).
+
+    Returns ``(reason, checksum_hex)``. Semantically equivalent to
+    :func:`_fast_qa` — the full-volume finite / constant / mean passes come
+    from the fused kernel's (min, max, sum, finite_count); only the SNR
+    background std still touches the tiny corner octant (1/64 of voxels) on
+    the host. The checksum rides along for free and is recorded so the BIDS
+    transfer can be verified without another read; it is computed over the
+    float32 view — the exact dtype :func:`ingest_directory` stores — so a
+    later device-side pass over the saved array reproduces it."""
+    from ..kernels.checksum import qa_stats
+    vol = np.ascontiguousarray(vol, dtype=np.float32)
+    st = qa_stats(vol)
+    checksum = f"{st.checksum:016x}"
+    if st.finite_count < vol.size:
+        return "non-finite voxels", checksum
+    if st.vmin == st.vmax:
+        return "constant image", checksum
+    mean = st.vsum / max(vol.size, 1)
+    bg = _bg_corner(vol)
+    snr = float(abs(mean) / (bg.std() + 1e-6))
+    if snr < rule.min_snr:
+        return f"low SNR proxy ({snr:.2f})", checksum
+    return "", checksum
+
+
 def ingest_directory(raw_dir: Path, bids_root: Path, dataset: str,
-                     rule: IngestRule = IngestRule()
+                     rule: IngestRule = IngestRule(),
+                     device_qa: Optional[bool] = None
                      ) -> Tuple[DatasetManifest, List[IngestRecord]]:
-    """Run the paper's §2.1 pipeline over a directory of raw dumps."""
+    """Run the paper's §2.1 pipeline over a directory of raw dumps.
+
+    ``device_qa=True`` routes the fast-QA stage through the fused Pallas
+    QA+checksum kernel — one device pass per volume instead of ~5 numpy
+    passes — and records the transfer checksum on each accepted scan.
+    Defaults to the ``REPRO_DEVICE_QA`` env var (off)."""
+    if device_qa is None:
+        device_qa = os.environ.get("REPRO_DEVICE_QA", "0").lower() \
+            not in ("0", "", "false")
     raw_dir, bids_root = Path(raw_dir), Path(bids_root)
     records: List[IngestRecord] = []
     for raw in sorted(raw_dir.glob("*.npz")):
@@ -110,9 +155,13 @@ def ingest_directory(raw_dir: Path, bids_root: Path, dataset: str,
             records.append(IngestRecord(raw.name, "filtered",
                                         f"matrix {vol.shape} too small"))
             continue
-        qa = _fast_qa(vol, rule)
+        if device_qa:
+            qa, checksum = _fast_qa_fused(vol, rule)
+        else:
+            qa, checksum = _fast_qa(vol, rule), ""
         if qa:
-            records.append(IngestRecord(raw.name, "failed_qa", qa))
+            records.append(IngestRecord(raw.name, "failed_qa", qa,
+                                        checksum=checksum))
             continue
         # BIDS placement + JSON sidecar (dcm2niix behaviour)
         sub, ses = meta["subject"], meta["session"]
@@ -123,7 +172,8 @@ def ingest_directory(raw_dir: Path, bids_root: Path, dataset: str,
         np.save(base / f"{stem}.npy", vol.astype(np.float32))
         (base / f"{stem}.json").write_text(json.dumps(meta, indent=1))
         records.append(IngestRecord(raw.name, "ok",
-                                    dest=str(base / f"{stem}.npy")))
+                                    dest=str(base / f"{stem}.npy"),
+                                    checksum=checksum))
     manifest = DatasetManifest.scan(bids_root / dataset, name=dataset)
     report = {
         "dataset": dataset,

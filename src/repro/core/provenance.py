@@ -29,10 +29,13 @@ class Provenance:
     attempt: int = 1
 
     def save(self, out_dir: Path):
+        """Atomic write (tmp + rename): a concurrent reader — or a racing
+        speculative duplicate — never observes a torn provenance file."""
+        from .integrity import atomic_write_bytes
         out_dir = Path(out_dir)
         out_dir.mkdir(parents=True, exist_ok=True)
-        (out_dir / PROVENANCE_NAME).write_text(
-            json.dumps(dataclasses.asdict(self), indent=1))
+        atomic_write_bytes(out_dir / PROVENANCE_NAME,
+                           json.dumps(dataclasses.asdict(self), indent=1).encode())
 
     @classmethod
     def load(cls, out_dir: Path) -> Optional["Provenance"]:

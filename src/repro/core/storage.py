@@ -53,11 +53,18 @@ class TransferLog:
 
 
 class TieredStore:
-    """Filesystem-backed tiered object store with checksummed transfers."""
+    """Filesystem-backed tiered object store with checksummed transfers.
 
-    def __init__(self, root: Path, authorized_secure: bool = True):
+    Every transfer is a single-pass ``verified_copy`` (bytes hashed while
+    they move). ``paranoid=True`` additionally re-reads each transfer's
+    destination to defend against silent media corruption (one extra read
+    pass per transfer — the paper's belt-and-braces mode)."""
+
+    def __init__(self, root: Path, authorized_secure: bool = True,
+                 paranoid: bool = False):
         self.root = Path(root)
         self.authorized_secure = authorized_secure
+        self.paranoid = paranoid
         self.log: Dict[str, TransferLog] = {k: TransferLog() for k in TIERS}
         for t in TIERS:
             (self.root / t).mkdir(parents=True, exist_ok=True)
@@ -72,7 +79,7 @@ class TieredStore:
     def put(self, src: Path, key: str, tier: str = "hot") -> str:
         dst = self._tier_dir(tier) / key
         t0 = time.time()
-        digest = verified_copy(src, dst)
+        digest = verified_copy(src, dst, paranoid=self.paranoid)
         self.log[tier].record(dst.stat().st_size, TIERS[tier], time.time() - t0)
         return digest
 
@@ -80,7 +87,7 @@ class TieredStore:
             expect_sha256: Optional[str] = None) -> str:
         src = self._tier_dir(tier) / key
         t0 = time.time()
-        digest = verified_copy(src, dst)
+        digest = verified_copy(src, dst, paranoid=self.paranoid)
         if expect_sha256 and digest != expect_sha256:
             raise IntegrityError(f"{key}: expected {expect_sha256}, got {digest}")
         self.log[tier].record(Path(dst).stat().st_size, TIERS[tier], time.time() - t0)

@@ -2,24 +2,46 @@
 
 Generates a SLURM job-array script (the paper's HPC path) *and* a local
 parallel runner (the paper's burst/debug path) from the same work list.
-Execution is idempotent (provenance-gated), checksums all I/O, retries failed
-units with exponential backoff, and speculatively re-executes stragglers
-(the known long-tail mitigation the paper's ACCRE scheduler handles for them;
-here it's first-party, as a 1000-node deployment requires).
+
+Execution data plane (``LocalRunner``) is built for throughput:
+
+* **Multi-worker executor** — ``workers=N`` compute threads drain the unit
+  list concurrently (XLA/BLAS release the GIL, so pipeline compute overlaps).
+* **Pipelined prefetch** — a loader stage verifies+hashes+loads the next
+  units' inputs (one read per byte, see ``integrity.sha256_load_array``)
+  while compute runs the current ones; lookahead is bounded by
+  ``workers + prefetch`` units so memory stays flat.
+* **Idempotent, concurrency-safe commits** — outputs are written via atomic
+  tmp-file + rename; the ok-provenance commit is arbitrated per output dir
+  (re-check under lock), so two workers racing the same unit produce exactly
+  one committed provenance — the loser reports ``skipped``.
+* **Retry + backoff** — failed units retry with exponential backoff, each
+  attempt recorded in provenance.
+* **Straggler speculation** — while a unit runs longer than
+  ``straggler_factor`` x the running median (and ``workers > 1`` so there is
+  spare capacity), a speculative duplicate is launched; provenance gating
+  picks a single winner. Speculative results are reported with
+  ``status="speculative"`` and never inflate per-image ok-counts.
+
+``workers=1`` (the default) degrades to the serial paper behaviour with
+prefetch still overlapping I/O and compute.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import os
+import threading
 import time
 import traceback
+import weakref
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
 from pathlib import Path
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .integrity import sha256_file
+from .integrity import sha256_load_array, sha256_save_array
 from .manifest import DatasetManifest
 from .pipelines import Pipeline
 from .provenance import make_provenance, is_complete
@@ -89,17 +111,74 @@ def generate_jobs(manifest: DatasetManifest, pipeline: Pipeline, out_dir: Path,
 @dataclasses.dataclass
 class UnitResult:
     unit: WorkUnit
-    status: str                  # ok | failed | skipped
+    status: str                  # ok | failed | skipped | speculative
     seconds: float
     attempts: int
     error: Optional[str] = None
 
 
+# Commit arbitration for concurrent workers racing the same output dir.
+# Thread-level: the atomic tmp+rename writes already make cross-process races
+# safe at the file level; this lock adds the exactly-one-ok-commit guarantee
+# within a runner process (the speculation + shared-queue case).
+
+
+class _DirLock:
+    """Weakref-able lock holder (a bare C lock cannot be weak-referenced)."""
+    __slots__ = ("lock", "__weakref__")
+
+    def __init__(self):
+        self.lock = threading.Lock()
+
+
+# WeakValueDictionary bounds memory in long-lived processes without an
+# eviction policy: an entry lives exactly as long as some thread holds the
+# returned _DirLock, so two racers can never end up with different locks
+# for the same out_dir.
+_COMMIT_LOCKS: "weakref.WeakValueDictionary[str, _DirLock]" = \
+    weakref.WeakValueDictionary()
+_COMMIT_LOCKS_GUARD = threading.Lock()
+
+
+def _commit_lock(out_dir: Path) -> _DirLock:
+    key = str(out_dir)
+    with _COMMIT_LOCKS_GUARD:
+        holder = _COMMIT_LOCKS.get(key)
+        if holder is None:
+            holder = _DirLock()
+            _COMMIT_LOCKS[key] = holder
+        return holder
+
+
+LoadedInputs = Tuple[Dict[str, np.ndarray], Dict[str, str]]
+
+
+def load_unit_inputs(unit: WorkUnit, data_root: Path) -> LoadedInputs:
+    """Verify-and-load a unit's inputs with one read per file: each array is
+    hashed from the same bytes it is deserialized from (no sha256_file +
+    np.load double-read). This is the prefetch stage of the executor."""
+    data_root = Path(data_root)
+    inputs: Dict[str, np.ndarray] = {}
+    in_sums: Dict[str, str] = {}
+    for suffix, rel in unit.inputs.items():
+        arr, digest = sha256_load_array(data_root / rel)
+        in_sums[rel] = digest
+        inputs[suffix] = arr
+    return inputs, in_sums
+
+
 def run_unit(unit: WorkUnit, pipeline: Pipeline, data_root: Path,
              attempt: int = 1,
-             fault_hook: Optional[Callable[[WorkUnit, int], None]] = None
-             ) -> UnitResult:
-    """Execute one work unit: verify inputs, run, write outputs + provenance."""
+             fault_hook: Optional[Callable[[WorkUnit, int], None]] = None,
+             preloaded: Optional[LoadedInputs] = None) -> UnitResult:
+    """Execute one work unit: verify inputs, run, write outputs + provenance.
+
+    ``preloaded`` short-circuits the input stage with already verified+loaded
+    arrays from the prefetch pipeline. Output files are committed atomically
+    and the ok-provenance is written under the per-out_dir commit lock with an
+    ``is_complete`` re-check, so a racing duplicate commits exactly once; the
+    loser returns ``skipped``.
+    """
     t0 = time.time()
     data_root = Path(data_root)
     out_dir = Path(unit.out_dir)
@@ -108,67 +187,196 @@ def run_unit(unit: WorkUnit, pipeline: Pipeline, data_root: Path,
     try:
         if fault_hook is not None:
             fault_hook(unit, attempt)       # test hook: injected node failures
-        inputs, in_sums = {}, {}
-        for suffix, rel in unit.inputs.items():
-            p = data_root / rel
-            in_sums[rel] = sha256_file(p)
-            inputs[suffix] = np.load(p)
+        if preloaded is not None:
+            inputs, in_sums = preloaded
+        else:
+            inputs, in_sums = load_unit_inputs(unit, data_root)
         outputs = pipeline.run(inputs)
         out_sums = {}
         out_dir.mkdir(parents=True, exist_ok=True)
         for name, arr in outputs.items():
             op = out_dir / f"sub-{unit.subject}_ses-{unit.session}_{name}.npy"
-            np.save(op, arr)
-            out_sums[op.name] = sha256_file(op)
-        make_provenance(unit.pipeline, unit.pipeline_digest, in_sums, out_sums,
-                        t0, attempt=attempt).save(out_dir)
+            out_sums[op.name] = sha256_save_array(op, arr)
+        holder = _commit_lock(out_dir)   # keep referenced while lock is held
+        with holder.lock:
+            if is_complete(out_dir, unit.pipeline_digest):
+                return UnitResult(unit, "skipped", time.time() - t0, attempt)
+            make_provenance(unit.pipeline, unit.pipeline_digest, in_sums,
+                            out_sums, t0, attempt=attempt).save(out_dir)
         return UnitResult(unit, "ok", time.time() - t0, attempt)
     except Exception as e:  # noqa: BLE001 — recorded, retried by the runner
-        out_dir.mkdir(parents=True, exist_ok=True)
-        make_provenance(unit.pipeline, unit.pipeline_digest, {}, {}, t0,
-                        status="failed", error=f"{type(e).__name__}: {e}",
-                        attempt=attempt).save(out_dir)
+        holder = _commit_lock(out_dir)
+        with holder.lock:
+            if not is_complete(out_dir, unit.pipeline_digest):
+                out_dir.mkdir(parents=True, exist_ok=True)
+                make_provenance(unit.pipeline, unit.pipeline_digest, {}, {}, t0,
+                                status="failed", error=f"{type(e).__name__}: {e}",
+                                attempt=attempt).save(out_dir)
         return UnitResult(unit, "failed", time.time() - t0, attempt,
                           error=traceback.format_exc(limit=3))
 
 
+def dedupe_results(primaries: List[UnitResult],
+                   speculative: List[Tuple[int, UnitResult]]) -> List[UnitResult]:
+    """Fold speculative duplicates into the primary result list.
+
+    Exactly one result per unit keeps a committed status; every duplicate is
+    relabelled ``status="speculative"`` so ok-counts (benchmarks, reports)
+    are never inflated. If the speculative twin won the commit race (the
+    primary came back ``skipped``/``failed``), the unit's primary slot
+    absorbs the twin's committed result."""
+    primaries = list(primaries)
+    extras: List[UnitResult] = []
+    for idx, spec in speculative:
+        prim = primaries[idx]
+        if spec.status == "ok" and prim.status != "ok":
+            primaries[idx] = dataclasses.replace(
+                spec, attempts=max(prim.attempts, spec.attempts))
+        extras.append(dataclasses.replace(spec, status="speculative"))
+    return primaries + extras
+
+
 class LocalRunner:
-    """The paper's burst-to-local path, with retry + straggler duplication."""
+    """The paper's burst-to-local path: a pipelined parallel executor with
+    retry, provenance-gated idempotency, and straggler speculation.
+
+    Knobs:
+      * ``workers``        — compute threads (1 = serial paper behaviour).
+      * ``prefetch``       — extra units of input-load lookahead beyond
+                             ``workers`` (the verify+load stage).
+      * ``max_retries`` / ``backoff_s`` — retry failed units with
+                             exponential backoff.
+      * ``straggler_factor`` / ``straggler_min_s`` — speculate a duplicate
+                             when a unit exceeds ``factor x running-median``
+                             (and at least ``min_s`` seconds, >= 4 samples,
+                             spare workers available).
+    """
 
     def __init__(self, pipeline: Pipeline, data_root: Path, *,
                  max_retries: int = 2, backoff_s: float = 0.05,
                  straggler_factor: float = 3.0,
-                 fault_hook: Optional[Callable[[WorkUnit, int], None]] = None):
+                 straggler_min_s: float = 0.5,
+                 fault_hook: Optional[Callable[[WorkUnit, int], None]] = None,
+                 workers: int = 1, prefetch: int = 2):
         self.pipeline = pipeline
         self.data_root = Path(data_root)
         self.max_retries = max_retries
         self.backoff_s = backoff_s
         self.straggler_factor = straggler_factor
+        self.straggler_min_s = straggler_min_s
         self.fault_hook = fault_hook
+        self.workers = max(1, int(workers))
+        self.prefetch = max(0, int(prefetch))
+
+    # -- stages -------------------------------------------------------------
+
+    def _execute(self, idx: int, unit: WorkUnit, loads: Dict[int, "object"],
+                 loads_guard: threading.Lock, loader: ThreadPoolExecutor,
+                 n_units: int, starts: Dict[int, float],
+                 units: List[WorkUnit]) -> UnitResult:
+        starts[idx] = time.time()
+        # pick up (and release) this unit's prefetched inputs; top up the
+        # lookahead window — popping keeps live arrays bounded by the window
+        with loads_guard:
+            pre_f = loads.pop(idx, None)
+            nxt = idx + self.workers + self.prefetch
+            if nxt < n_units and nxt not in loads:
+                loads[nxt] = loader.submit(self._safe_load, units[nxt])
+        pre = pre_f.result() if pre_f is not None else None
+        res = None
+        for attempt in range(1, self.max_retries + 2):
+            res = run_unit(unit, self.pipeline, self.data_root,
+                           attempt=attempt, fault_hook=self.fault_hook,
+                           preloaded=pre if attempt == 1 else None)
+            if res.status in ("ok", "skipped"):
+                break
+            time.sleep(self.backoff_s * (2 ** (attempt - 1)))
+        return res
+
+    def _safe_load(self, unit: WorkUnit) -> Optional[LoadedInputs]:
+        try:
+            return load_unit_inputs(unit, self.data_root)
+        except Exception:  # noqa: BLE001 — the compute stage re-raises properly
+            return None
+
+    # -- driver -------------------------------------------------------------
 
     def run(self, units: List[WorkUnit]) -> List[UnitResult]:
-        results: List[UnitResult] = []
+        if not units:
+            return []
+        n = len(units)
+        primaries: List[Optional[UnitResult]] = [None] * n
         durations: List[float] = []
-        for unit in units:
-            res = None
-            for attempt in range(1, self.max_retries + 2):
-                res = run_unit(unit, self.pipeline, self.data_root,
-                               attempt=attempt, fault_hook=self.fault_hook)
-                if res.status in ("ok", "skipped"):
-                    break
-                time.sleep(self.backoff_s * (2 ** (attempt - 1)))
-            results.append(res)
-            if res.status == "ok":
-                durations.append(res.seconds)
-            # straggler mitigation: if this unit ran much longer than the
-            # median so far, schedule a speculative duplicate (idempotent:
-            # provenance gating makes the copy a no-op if the original won)
-            if (len(durations) >= 4 and res.status == "ok"
-                    and res.seconds > self.straggler_factor * float(np.median(durations))):
-                dup = run_unit(unit, self.pipeline, self.data_root,
-                               attempt=res.attempts + 1)
-                results.append(dup)
-        return results
+        starts: Dict[int, float] = {}
+        speculated: set = set()
+        spec_queue: List[int] = []
+        spec_results: List[Tuple[int, UnitResult]] = []
+        loads: Dict[int, "object"] = {}
+        loads_guard = threading.Lock()
+        next_primary = 0
+
+        with ThreadPoolExecutor(max_workers=self.workers) as pool, \
+                ThreadPoolExecutor(max_workers=max(1, min(self.workers, 2))) as loader:
+            with loads_guard:
+                for i in range(min(self.workers + self.prefetch, n)):
+                    loads[i] = loader.submit(self._safe_load, units[i])
+            # slot-based admission: at most ``workers`` tasks in the pool, so
+            # a speculative twin dispatches into the NEXT free slot — ahead
+            # of every waiting primary — and actually runs concurrently with
+            # its straggler instead of queueing behind the whole work list
+            inflight: Dict["object", Tuple[str, int]] = {}
+
+            def dispatch():
+                nonlocal next_primary
+                while len(inflight) < self.workers:
+                    if spec_queue:
+                        i = spec_queue.pop(0)
+                        f = pool.submit(run_unit, units[i], self.pipeline,
+                                        self.data_root,
+                                        attempt=self.max_retries + 2)
+                        inflight[f] = ("spec", i)
+                    elif next_primary < n:
+                        i = next_primary
+                        next_primary += 1
+                        f = pool.submit(self._execute, i, units[i], loads,
+                                        loads_guard, loader, n, starts, units)
+                        inflight[f] = ("prim", i)
+                    else:
+                        break
+
+            dispatch()
+            # poll only when speculation is possible; with one worker there
+            # is nothing to monitor, so block until a future completes
+            poll = 0.05 if self.workers > 1 else None
+            while inflight:
+                done, _ = wait(set(inflight), timeout=poll,
+                               return_when=FIRST_COMPLETED)
+                for f in done:
+                    kind, i = inflight.pop(f)
+                    res = f.result()
+                    if kind == "prim":
+                        primaries[i] = res
+                        if res.status == "ok":
+                            durations.append(res.seconds)
+                    else:
+                        spec_results.append((i, res))
+                # straggler speculation: duplicate in-flight units running far
+                # beyond the median (idempotent — provenance picks one winner)
+                if self.workers > 1 and len(durations) >= 4:
+                    med = float(np.median(durations))
+                    now = time.time()
+                    for kind, i in list(inflight.values()):
+                        if kind != "prim" or i in speculated or i not in starts:
+                            continue
+                        elapsed = now - starts[i]
+                        if (elapsed > self.straggler_min_s
+                                and elapsed > self.straggler_factor * med):
+                            speculated.add(i)
+                            spec_queue.append(i)
+                dispatch()
+
+        return dedupe_results([r for r in primaries if r is not None],
+                              spec_results)
 
 
 def resource_status(root: Path) -> Dict[str, float]:

@@ -1,0 +1,10 @@
+"""Distribution layer: logical-axis sharding rules and compressed collectives."""
+from .sharding import (Rules, attn_shard_choice, constrain, constrain_residual,
+                       constrain_params_gathered, current_rules, param_spec_for,
+                       param_specs, shardings_for, tp_size, use_rules)
+
+__all__ = [
+    "Rules", "attn_shard_choice", "constrain", "constrain_residual",
+    "constrain_params_gathered", "current_rules", "param_spec_for",
+    "param_specs", "shardings_for", "tp_size", "use_rules",
+]

@@ -1,0 +1,249 @@
+"""Sharding rules: logical activation axes -> mesh axes, param placement.
+
+The model code never names mesh axes directly. It constrains activations with
+*logical* names ("batch", "act_model", "vocab", "cache_seq", ...) which an
+active :class:`Rules` instance resolves against the current mesh; outside a
+``use_rules`` context every constraint is a no-op, so the same model runs
+unsharded on a laptop and sharded on the production mesh.
+
+Three families of rules (``kind``):
+  * ``train``   — batch over the data axes, sequence-parallel residuals,
+                  Megatron TP over 'model' (+ 'model2' for tp2d meshes).
+  * ``prefill`` / ``decode`` — batch over data axes, KV cache sequence-
+                  sharded over 'model'.
+  * ``long``    — a single long-context sequence: batch replicated, the cache
+                  sequence dim sharded over EVERY mesh axis.
+
+Param placement (``param_specs``) is FSDP-style: matmul weights shard their
+first core dim over 'data' and their last over 'model'; embeddings are
+vocab-sharded over 'model'; norms/biases replicate. Every assignment is
+divisibility-guarded — an axis that does not divide the dim is dropped, never
+erroring (whisper's 51865-row vocab on a 16-way axis, mamba's width-4 convs).
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+MODEL_AXES = ("model", "model2")
+
+_ACTIVE = threading.local()
+
+
+def _mesh_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _scalar(axes: Tuple[str, ...]):
+    """() -> None, (a,) -> a, (a, b) -> (a, b): the PartitionSpec convention."""
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else tuple(axes)
+
+
+class Rules:
+    """Logical-axis -> mesh-axis map for one (mesh, kind, policy) cell.
+
+    ``map`` is a plain dict (inspectable in tests); ``spec(*names)`` resolves
+    a sequence of logical names (or None) into a PartitionSpec.
+    """
+
+    def __init__(self, mesh, kind: str = "train", policy: str = "tp",
+                 global_batch: Optional[int] = None):
+        self.mesh = mesh
+        self.kind = kind
+        self.policy = policy
+        self.global_batch = global_batch
+        sizes = _mesh_sizes(mesh)
+        data_axes = tuple(a for a in mesh.axis_names if a not in MODEL_AXES)
+        model_axes = tuple(a for a in mesh.axis_names if a in MODEL_AXES)
+        batch = _scalar(data_axes)
+        if global_batch is not None and data_axes:
+            n = 1
+            for a in data_axes:
+                n *= sizes[a]
+            if global_batch % n:
+                batch = None                      # not divisible: replicate
+        model = _scalar(model_axes)
+        self.map = {
+            "batch": batch,
+            "act_model": model,                   # TP axis for activations
+            "vocab": model,                       # vocab-parallel head
+            "embed": _scalar(data_axes),          # d_model of the lm head
+            "cache_seq": model,                   # KV cache sequence dim
+            "res_seq": model,                     # sequence-parallel residual
+        }
+        if kind == "long":
+            # one enormous sequence: every chip holds a sequence slice
+            self.map["batch"] = None
+            self.map["cache_seq"] = _scalar(tuple(mesh.axis_names))
+
+    def spec(self, *names) -> P:
+        return P(*[self.map.get(n) if n is not None else None for n in names])
+
+
+@contextmanager
+def use_rules(rules: Rules):
+    """Activate ``rules`` for constrain()/tp_size() in this thread."""
+    prev = getattr(_ACTIVE, "rules", None)
+    _ACTIVE.rules = rules
+    try:
+        yield rules
+    finally:
+        _ACTIVE.rules = prev
+
+
+def current_rules() -> Optional[Rules]:
+    return getattr(_ACTIVE, "rules", None)
+
+
+def tp_size() -> int:
+    """Product of the model (TP) axes of the active mesh; 1 outside rules."""
+    r = current_rules()
+    if r is None:
+        return 1
+    sizes = _mesh_sizes(r.mesh)
+    n = 1
+    for a in r.mesh.axis_names:
+        if a in MODEL_AXES:
+            n *= sizes[a]
+    return n
+
+
+def _axis_n(sizes: dict, ax) -> int:
+    if ax is None:
+        return 1
+    axs = (ax,) if isinstance(ax, str) else ax
+    n = 1
+    for a in axs:
+        n *= sizes.get(a, 1)
+    return n
+
+
+def _guard(spec: P, shape, mesh) -> P:
+    """Drop every axis assignment that does not divide its dim."""
+    sizes = _mesh_sizes(mesh)
+    padded = tuple(spec) + (None,) * (len(shape) - len(spec))
+    return P(*[ax if (ax is not None and dim % _axis_n(sizes, ax) == 0) else None
+               for dim, ax in zip(shape, padded)])
+
+
+def constrain(x, *names):
+    """with_sharding_constraint under the active rules; identity without."""
+    r = current_rules()
+    if r is None:
+        return x
+    spec = _guard(r.spec(*names), x.shape, r.mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(r.mesh, spec))
+
+
+def constrain_residual(x):
+    """Residual stream (B, S, D): batch + sequence-parallel over TP axis."""
+    return constrain(x, "batch", "res_seq", None)
+
+
+def constrain_params_gathered(params):
+    """Constrain a (bf16 cast copy of the) param tree TP-only: the FSDP
+    ('data') axes are dropped so the all-gather hoists out of microbatch
+    scans instead of re-running per microbatch (§Perf G3b)."""
+    r = current_rules()
+    if r is None:
+        return params
+    specs = param_specs(params, r.mesh)
+
+    def drop_data(spec: P) -> P:
+        out = []
+        for ax in spec:
+            if ax is None or isinstance(ax, str):
+                out.append(ax if ax in MODEL_AXES else None)
+            else:
+                out.append(_scalar(tuple(a for a in ax if a in MODEL_AXES)))
+        return P(*out)
+
+    def apply(w, spec):
+        if getattr(w, "ndim", 0) < 1:
+            return w
+        s = _guard(drop_data(spec), w.shape, r.mesh)
+        return jax.lax.with_sharding_constraint(w, NamedSharding(r.mesh, s))
+
+    return jax.tree.map(apply, params, specs)
+
+
+def attn_shard_choice(KV: int, G: int, q_len: int) -> Optional[str]:
+    """Which attention dim should carry the TP axis for a (KV, G) head split.
+
+    Returns None when GSPMD can factor tp = a*b with a | KV and b | G — manual
+    constraints would only cause involuntary resharding then. Otherwise pick
+    the first dim the TP size divides: query positions ("q"), kv heads
+    ("kv"), or the GQA group dim ("g"); None if nothing fits (replicate)."""
+    tp = tp_size()
+    if tp <= 1:
+        return None
+    if any(tp % a == 0 and KV % a == 0 and G % (tp // a) == 0
+           for a in range(1, tp + 1)):
+        return None
+    if q_len % tp == 0:
+        return "q"
+    if KV % tp == 0:
+        return "kv"
+    if G % tp == 0:
+        return "g"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# parameter placement
+# ---------------------------------------------------------------------------
+
+def param_spec_for(path: str, ndim: int, stacked: bool, shape=None,
+                   mesh=None) -> P:
+    """PartitionSpec for one param.
+
+    ``stacked`` marks scanned per-layer params whose leading dim is the layer
+    dim (always replicated). Embedding tables ("embed" in the path) are
+    vocab-sharded over 'model' with d_model over 'data'; other >=2D core
+    weights shard (first core dim -> 'data', last -> 'model'); <=1D cores
+    (norms, biases) replicate. With ``shape``+``mesh`` the assignment is
+    divisibility-guarded."""
+    core = ndim - 1 if stacked else ndim
+    if core <= 1:
+        spec = P(*([None] * ndim))
+    else:
+        if "embed" in path:
+            axes = ["model"] + [None] * (core - 2) + ["data"]
+        else:
+            axes = ["data"] + [None] * (core - 2) + ["model"]
+        if stacked:
+            axes = [None] + axes
+        spec = P(*axes)
+    if shape is not None and mesh is not None:
+        spec = _guard(spec, shape, mesh)
+    return spec
+
+
+def param_specs(params, mesh):
+    """PartitionSpec tree matching ``params`` (divisibility-guarded)."""
+    def name_of(entry) -> str:
+        if hasattr(entry, "key"):
+            return str(entry.key)
+        if hasattr(entry, "idx"):
+            return str(entry.idx)
+        return str(entry)
+
+    def spec_for(path, leaf):
+        parts = [name_of(p) for p in path]
+        pstr = "/".join(parts)
+        stacked = "layers" in parts
+        return param_spec_for(pstr, leaf.ndim, stacked, tuple(leaf.shape), mesh)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def shardings_for(mesh, specs):
+    """NamedSharding tree from a PartitionSpec tree."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,4 +1,8 @@
-from .checksum import device_checksum
-from .ref import device_checksum_ref
+from .checksum import (QAStats, device_checksum, qa_checksum,
+                       qa_checksum_batched, qa_stats)
+from .ref import (device_checksum_ref, qa_checksum_ref,
+                  qa_checksum_batched_ref)
 
-__all__ = ["device_checksum", "device_checksum_ref"]
+__all__ = ["QAStats", "device_checksum", "device_checksum_ref",
+           "qa_checksum", "qa_checksum_ref", "qa_checksum_batched",
+           "qa_checksum_batched_ref", "qa_stats"]

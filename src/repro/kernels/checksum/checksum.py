@@ -1,26 +1,45 @@
-"""On-device data-integrity checksum (paper §2.3 adapted to TPU).
+"""On-device data-integrity checksum + fused QA statistics (paper §2.3/§2.1).
 
-The paper checksums every storage<->compute transfer on the host. For
-on-device verification (e.g. after a resharding collective or a DMA from
-host) we compute a position-weighted wrap-around checksum entirely on-chip:
+The paper checksums every storage<->compute transfer on the host, and runs a
+fast visual-QA pass over every ingested volume. Both are single-read
+reductions over the same bytes, so we fuse them: ONE device pass over a
+volume emits
 
-    s1 = sum_i w_i            (mod 2^32, int32 wrap-around)
-    s2 = sum_i (i mod M) w_i  (mod 2^32),  M = 65521
+    s1 = sum_i w_i            (mod 2^32, int32 wrap-around)      \\ transfer
+    s2 = sum_i (i mod M) w_i  (mod 2^32),  M = 65521             /  checksum
+    min, max, sum             over finite float values            \\ fast QA
+    finite_count                                                  /
 
-Both sums are order-independent per-block partials, so the grid reduces in
-SMEM-free fashion via an accumulator output. ``ref.py`` defines the identical
-function in numpy; kernel and oracle agree bit-exactly.
+replacing ~5 separate numpy passes (isfinite, std, mean, checksum, ...) in
+``core.ingest._fast_qa`` with a single ``pallas_call``. A batched variant
+grids over the leading dim so a whole shape-bucket of volumes is verified in
+one launch. ``ref.py`` defines the identical functions in numpy; kernel and
+oracle agree bit-exactly — float sums use a fixed power-of-two halving tree
+on both sides (elementwise IEEE adds, no reassociation), integer checksums
+wrap mod 2^32.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-M_POS = 65521
+from .ref import M_POS, qa_block_size
 
+
+def _auto_interpret(interpret):
+    """Pallas kernels compile only on TPU; elsewhere run interpreted."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+# ---------------------------------------------------------------------------
+# plain checksum (kept: the transfer-only fast path)
+# ---------------------------------------------------------------------------
 
 def _checksum_kernel(x_ref, o_ref, *, blk: int, n: int):
     i = pl.program_id(0)
@@ -40,21 +59,23 @@ def _checksum_kernel(x_ref, o_ref, *, blk: int, n: int):
     o_ref[1] = o_ref[1] + s2
 
 
+def _to_words(x) -> jnp.ndarray:
+    """Little-endian int32 word view of an array's bytes (zero-padded)."""
+    if x.dtype.itemsize == 4:
+        return jax.lax.bitcast_convert_type(x.reshape(-1), jnp.int32)
+    b = jax.lax.bitcast_convert_type(x.reshape(-1), jnp.uint8).reshape(-1)
+    pad = (-b.size) % 4
+    if pad:
+        b = jnp.concatenate([b, jnp.zeros(pad, jnp.uint8)])
+    quads = b.reshape(-1, 4).astype(jnp.int32) & 0xFF
+    return (quads[:, 0] | (quads[:, 1] << 8) | (quads[:, 2] << 16)
+            | (quads[:, 3] << 24))
+
+
 @functools.partial(jax.jit, static_argnames=("blk", "interpret"))
 def device_checksum(x, *, blk: int = 1024, interpret: bool = False):
     """x: any array. Returns int32[2] = (s1, s2) over its uint32 word view."""
-    if x.dtype.itemsize == 4:
-        words = jax.lax.bitcast_convert_type(x.reshape(-1), jnp.int32)
-    else:
-        # little-endian pack of the byte view into int32 words (zero-padded)
-        b = jax.lax.bitcast_convert_type(x.reshape(-1), jnp.uint8).reshape(-1)
-        pad = (-b.size) % 4
-        if pad:
-            b = jnp.concatenate([b, jnp.zeros(pad, jnp.uint8)])
-        quads = b.reshape(-1, 4).astype(jnp.int32) & 0xFF
-        words = (quads[:, 0] | (quads[:, 1] << 8) | (quads[:, 2] << 16)
-                 | (quads[:, 3] << 24))
-    words = words.reshape(-1)
+    words = _to_words(x).reshape(-1)
     n = words.size
     blk = min(blk, max(n, 1))
     pad = (-n) % blk
@@ -68,3 +89,139 @@ def device_checksum(x, *, blk: int = 1024, interpret: bool = False):
         out_shape=jax.ShapeDtypeStruct((2,), jnp.int32),
         interpret=interpret,
     )(words)
+
+
+# ---------------------------------------------------------------------------
+# fused QA + checksum
+# ---------------------------------------------------------------------------
+
+def _tree_sum_f32(v):
+    """Fixed halving-tree f32 sum; mirrors ``ref.tree_sum_f32`` bit-exactly."""
+    n = v.shape[0]
+    while n > 1:
+        n //= 2
+        v = v[:n] + v[n:2 * n]
+    return v[0]
+
+
+def _qa_checksum_kernel(w_ref, v_ref, sums_ref, qa_ref, cnt_ref, *,
+                        blk_w: int, blk_v: int, nw: int, nv: int):
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        qa_ref[0, 0] = jnp.float32(jnp.inf)
+        qa_ref[0, 1] = jnp.float32(-jnp.inf)
+        qa_ref[0, 2] = jnp.float32(0.0)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    # checksum over the word view
+    w = w_ref[0, :]
+    idx = i * blk_w + jax.lax.iota(jnp.int32, blk_w)
+    valid = idx < nw
+    w = jnp.where(valid, w, 0)
+    pos = jnp.where(valid, idx % M_POS, 0)
+    sums_ref[0, 0] = sums_ref[0, 0] + jnp.sum(w)
+    sums_ref[0, 1] = sums_ref[0, 1] + jnp.sum(w * pos)
+
+    # QA over the float value view (finite values only)
+    v = v_ref[0, :].astype(jnp.float32)
+    vidx = i * blk_v + jax.lax.iota(jnp.int32, blk_v)
+    finite = jnp.isfinite(v) & (vidx < nv)
+    cnt_ref[0, 0] = cnt_ref[0, 0] + jnp.sum(finite.astype(jnp.int32))
+    qa_ref[0, 0] = jnp.minimum(qa_ref[0, 0],
+                               jnp.min(jnp.where(finite, v, jnp.inf)))
+    qa_ref[0, 1] = jnp.maximum(qa_ref[0, 1],
+                               jnp.max(jnp.where(finite, v, -jnp.inf)))
+    qa_ref[0, 2] = qa_ref[0, 2] + _tree_sum_f32(jnp.where(finite, v, 0.0))
+
+
+@functools.partial(jax.jit, static_argnames=("blk", "interpret"))
+def _qa_checksum_2d(vals, *, blk: int, interpret: bool):
+    """Core batched op. vals: (G, nv) in the original dtype. Returns
+    (sums int32 (G,2), qa f32 (G,3), cnt int32 (G,1))."""
+    G, nv = vals.shape
+    itemsize = vals.dtype.itemsize
+    blk_v = qa_block_size(nv, itemsize, blk)
+    blk_w = blk_v * itemsize // 4
+    # pad each ROW's byte extent to a word boundary before packing, so words
+    # never straddle volume boundaries (matches the per-row oracle padding)
+    row_pad = 0
+    while (nv + row_pad) * itemsize % 4:
+        row_pad += 1
+    wvals = vals
+    if row_pad:
+        wvals = jnp.concatenate(
+            [vals, jnp.zeros((G, row_pad), vals.dtype)], axis=1)
+    words = _to_words(wvals).reshape(G, -1)
+    nw = words.shape[1]
+    nsteps = max(-(-nw // blk_w), -(-nv // blk_v), 1)
+    wpad = nsteps * blk_w - nw
+    if wpad:
+        words = jnp.concatenate(
+            [words, jnp.zeros((G, wpad), jnp.int32)], axis=1)
+    vpad = nsteps * blk_v - nv
+    if vpad:
+        vals = jnp.concatenate(
+            [vals, jnp.zeros((G, vpad), vals.dtype)], axis=1)
+    return pl.pallas_call(
+        functools.partial(_qa_checksum_kernel, blk_w=blk_w, blk_v=blk_v,
+                          nw=nw, nv=nv),
+        grid=(G, nsteps),
+        in_specs=[pl.BlockSpec((1, blk_w), lambda g, i: (g, i)),
+                  pl.BlockSpec((1, blk_v), lambda g, i: (g, i))],
+        out_specs=(pl.BlockSpec((1, 2), lambda g, i: (g, 0)),
+                   pl.BlockSpec((1, 3), lambda g, i: (g, 0)),
+                   pl.BlockSpec((1, 1), lambda g, i: (g, 0))),
+        out_shape=(jax.ShapeDtypeStruct((G, 2), jnp.int32),
+                   jax.ShapeDtypeStruct((G, 3), jnp.float32),
+                   jax.ShapeDtypeStruct((G, 1), jnp.int32)),
+        interpret=interpret,
+    )(words, vals)
+
+
+def qa_checksum_batched(x, *, blk: int = 1024, interpret=None):
+    """Fused QA+checksum over a shape-bucket: ``x`` is (N, ...) — N volumes
+    verified in ONE ``pallas_call`` (grid over the leading dim). Returns
+    (int32 (N,2) checksums, float32 (N,3) [min,max,sum], int32 (N,1) counts).
+    """
+    x = jnp.asarray(x)
+    return _qa_checksum_2d(x.reshape(x.shape[0], -1), blk=blk,
+                           interpret=_auto_interpret(interpret))
+
+
+def qa_checksum(x, *, blk: int = 1024, interpret=None):
+    """Unbatched fused QA+checksum: one device pass over ``x`` emitting
+    ``(s1, s2)``, ``(min, max, sum)`` over finite values, and finite_count.
+    Returns (int32[2], float32[3], int32[1]); see :func:`qa_stats` for a
+    friendly view."""
+    x = jnp.asarray(x)
+    sums, qa, cnt = _qa_checksum_2d(x.reshape(1, -1), blk=blk,
+                                    interpret=_auto_interpret(interpret))
+    return sums[0], qa[0], cnt[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class QAStats:
+    """Host-side view of one volume's fused QA+checksum pass."""
+    s1: int
+    s2: int
+    vmin: float
+    vmax: float
+    vsum: float
+    finite_count: int
+
+    @property
+    def checksum(self) -> int:
+        return ((self.s2 & 0xFFFFFFFF) << 32) | (self.s1 & 0xFFFFFFFF)
+
+
+def qa_stats(x, *, blk: int = 1024, interpret=None) -> QAStats:
+    """Run :func:`qa_checksum` and pull the scalars to the host."""
+    import numpy as np
+    sums, qa, cnt = qa_checksum(x, blk=blk, interpret=interpret)
+    sums = np.asarray(sums).view(np.uint32)
+    qa = np.asarray(qa)
+    return QAStats(int(sums[0]), int(sums[1]), float(qa[0]), float(qa[1]),
+                   float(qa[2]), int(np.asarray(cnt)[0]))

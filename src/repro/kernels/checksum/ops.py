@@ -1,1 +1,3 @@
 from .checksum import device_checksum as device_checksum_op  # noqa: F401
+from .checksum import qa_checksum as qa_checksum_op  # noqa: F401
+from .checksum import qa_checksum_batched as qa_checksum_batched_op  # noqa: F401

@@ -1,0 +1,347 @@
+"""Parallel executor data plane: concurrent idempotency, retries under
+parallelism, straggler accounting, single-pass integrity primitives, and the
+fused QA+checksum Pallas kernel vs its numpy oracle."""
+import dataclasses
+import os
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import (LocalRunner, builtin_pipelines, dedupe_results,
+                        fletcher64, fletcher64_file, is_complete,
+                        query_available_work, sha256_file, sha256_load_array,
+                        sha256_save_array, synthesize_dataset, verified_copy)
+from repro.core import integrity as integrity_mod
+from repro.core.integrity import IntegrityError
+from repro.core.query import WorkUnit
+from repro.core.workflow import UnitResult
+
+
+@pytest.fixture()
+def dataset(tmp_path):
+    return synthesize_dataset(tmp_path, "exds", n_subjects=4,
+                              sessions_per_subject=2, shape=(12, 12, 12))
+
+
+def _work(dataset):
+    pipe = builtin_pipelines()["bias_correct"]
+    units, _ = query_available_work(dataset, pipe)
+    return pipe, units
+
+
+# ---------------------------------------------------------------------------
+# parallel executor
+# ---------------------------------------------------------------------------
+
+def test_parallel_runner_completes_all_units(dataset):
+    pipe, units = _work(dataset)
+    results = LocalRunner(pipe, dataset.root, workers=4).run(units)
+    assert len(results) >= len(units)
+    ok = [r for r in results if r.status == "ok"]
+    assert len(ok) == len(units) == 8
+    for u in units:
+        assert is_complete(Path(u.out_dir), pipe.digest())
+    # idempotent: re-query finds nothing
+    work2, _ = query_available_work(dataset, pipe)
+    assert work2 == []
+
+
+def test_concurrent_idempotency_exactly_one_commit(dataset):
+    """Two workers racing the SAME unit: both compute, exactly one commits."""
+    pipe, units = _work(dataset)
+    unit = units[0]
+    barrier = threading.Barrier(2)
+
+    def rendezvous(u, attempt):
+        # hold both workers past the is_complete fast path so they genuinely
+        # race the commit; fall through if the runner serialized them
+        try:
+            barrier.wait(timeout=2)
+        except threading.BrokenBarrierError:
+            pass
+
+    runner = LocalRunner(pipe, dataset.root, workers=2, fault_hook=rendezvous)
+    results = runner.run([unit, unit])
+    statuses = sorted(r.status for r in results)
+    assert statuses == ["ok", "skipped"]
+    assert is_complete(Path(unit.out_dir), pipe.digest())
+    # exactly one committed ok-provenance on disk
+    provs = list(Path(unit.out_dir).glob("provenance.json*"))
+    assert len(provs) == 1
+
+
+def test_fault_hook_retries_under_parallelism(dataset):
+    pipe, units = _work(dataset)
+    lock = threading.Lock()
+    fails = {"n": 0}
+
+    def flaky(unit, attempt):
+        if attempt == 1:
+            with lock:
+                fails["n"] += 1
+            raise RuntimeError("injected node failure")
+
+    runner = LocalRunner(pipe, dataset.root, workers=4, max_retries=2,
+                         fault_hook=flaky)
+    results = runner.run(units)
+    ok = [r for r in results if r.status == "ok"]
+    assert len(ok) == len(units)
+    assert fails["n"] == len(units)
+    assert all(r.attempts == 2 for r in ok)
+
+
+def _fake_unit(tag="u1"):
+    return WorkUnit(dataset="d", subject=tag, session="01", pipeline="p",
+                    pipeline_digest="x", inputs={}, out_dir=f"/tmp/{tag}")
+
+
+def test_dedupe_results_marks_speculative_and_keeps_one_ok():
+    u = _fake_unit()
+    prim = [UnitResult(u, "ok", 1.0, 1)]
+    spec = [(0, UnitResult(u, "skipped", 0.2, 3))]
+    out = dedupe_results(prim, spec)
+    assert [r.status for r in out] == ["ok", "speculative"]
+
+    # speculative twin won the race: primary slot absorbs the committed run
+    prim = [UnitResult(u, "skipped", 1.5, 1)]
+    spec = [(0, UnitResult(u, "ok", 0.2, 3))]
+    out = dedupe_results(prim, spec)
+    assert [r.status for r in out] == ["ok", "speculative"]
+    assert sum(r.status == "ok" for r in out) == 1
+
+
+def test_straggler_speculation_end_to_end(dataset):
+    """A unit sleeping far past the median gets a speculative twin; counts
+    stay exact: one ok per unit, duplicates reported as 'speculative'."""
+    pipe, units = _work(dataset)
+    slow_id = units[0].job_id
+    slept = {"n": 0}
+    lock = threading.Lock()
+
+    def slow_hook(u, attempt):
+        if u.job_id == slow_id:
+            with lock:
+                first = slept["n"] == 0
+                slept["n"] += 1
+            if first:
+                time.sleep(1.2)
+
+    runner = LocalRunner(pipe, dataset.root, workers=2, fault_hook=slow_hook,
+                         straggler_factor=1.5, straggler_min_s=0.15)
+    results = runner.run(units)
+    by_status = {s: sum(r.status == s for r in results)
+                 for s in ("ok", "speculative", "failed")}
+    assert by_status["ok"] == len(units)
+    assert by_status["failed"] == 0
+    ok_ids = [r.unit.job_id for r in results if r.status == "ok"]
+    assert len(ok_ids) == len(set(ok_ids))    # no double-counted unit
+
+
+# ---------------------------------------------------------------------------
+# single-pass integrity
+# ---------------------------------------------------------------------------
+
+def _counting_open(monkeypatch, counters):
+    real_open = open
+
+    def counting(path, mode="r", *a, **k):
+        p = str(path)
+        if "r" in mode and "w" not in mode:
+            counters[p] = counters.get(p, 0) + 1
+        return real_open(path, mode, *a, **k)
+
+    monkeypatch.setattr(integrity_mod, "open", counting, raising=False)
+
+
+def test_verified_copy_reads_source_exactly_once(tmp_path, monkeypatch):
+    src = tmp_path / "src.bin"
+    src.write_bytes(os.urandom(1 << 16) * 3)
+    dst = tmp_path / "out" / "dst.bin"
+    counters = {}
+    _counting_open(monkeypatch, counters)
+    digest = verified_copy(src, dst)
+    assert counters == {str(src): 1}          # ONE source read, no dst read
+    assert dst.read_bytes() == src.read_bytes()
+    assert digest == sha256_file(src)
+
+
+def test_verified_copy_paranoid_rereads_destination_once(tmp_path, monkeypatch):
+    src = tmp_path / "src.bin"
+    src.write_bytes(os.urandom(4096))
+    dst = tmp_path / "dst.bin"
+    counters = {}
+    _counting_open(monkeypatch, counters)
+    verified_copy(src, dst, paranoid=True)
+    assert counters[str(src)] == 1
+    reread = {p: n for p, n in counters.items() if p != str(src)}
+    assert sum(reread.values()) == 1          # exactly one verify read
+
+
+def test_verified_copy_paranoid_detects_corruption(tmp_path, monkeypatch):
+    src = tmp_path / "src.bin"
+    src.write_bytes(os.urandom(8192))
+    dst = tmp_path / "dst.bin"
+    real_open = open
+
+    class CorruptReads:
+        def __init__(self, f):
+            self.f = f
+
+        def read(self, n=-1):
+            b = self.f.read(n)
+            return (bytes([b[0] ^ 1]) + b[1:]) if b else b
+
+        def __enter__(self):
+            return self
+
+        def __exit__(self, *a):
+            self.f.close()
+
+    def flipping(path, mode="r", *a, **k):
+        f = real_open(path, mode, *a, **k)
+        if ".tmp-" in str(path) and "r" in mode:   # the verify read-back
+            return CorruptReads(f)
+        return f
+
+    monkeypatch.setattr(integrity_mod, "open", flipping, raising=False)
+    with pytest.raises(IntegrityError):
+        verified_copy(src, dst, paranoid=True)
+    assert not dst.exists()
+    assert not list(tmp_path.glob("*.tmp-*"))      # temp file cleaned up
+
+
+@pytest.mark.parametrize("size", [0, 1, 3, 4, 1023, 4096 + 5, (1 << 16) + 7])
+def test_fletcher64_file_chunked_matches_one_shot(tmp_path, size):
+    data = np.random.default_rng(size).integers(
+        0, 256, size, dtype=np.uint8).tobytes()
+    p = tmp_path / "f.bin"
+    p.write_bytes(data)
+    want = fletcher64(data)
+    assert fletcher64_file(p) == want
+    assert fletcher64_file(p, chunk=1031) == want   # odd chunk: tail carry
+    assert fletcher64_file(p, chunk=4) == want
+
+
+def test_sha256_save_load_array_single_pass_roundtrip(tmp_path):
+    arr = np.random.default_rng(0).normal(size=(17, 9)).astype(np.float32)
+    p = tmp_path / "a.npy"
+    d_saved = sha256_save_array(p, arr)
+    assert d_saved == sha256_file(p)
+    loaded, d_loaded = sha256_load_array(p)
+    assert d_loaded == d_saved
+    assert np.array_equal(loaded, arr)
+
+
+# ---------------------------------------------------------------------------
+# fused QA + checksum kernel
+# ---------------------------------------------------------------------------
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.checksum import (device_checksum, qa_checksum,
+                                    qa_checksum_batched,
+                                    qa_checksum_batched_ref, qa_checksum_ref,
+                                    qa_stats)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("shape,dtype", [
+    ((16, 16, 16), jnp.float32), ((33, 7), jnp.float32), ((1,), jnp.float32),
+    ((129,), jnp.bfloat16), ((1000,), jnp.float16), ((77,), jnp.int8),
+    ((5,), jnp.int32),
+])
+def test_qa_checksum_bit_exact_vs_ref(shape, dtype):
+    if jnp.issubdtype(dtype, jnp.integer):
+        x = jax.random.randint(KEY, shape, -100, 100).astype(dtype)
+    else:
+        x = (jax.random.normal(KEY, shape, jnp.float32) * 50).astype(dtype)
+    got = qa_checksum(x, interpret=True)
+    ref = qa_checksum_ref(np.asarray(x))
+    for a, b in zip(got, ref):
+        a = np.asarray(a)
+        assert a.dtype == b.dtype
+        assert np.array_equal(a, b), (a, b)
+    # fused checksum words == the plain transfer checksum kernel
+    assert np.array_equal(np.asarray(got[0]),
+                          np.asarray(device_checksum(x, interpret=True)))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_qa_checksum_batched_matches_ref_and_rows(dtype):
+    vols = (jax.random.normal(KEY, (5, 12, 12, 12), jnp.float32) * 40 + 100
+            ).astype(dtype)
+    vols = vols.at[3, 0, 0, 0].set(jnp.nan)
+    got = qa_checksum_batched(vols, interpret=True)
+    ref = qa_checksum_batched_ref(np.asarray(vols))
+    for a, b in zip(got, ref):
+        assert np.array_equal(np.asarray(a), b, equal_nan=True)
+    # each batched row == the unbatched kernel on that volume
+    for i in range(vols.shape[0]):
+        s, q, c = qa_checksum(vols[i], interpret=True)
+        assert np.array_equal(np.asarray(s), np.asarray(got[0][i]))
+        assert np.array_equal(np.asarray(q), np.asarray(got[1][i]))
+        assert np.array_equal(np.asarray(c), np.asarray(got[2][i]))
+
+
+@pytest.mark.parametrize("shape,dtype", [
+    ((2, 27), jnp.int16),      # row bytes not word-aligned: per-row padding
+    ((2, 3), jnp.int8),
+    ((3, 5, 5), jnp.bfloat16),
+])
+def test_qa_checksum_batched_subword_rows_match_unbatched(shape, dtype):
+    """Rows whose byte extent is not a multiple of 4 must pad per-row, never
+    letting checksum words straddle volume boundaries."""
+    x = jax.random.randint(KEY, shape, -100, 100).astype(dtype)
+    got = qa_checksum_batched(x, interpret=True)
+    ref = qa_checksum_batched_ref(np.asarray(x))
+    for a, b in zip(got, ref):
+        assert np.array_equal(np.asarray(a), b), (np.asarray(a), b)
+    for i in range(shape[0]):
+        s, q, c = qa_checksum(x[i], interpret=True)
+        assert np.array_equal(np.asarray(s), np.asarray(got[0][i]))
+
+
+def test_qa_checksum_detects_corruption_and_counts_nonfinite():
+    x = jax.random.normal(KEY, (256,))
+    a = np.asarray(qa_checksum(x, interpret=True)[0])
+    xc = np.asarray(x).copy()
+    xc[17] += 1e-3
+    b = np.asarray(qa_checksum(jnp.asarray(xc), interpret=True)[0])
+    assert not np.array_equal(a, b)
+
+    xn = np.asarray(x).copy()
+    xn[3] = np.nan
+    xn[200] = np.inf
+    st = qa_stats(jnp.asarray(xn), interpret=True)
+    assert st.finite_count == 254
+    assert st.vmin <= st.vmax
+    assert np.isfinite(st.vsum)
+
+
+def test_ingest_device_qa_parity(tmp_path):
+    from repro.core.ingest import ingest_directory, write_raw_dump
+    rng = np.random.default_rng(0)
+    d = tmp_path / "raw"
+    good = rng.normal(100, 20, (16, 16, 16)).astype(np.float32)
+    write_raw_dump(d / "a.npz", good, subject="001", session="01",
+                   protocol="T1w")
+    bad = good.copy()
+    bad[0, 0, 0] = np.nan
+    write_raw_dump(d / "b.npz", bad, subject="002", session="01",
+                   protocol="T1w")
+    write_raw_dump(d / "c.npz", np.ones((16, 16, 16), np.float32),
+                   subject="003", session="01", protocol="T1w")
+
+    _, rec_np = ingest_directory(d, tmp_path / "b1", "s", device_qa=False)
+    _, rec_dev = ingest_directory(d, tmp_path / "b2", "s", device_qa=True)
+    assert [(r.source, r.status) for r in rec_np] == \
+        [(r.source, r.status) for r in rec_dev]
+    by = {r.source: r for r in rec_dev}
+    assert by["a.npz"].status == "ok" and len(by["a.npz"].checksum) == 16
+    assert by["b.npz"].reason == "non-finite voxels"
+    assert by["c.npz"].reason == "constant image"
