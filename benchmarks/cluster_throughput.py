@@ -1,0 +1,114 @@
+"""Multi-node executor throughput vs the single-host baseline.
+
+Runs a synthetic 64-unit dataset through ``LocalRunner(workers=1)`` (the
+paper's serial burst path with pipelined prefetch) and through
+``ClusterRunner`` at 2 and 4 in-process nodes, interleaved over ``REPS``
+repetitions with per-config medians (shared hosts drift; see
+``executor_throughput`` for the methodology notes). One extra 4-node row
+re-runs the sweep with an injected node death mid-run — the lease-reaping
+path — to show the throughput cost of losing a node is bounded by the
+requeued units, not a stalled job.
+
+Like ``executor_throughput``, the sweep executes in a subprocess with
+XLA/BLAS intra-op parallelism pinned to one thread so node scaling — not
+operator threading — is what gets measured. Writes the full sample set to
+``benchmarks/out/cluster_throughput.json`` (CI uploads it as an artifact;
+override the path with ``REPRO_BENCH_JSON``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+from ._pin import run_pinned
+
+N_SUBJECTS = 32
+SESSIONS = 2                       # 32 x 2 = 64 units
+SHAPE = (48, 48, 48)               # heavy enough that XLA compute (which
+                                   # releases the GIL) dominates jax dispatch
+PIPELINE = "bias_correct"
+NODE_SWEEP = (2, 4)
+REPS = 3
+
+_INPROC_FLAG = "REPRO_CLUSTER_BENCH_INPROC"
+_JSON_OUT = Path(__file__).resolve().parent / "out" / "cluster_throughput.json"
+
+
+def _run_inproc():
+    from repro.core import (LocalRunner, builtin_pipelines,
+                            query_available_work, synthesize_dataset)
+    from repro.dist import ClusterRunner
+    rows = []
+    samples: dict = {}
+    with tempfile.TemporaryDirectory() as td:
+        ds = synthesize_dataset(Path(td), "clbench", n_subjects=N_SUBJECTS,
+                                sessions_per_subject=SESSIONS, shape=SHAPE)
+        pipe = builtin_pipelines()[PIPELINE]
+        deriv = Path(ds.root) / "derivatives"
+
+        # warm jit caches so no config pays compile time
+        units, _ = query_available_work(ds, pipe)
+        LocalRunner(pipe, ds.root).run(units[:2])
+        shutil.rmtree(deriv, ignore_errors=True)
+
+        def measure(cfg):
+            units, _ = query_available_work(ds, pipe)
+            t0 = time.time()
+            if cfg == "local_w1":
+                results = LocalRunner(pipe, ds.root, workers=1).run(units)
+            elif cfg == "nodes4_kill1":
+                runner = ClusterRunner(pipe, ds.root, nodes=4,
+                                       die_after={"node-1": 4},
+                                       lease_ttl_s=0.6, hb_interval_s=0.1)
+                results = runner.run(units)
+            else:
+                results = ClusterRunner(pipe, ds.root, nodes=int(cfg[5:])
+                                        ).run(units)
+            dt = time.time() - t0
+            ok = sum(r.status == "ok" for r in results)
+            shutil.rmtree(deriv, ignore_errors=True)
+            return dt, ok, len(units)
+
+        configs = ["local_w1"] + [f"nodes{n}" for n in NODE_SWEEP] + \
+            ["nodes4_kill1"]
+        samples = {c: [] for c in configs}
+        for _ in range(REPS):
+            for c in configs:
+                samples[c].append(measure(c))
+        med = {}
+        for c in configs:
+            ms = sorted(samples[c], key=lambda m: m[0])
+            med[c] = ms[len(ms) // 2]
+            dt, ok, n = med[c]
+            rows.append((f"cluster_images_per_s_{c}", round(ok / dt, 3),
+                         f"{ok}/{n} units in {dt:.2f}s (median of {REPS})"))
+        rows.append(("cluster_speedup_nodes4_vs_local_w1",
+                     round(med["local_w1"][0] / med["nodes4"][0], 3),
+                     "median wall-clock: LocalRunner(workers=1) / 4 nodes"))
+        rows.append(("cluster_speedup_nodes4_kill1_vs_local_w1",
+                     round(med["local_w1"][0] / med["nodes4_kill1"][0], 3),
+                     "as above with one node dying after 4 units"))
+    out = Path(os.environ.get("REPRO_BENCH_JSON", _JSON_OUT))
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps({
+        "units": N_SUBJECTS * SESSIONS, "shape": list(SHAPE), "reps": REPS,
+        "samples_s": {c: [round(s[0], 4) for s in samples[c]]
+                      for c in samples},
+        "rows": [[n, v, d] for n, v, d in rows],
+    }, indent=1))
+    return rows
+
+
+def run():
+    """Benchmark entry (benchmarks.run): re-exec pinned — see ``_pin``."""
+    return run_pinned("benchmarks.cluster_throughput", "cluster_",
+                      _INPROC_FLAG, _run_inproc, timeout=1800)
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(",".join(str(c) for c in row))

@@ -23,13 +23,12 @@ from ~3 to ~1.
 """
 from __future__ import annotations
 
-import os
 import shutil
-import subprocess
-import sys
 import tempfile
 import time
 from pathlib import Path
+
+from ._pin import run_pinned
 
 WORKER_SWEEP = (0, 1, 2, 4, 8)    # 0 = serial plain-loop baseline
 N_SUBJECTS = 8
@@ -39,13 +38,6 @@ PIPELINE = "bias_correct"
 REPS = 5
 
 _INPROC_FLAG = "REPRO_BENCH_INPROC"
-_PIN_ENV = {
-    "XLA_FLAGS": "--xla_cpu_multi_thread_eigen=false "
-                 "intra_op_parallelism_threads=1",
-    "OMP_NUM_THREADS": "1",
-    "OPENBLAS_NUM_THREADS": "1",
-    "MKL_NUM_THREADS": "1",
-}
 
 
 def _unit_bytes(ds, units, results, ok_ids=None) -> int:
@@ -148,22 +140,9 @@ def _run_inproc():
 def run():
     """Benchmark entry (benchmarks.run): re-exec in a pinned subprocess so
     the one-core-per-unit XLA flags apply before jax initializes — without
-    leaking single-threaded compute into the other benchmarks."""
-    if os.environ.get(_INPROC_FLAG):
-        return _run_inproc()
-    env = dict(os.environ, **_PIN_ENV, **{_INPROC_FLAG: "1"})
-    proc = subprocess.run(
-        [sys.executable, "-m", "benchmarks.executor_throughput"],
-        env=env, cwd=Path(__file__).resolve().parents[1],
-        capture_output=True, text=True, timeout=1200)
-    if proc.returncode != 0:
-        raise RuntimeError(f"pinned bench subprocess failed:\n{proc.stderr}")
-    rows = []
-    for line in proc.stdout.splitlines():
-        if line.startswith("executor_"):
-            name, value, derived = line.split(",", 2)
-            rows.append((name, float(value), derived))
-    return rows
+    leaking single-threaded compute into the other benchmarks (see ``_pin``)."""
+    return run_pinned("benchmarks.executor_throughput", "executor_",
+                      _INPROC_FLAG, _run_inproc)
 
 
 if __name__ == "__main__":

@@ -9,9 +9,9 @@ from .pipelines import Pipeline, PipelineSpec, builtin_pipelines
 from .provenance import Provenance, make_provenance, is_complete
 from .query import WorkUnit, Exclusion, query_available_work, write_exclusion_csv
 from .storage import TieredStore, TIERS
-from .workflow import (JobPlan, LocalRunner, UnitResult, dedupe_results,
-                       generate_jobs, load_unit_inputs, resource_status,
-                       run_unit)
+from .workflow import (JobPlan, LocalRunner, StragglerDetector, UnitResult,
+                       dedupe_results, generate_jobs, load_unit_inputs,
+                       resource_status, run_unit, run_unit_with_retries)
 from .cost import (PAPER_ENVS, TPU_ENVS, job_cost, paper_table1,
                    cost_ratio_cloud_vs_hpc, training_run_cost)
 from .ingest import IngestRule, ingest_directory, write_raw_dump
@@ -23,8 +23,9 @@ __all__ = [
     "Pipeline", "PipelineSpec", "builtin_pipelines", "Provenance",
     "make_provenance", "is_complete", "WorkUnit", "Exclusion",
     "query_available_work", "write_exclusion_csv", "TieredStore", "TIERS",
-    "JobPlan", "LocalRunner", "UnitResult", "dedupe_results", "generate_jobs",
-    "load_unit_inputs", "resource_status", "run_unit",
+    "JobPlan", "LocalRunner", "StragglerDetector", "UnitResult",
+    "dedupe_results", "generate_jobs", "load_unit_inputs", "resource_status",
+    "run_unit", "run_unit_with_retries",
     "PAPER_ENVS", "TPU_ENVS", "job_cost", "paper_table1",
     "cost_ratio_cloud_vs_hpc", "training_run_cost",
     "IngestRule", "ingest_directory", "write_raw_dump",

@@ -27,6 +27,12 @@ class Provenance:
     host: str = ""
     error: Optional[str] = None
     attempt: int = 1
+    # multi-node execution (repro.dist.cluster): which node committed this
+    # record and under which lease epoch. Epoch 0 = single-host execution;
+    # a requeued unit's new lease bumps the epoch, so records tell apart a
+    # first-run commit from a post-node-death re-run years later.
+    node_id: str = ""
+    lease_epoch: int = 0
 
     def save(self, out_dir: Path):
         """Atomic write (tmp + rename): a concurrent reader — or a racing
@@ -50,13 +56,14 @@ class Provenance:
 
 def make_provenance(pipeline: str, digest: str, inputs: Dict[str, str],
                     outputs: Dict[str, str], started: float, status: str = "ok",
-                    error: Optional[str] = None, attempt: int = 1) -> Provenance:
+                    error: Optional[str] = None, attempt: int = 1,
+                    node_id: str = "", lease_epoch: int = 0) -> Provenance:
     return Provenance(
         pipeline=pipeline, pipeline_digest=digest,
         user=getpass.getuser(), host=platform.node(),
         started_at=started, finished_at=time.time(),
         inputs=inputs, outputs=outputs, status=status, error=error,
-        attempt=attempt)
+        attempt=attempt, node_id=node_id, lease_epoch=lease_epoch)
 
 
 def is_complete(out_dir: Path, digest: Optional[str] = None) -> bool:

@@ -7,7 +7,7 @@ from __future__ import annotations
 import csv
 import dataclasses
 from pathlib import Path
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Mapping, Optional, Tuple
 
 from .manifest import DatasetManifest, ImageRecord
 from .pipelines import Pipeline
@@ -36,11 +36,19 @@ class Exclusion:
     reason: str
 
 
-def query_available_work(manifest: DatasetManifest, pipeline: Pipeline
+def query_available_work(manifest: DatasetManifest, pipeline: Pipeline, *,
+                         leases: Optional[Mapping[str, str]] = None
                          ) -> Tuple[List[WorkUnit], List[Exclusion]]:
+    """Sessions with the required inputs and no completed digest-matching
+    derivative. ``leases`` (``job_id -> node_id``, e.g.
+    ``WorkQueue.active_leases()``) additionally excludes sessions currently
+    leased to a cluster node, so a second submitter racing a live cluster
+    never double-schedules in-flight work — the exclusion CSV names the
+    holding node."""
     work: List[WorkUnit] = []
     excluded: List[Exclusion] = []
     digest = pipeline.digest()
+    leases = leases or {}
     for (sub, ses), recs in sorted(manifest.sessions().items()):
         by_suffix: Dict[str, ImageRecord] = {}
         for r in recs:
@@ -54,11 +62,16 @@ def query_available_work(manifest: DatasetManifest, pipeline: Pipeline
         if is_complete(out_dir, digest):
             excluded.append(Exclusion(sub, ses, "already processed (digest match)"))
             continue
-        work.append(WorkUnit(
+        wu = WorkUnit(
             dataset=manifest.name, subject=sub, session=ses,
             pipeline=pipeline.name, pipeline_digest=digest,
             inputs={s: by_suffix[s].path for s in pipeline.spec.required_suffixes},
-            out_dir=str(out_dir)))
+            out_dir=str(out_dir))
+        if wu.job_id in leases:
+            excluded.append(Exclusion(sub, ses,
+                                      f"leased by {leases[wu.job_id]}"))
+            continue
+        work.append(wu)
     return work, excluded
 
 

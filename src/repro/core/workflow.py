@@ -167,17 +167,30 @@ def load_unit_inputs(unit: WorkUnit, data_root: Path) -> LoadedInputs:
     return inputs, in_sums
 
 
+def safe_load_unit_inputs(unit: WorkUnit, data_root: Path
+                          ) -> Optional[LoadedInputs]:
+    """Prefetch-stage wrapper shared by both executors: a failed load returns
+    ``None`` so the compute stage reloads and raises with full context."""
+    try:
+        return load_unit_inputs(unit, data_root)
+    except Exception:  # noqa: BLE001 — the compute stage re-raises properly
+        return None
+
+
 def run_unit(unit: WorkUnit, pipeline: Pipeline, data_root: Path,
              attempt: int = 1,
              fault_hook: Optional[Callable[[WorkUnit, int], None]] = None,
-             preloaded: Optional[LoadedInputs] = None) -> UnitResult:
+             preloaded: Optional[LoadedInputs] = None,
+             node_id: str = "", lease_epoch: int = 0) -> UnitResult:
     """Execute one work unit: verify inputs, run, write outputs + provenance.
 
     ``preloaded`` short-circuits the input stage with already verified+loaded
     arrays from the prefetch pipeline. Output files are committed atomically
     and the ok-provenance is written under the per-out_dir commit lock with an
     ``is_complete`` re-check, so a racing duplicate commits exactly once; the
-    loser returns ``skipped``.
+    loser returns ``skipped``. ``node_id``/``lease_epoch`` stamp the committed
+    provenance when the unit runs under a cluster lease
+    (:mod:`repro.dist.cluster`).
     """
     t0 = time.time()
     data_root = Path(data_root)
@@ -202,7 +215,8 @@ def run_unit(unit: WorkUnit, pipeline: Pipeline, data_root: Path,
             if is_complete(out_dir, unit.pipeline_digest):
                 return UnitResult(unit, "skipped", time.time() - t0, attempt)
             make_provenance(unit.pipeline, unit.pipeline_digest, in_sums,
-                            out_sums, t0, attempt=attempt).save(out_dir)
+                            out_sums, t0, attempt=attempt, node_id=node_id,
+                            lease_epoch=lease_epoch).save(out_dir)
         return UnitResult(unit, "ok", time.time() - t0, attempt)
     except Exception as e:  # noqa: BLE001 — recorded, retried by the runner
         holder = _commit_lock(out_dir)
@@ -211,9 +225,63 @@ def run_unit(unit: WorkUnit, pipeline: Pipeline, data_root: Path,
                 out_dir.mkdir(parents=True, exist_ok=True)
                 make_provenance(unit.pipeline, unit.pipeline_digest, {}, {}, t0,
                                 status="failed", error=f"{type(e).__name__}: {e}",
-                                attempt=attempt).save(out_dir)
+                                attempt=attempt, node_id=node_id,
+                                lease_epoch=lease_epoch).save(out_dir)
         return UnitResult(unit, "failed", time.time() - t0, attempt,
                           error=traceback.format_exc(limit=3))
+
+
+def run_unit_with_retries(
+        unit: WorkUnit, pipeline: Pipeline, data_root: Path, *,
+        max_retries: int = 2, backoff_s: float = 0.05,
+        fault_hook: Optional[Callable[[WorkUnit, int], None]] = None,
+        preloaded: Optional[LoadedInputs] = None,
+        node_id: str = "", lease_epoch: int = 0) -> UnitResult:
+    """The executor retry stage, shared by :class:`LocalRunner` workers and
+    cluster nodes: run a unit up to ``max_retries + 1`` times with exponential
+    backoff. Prefetched inputs are only trusted on the first attempt — a
+    retry re-verifies from storage (the failure may have been a torn read)."""
+    res = None
+    for attempt in range(1, max_retries + 2):
+        res = run_unit(unit, pipeline, data_root, attempt=attempt,
+                       fault_hook=fault_hook,
+                       preloaded=preloaded if attempt == 1 else None,
+                       node_id=node_id, lease_epoch=lease_epoch)
+        if res.status in ("ok", "skipped"):
+            break
+        if attempt <= max_retries:          # no dead sleep after the last try
+            time.sleep(backoff_s * (2 ** (attempt - 1)))
+    return res
+
+
+class StragglerDetector:
+    """Running-median straggler policy shared by the single-host and cluster
+    executors: a unit is a straggler once it has run ``factor`` x the median
+    of completed-ok durations (with an absolute ``min_s`` floor, and only
+    after ``min_samples`` completions so the median is meaningful)."""
+
+    def __init__(self, factor: float = 3.0, min_s: float = 0.5,
+                 min_samples: int = 4):
+        self.factor = factor
+        self.min_s = min_s
+        self.min_samples = min_samples
+        self._durations: List[float] = []
+        self._lock = threading.Lock()
+
+    def observe(self, seconds: float):
+        with self._lock:
+            self._durations.append(seconds)
+
+    def median(self) -> Optional[float]:
+        with self._lock:
+            if len(self._durations) < self.min_samples:
+                return None
+            return float(np.median(self._durations))
+
+    def is_straggler(self, elapsed: float) -> bool:
+        med = self.median()
+        return (med is not None and elapsed > self.min_s
+                and elapsed > self.factor * med)
 
 
 def dedupe_results(primaries: List[UnitResult],
@@ -283,21 +351,12 @@ class LocalRunner:
             if nxt < n_units and nxt not in loads:
                 loads[nxt] = loader.submit(self._safe_load, units[nxt])
         pre = pre_f.result() if pre_f is not None else None
-        res = None
-        for attempt in range(1, self.max_retries + 2):
-            res = run_unit(unit, self.pipeline, self.data_root,
-                           attempt=attempt, fault_hook=self.fault_hook,
-                           preloaded=pre if attempt == 1 else None)
-            if res.status in ("ok", "skipped"):
-                break
-            time.sleep(self.backoff_s * (2 ** (attempt - 1)))
-        return res
+        return run_unit_with_retries(
+            unit, self.pipeline, self.data_root, max_retries=self.max_retries,
+            backoff_s=self.backoff_s, fault_hook=self.fault_hook, preloaded=pre)
 
     def _safe_load(self, unit: WorkUnit) -> Optional[LoadedInputs]:
-        try:
-            return load_unit_inputs(unit, self.data_root)
-        except Exception:  # noqa: BLE001 — the compute stage re-raises properly
-            return None
+        return safe_load_unit_inputs(unit, self.data_root)
 
     # -- driver -------------------------------------------------------------
 
@@ -306,7 +365,8 @@ class LocalRunner:
             return []
         n = len(units)
         primaries: List[Optional[UnitResult]] = [None] * n
-        durations: List[float] = []
+        detector = StragglerDetector(self.straggler_factor,
+                                     self.straggler_min_s)
         starts: Dict[int, float] = {}
         speculated: set = set()
         spec_queue: List[int] = []
@@ -357,20 +417,17 @@ class LocalRunner:
                     if kind == "prim":
                         primaries[i] = res
                         if res.status == "ok":
-                            durations.append(res.seconds)
+                            detector.observe(res.seconds)
                     else:
                         spec_results.append((i, res))
                 # straggler speculation: duplicate in-flight units running far
                 # beyond the median (idempotent — provenance picks one winner)
-                if self.workers > 1 and len(durations) >= 4:
-                    med = float(np.median(durations))
+                if self.workers > 1:
                     now = time.time()
                     for kind, i in list(inflight.values()):
                         if kind != "prim" or i in speculated or i not in starts:
                             continue
-                        elapsed = now - starts[i]
-                        if (elapsed > self.straggler_min_s
-                                and elapsed > self.straggler_factor * med):
+                        if detector.is_straggler(now - starts[i]):
                             speculated.add(i)
                             spec_queue.append(i)
                 dispatch()

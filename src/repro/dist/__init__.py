@@ -1,9 +1,13 @@
-"""Distribution layer: logical-axis sharding rules and compressed collectives."""
+"""Distribution layer: logical-axis sharding rules, compressed collectives,
+and the multi-node work-stealing executor (``cluster`` + ``queue``)."""
+from .cluster import ClusterRunner, ClusterStats, Node
+from .queue import Lease, WorkQueue
 from .sharding import (Rules, attn_shard_choice, constrain, constrain_residual,
                        constrain_params_gathered, current_rules, param_spec_for,
                        param_specs, shardings_for, tp_size, use_rules)
 
 __all__ = [
+    "ClusterRunner", "ClusterStats", "Node", "Lease", "WorkQueue",
     "Rules", "attn_shard_choice", "constrain", "constrain_residual",
     "constrain_params_gathered", "current_rules", "param_spec_for",
     "param_specs", "shardings_for", "tp_size", "use_rules",

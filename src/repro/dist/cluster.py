@@ -1,0 +1,304 @@
+"""Multi-node work-stealing executor: ``LocalRunner``'s stage graph
+(prefetch -> compute -> arbitrated commit) generalized across N nodes.
+
+The paper's burst path runs one pipelined executor per host; this module is
+the next rung — a cluster of :class:`Node` workers draining one
+:class:`~repro.dist.queue.WorkQueue` of work units:
+
+* **Per-node prefetch** — each node leases a small in-hand window of units
+  and verifies+loads their inputs (``sha256_load_array``, one read per byte)
+  on a loader thread while the current unit computes. Only *leased* units are
+  prefetched, so work-stealing never invalidates a node's prefetch.
+* **Work stealing** — a node that drains its deque steals the tail half of
+  the longest peer deque, keeping completion counts balanced under
+  heterogeneous node speeds (the paper's low-cost-hardware setting).
+* **Cross-node speculation** — the coordinator watches compute start times;
+  a unit running ``straggler_factor`` x the cluster-wide median gets a twin
+  lease on a *different* node. Twins race the primary through the same
+  idempotent atomic tmp+rename commit with exactly-one-ok-provenance
+  arbitration (``repro.core.workflow``), and every duplicate is reported as
+  ``status="speculative"`` so per-image counts stay exact.
+* **Heartbeats + lease reaping** — nodes heartbeat on a timer decoupled from
+  compute; when a node misses ``lease_ttl_s`` of heartbeats the coordinator
+  reaps it, requeuing its leased + queued units (lease epoch bumps) onto the
+  surviving nodes. A zombie that later commits anyway loses the commit
+  arbitration and surfaces as ``skipped``.
+
+Nodes here are threads sharing a filesystem root (in-process cluster), but
+every node<->coordinator interaction goes through the ``WorkQueue`` method
+surface, which is designed to become an RPC boundary: pointing the same node
+loop at a network-backed queue implementation is the intended transport
+follow-up (see ROADMAP).
+
+Failure model: fail-stop nodes (crash = heartbeat silence; no Byzantine
+nodes), shared storage survives node death, and commits are atomic. Under
+those assumptions every unit ends in exactly one committed ok provenance (or
+a terminal ``failed`` after per-node retries), no matter how many nodes die
+or how many twins race — see ``docs/cluster.md``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+import traceback
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
+from pathlib import Path
+from typing import Callable, Dict, List, Optional, Tuple
+
+from ..core.pipelines import Pipeline
+from ..core.query import WorkUnit
+from ..core.workflow import (StragglerDetector, UnitResult, dedupe_results,
+                             run_unit, run_unit_with_retries,
+                             safe_load_unit_inputs)
+from .queue import Lease, WorkQueue
+
+
+class Node:
+    """One thread-backed worker: lease -> prefetch -> compute -> record.
+
+    The worker thread is named after ``node_id`` so test fault hooks can
+    target a node via ``threading.current_thread().name``. :meth:`kill`
+    simulates a crash: the heartbeat stops immediately and no further unit is
+    started — in-hand leases die with the node and are reaped by the
+    coordinator. ``die_after=k`` self-crashes the node after recording ``k``
+    units (fault injection for dead-node requeue tests).
+    """
+
+    def __init__(self, node_id: str, queue: WorkQueue, pipeline: Pipeline,
+                 data_root: Path,
+                 record: Callable[[int, UnitResult, Lease], None], *,
+                 prefetch: int = 1, max_retries: int = 2,
+                 backoff_s: float = 0.05,
+                 fault_hook: Optional[Callable[[WorkUnit, int], None]] = None,
+                 hb_interval_s: float = 0.25, poll_s: float = 0.02,
+                 die_after: Optional[int] = None):
+        self.node_id = node_id
+        self.queue = queue
+        self.pipeline = pipeline
+        self.data_root = Path(data_root)
+        self.record = record
+        self.prefetch = max(0, int(prefetch))
+        self.max_retries = max_retries
+        self.backoff_s = backoff_s
+        self.fault_hook = fault_hook
+        self.hb_interval_s = hb_interval_s
+        self.poll_s = poll_s
+        self.die_after = die_after
+        self.killed = threading.Event()
+        self.processed = 0
+        self.crash: Optional[str] = None
+        self._loader = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix=f"{node_id}-loader")
+        self._worker = threading.Thread(
+            target=self._work, name=node_id, daemon=True)
+        self._hb = threading.Thread(
+            target=self._heartbeat, name=f"{node_id}-hb", daemon=True)
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def start(self):
+        self._worker.start()
+        self._hb.start()
+
+    def kill(self):
+        """Crash the node: heartbeat and compute stop, leases go down with it."""
+        self.killed.set()
+
+    def join(self, timeout: Optional[float] = None):
+        self._worker.join(timeout)
+
+    def is_alive(self) -> bool:
+        return self._worker.is_alive()
+
+    # -- stages -------------------------------------------------------------
+
+    def _heartbeat(self):
+        while not self.killed.is_set():
+            self.queue.heartbeat(self.node_id)
+            self.killed.wait(self.hb_interval_s)
+
+    def _safe_load(self, unit: WorkUnit):
+        return safe_load_unit_inputs(unit, self.data_root)
+
+    def _work(self):
+        inhand: deque = deque()            # [(unit, lease, load_future|None)]
+        try:
+            while not self.killed.is_set():
+                # top up the leased in-hand window; prefetch primary inputs
+                # (a speculative twin skips prefetch — it must start *now*)
+                while len(inhand) < 1 + self.prefetch:
+                    nxt = self.queue.next_unit(self.node_id)
+                    if nxt is None:
+                        break
+                    unit, lease = nxt
+                    fut = (None if lease.speculative
+                           else self._loader.submit(self._safe_load, unit))
+                    if lease.speculative:
+                        inhand.appendleft((unit, lease, fut))
+                    else:
+                        inhand.append((unit, lease, fut))
+                if not inhand:
+                    if self.queue.finished():
+                        break
+                    time.sleep(self.poll_s)
+                    continue
+                unit, lease, fut = inhand.popleft()
+                if self.killed.is_set():
+                    break
+                idx = lease.unit_idx
+                pre = fut.result() if fut is not None else None
+                # straggler clock starts at compute, not at the input load —
+                # a slow prefetch must not trigger spurious speculation
+                self.queue.mark_started(idx)
+                if lease.speculative:
+                    res = run_unit(unit, self.pipeline, self.data_root,
+                                   attempt=self.max_retries + 2,
+                                   fault_hook=self.fault_hook,
+                                   node_id=self.node_id,
+                                   lease_epoch=lease.epoch)
+                else:
+                    res = run_unit_with_retries(
+                        unit, self.pipeline, self.data_root,
+                        max_retries=self.max_retries,
+                        backoff_s=self.backoff_s, fault_hook=self.fault_hook,
+                        preloaded=pre, node_id=self.node_id,
+                        lease_epoch=lease.epoch)
+                self.processed += 1
+                self.record(idx, res, lease)
+                if self.die_after is not None and self.processed >= self.die_after:
+                    self.kill()
+        except Exception:  # noqa: BLE001 — a crashed node is a dead node
+            self.crash = traceback.format_exc(limit=5)
+            self.queue.mark_dead(self.node_id)
+        finally:
+            self._loader.shutdown(wait=False)
+
+
+@dataclasses.dataclass
+class ClusterStats:
+    """Per-run observability: what the control plane actually did."""
+    processed: Dict[str, int]
+    steals: Dict[str, int]
+    requeued: List[int]
+    speculated: int
+    dead_nodes: List[str]
+
+
+class ClusterRunner:
+    """Drive ``nodes`` in-process :class:`Node` workers over one unit list.
+
+    Same result contract as ``LocalRunner.run``: one result per unit with a
+    committed status, plus ``status="speculative"`` rows for every duplicate
+    (twins and zombie re-runs) so ok-counts are never inflated. After
+    :meth:`run`, :attr:`stats` holds steal/requeue/speculation counters.
+    """
+
+    def __init__(self, pipeline: Pipeline, data_root: Path, *,
+                 nodes: int = 4, prefetch: int = 1, max_retries: int = 2,
+                 backoff_s: float = 0.05, straggler_factor: float = 3.0,
+                 straggler_min_s: float = 0.5, lease_ttl_s: float = 2.0,
+                 hb_interval_s: float = 0.25, poll_s: float = 0.05,
+                 fault_hook: Optional[Callable[[WorkUnit, int], None]] = None,
+                 die_after: Optional[Dict[str, int]] = None):
+        if nodes < 1:
+            raise ValueError("need at least one node")
+        self.pipeline = pipeline
+        self.data_root = Path(data_root)
+        self.n_nodes = int(nodes)
+        self.prefetch = prefetch
+        self.max_retries = max_retries
+        self.backoff_s = backoff_s
+        self.straggler_factor = straggler_factor
+        self.straggler_min_s = straggler_min_s
+        self.lease_ttl_s = lease_ttl_s
+        self.hb_interval_s = hb_interval_s
+        self.poll_s = poll_s
+        self.fault_hook = fault_hook
+        self.die_after = dict(die_after or {})
+        self.stats: Optional[ClusterStats] = None
+        self.queue: Optional[WorkQueue] = None
+
+    def node_ids(self) -> List[str]:
+        return [f"node-{i}" for i in range(self.n_nodes)]
+
+    def run(self, units: List[WorkUnit]) -> List[UnitResult]:
+        if not units:
+            return []
+        node_ids = self.node_ids()
+        queue = WorkQueue(units, node_ids, lease_ttl_s=self.lease_ttl_s)
+        self.queue = queue
+        detector = StragglerDetector(self.straggler_factor,
+                                     self.straggler_min_s)
+        primaries: Dict[int, UnitResult] = {}
+        extras: List[Tuple[int, UnitResult]] = []
+        rec_lock = threading.Lock()
+
+        def record(idx: int, res: UnitResult, lease: Lease):
+            with rec_lock:
+                if lease.speculative or idx in primaries:
+                    extras.append((idx, res))
+                else:
+                    primaries[idx] = res
+                if res.status == "ok":
+                    detector.observe(res.seconds)
+            queue.complete(idx, lease.node_id, res.status,
+                           speculative=lease.speculative)
+
+        nodes = [Node(nid, queue, self.pipeline, self.data_root, record,
+                      prefetch=self.prefetch, max_retries=self.max_retries,
+                      backoff_s=self.backoff_s, fault_hook=self.fault_hook,
+                      hb_interval_s=self.hb_interval_s, poll_s=self.poll_s,
+                      die_after=self.die_after.get(nid))
+                 for nid in node_ids]
+        speculated: set = set()
+        for nd in nodes:
+            nd.start()
+        try:
+            while not queue.finished():
+                time.sleep(self.poll_s)
+                queue.reap()
+                alive = set(queue.alive_nodes())
+                if not alive and not queue.finished():
+                    raise RuntimeError(
+                        f"all nodes dead with {queue.pending()} units pending")
+                # cross-node straggler speculation: twin on a different node
+                now = time.time()
+                depths = queue.queue_depths()
+                for idx, t0, holder in queue.running():
+                    if idx in speculated or not detector.is_straggler(now - t0):
+                        continue
+                    targets = [n for n in alive if n != holder]
+                    if not targets:
+                        continue
+                    target = min(targets, key=lambda n: depths.get(n, 0))
+                    if queue.speculate(idx, target) is not None:
+                        speculated.add(idx)
+        finally:
+            for nd in nodes:
+                nd.kill()
+            for nd in nodes:
+                nd.join(timeout=5.0)
+        self.stats = ClusterStats(
+            processed={nd.node_id: nd.processed for nd in nodes},
+            steals=dict(queue.steals), requeued=list(queue.requeues),
+            speculated=len(speculated),
+            dead_nodes=[n for n in node_ids if n not in queue.alive_nodes()])
+        # fold: exactly one committed-status result per unit; a unit whose
+        # only finisher was a twin (primary died mid-flight) promotes it
+        pending_extras: List[Tuple[int, UnitResult]] = []
+        for idx, res in sorted(extras, key=lambda e: e[1].status != "ok"):
+            if idx not in primaries:
+                primaries[idx] = res
+            else:
+                pending_extras.append((idx, res))
+        if len(primaries) < len(units):
+            crashes = "; ".join(nd.crash for nd in nodes if nd.crash)
+            raise RuntimeError(
+                f"{len(units) - len(primaries)} unit(s) ended without a "
+                f"result{': ' + crashes if crashes else ''}")
+        order = sorted(primaries)
+        pos = {idx: p for p, idx in enumerate(order)}
+        return dedupe_results([primaries[idx] for idx in order],
+                              [(pos[idx], res) for idx, res in pending_extras])

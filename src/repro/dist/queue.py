@@ -1,0 +1,284 @@
+"""Shared work-unit queue with per-node leases, tail-stealing, and heartbeat
+reaping — the control plane of the multi-node executor (``repro.dist.cluster``).
+
+Protocol (see ``docs/cluster.md`` for the failure model):
+
+* **Partition** — units are dealt round-robin into one deque per node, so an
+  N-node cluster starts with balanced locality and zero coordination.
+* **Lease** — ``next_unit(node)`` pops the node's own deque head and grants a
+  :class:`Lease` carrying a per-unit **epoch** (bumped on every grant). The
+  epoch is stamped into the committed provenance, so a record tells apart a
+  first-run commit from a post-requeue re-run.
+* **Steal** — an idle node steals the *tail half* of the longest peer deque
+  (tails preserve the victim's head locality and any prefetch it has issued
+  for imminent units). Stealing moves only unleased entries; in-flight work
+  is never stolen, only speculated or reaped.
+* **Heartbeat + reap** — nodes heartbeat on a timer decoupled from compute
+  (a long unit must not look like a dead node). ``reap()`` declares nodes
+  whose heartbeat is older than ``lease_ttl_s`` dead, requeues their leased
+  units (epoch++) and redistributes their queued entries to the
+  least-loaded alive nodes. A reaped "zombie" that later finishes anyway is
+  harmless: the provenance commit arbitration admits exactly one ok record.
+* **Speculate** — ``speculate(idx, node)`` grants a *twin* lease on a
+  different node for a straggling unit; twins race the primary through the
+  same idempotent commit, and duplicates surface as ``status="speculative"``.
+
+Everything is guarded by one lock — the queue is the single shared-state
+object, designed so a network transport (each call becomes an RPC to the
+coordinator) can replace the in-process instance without touching nodes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+from ..core.query import WorkUnit
+
+
+@dataclasses.dataclass(frozen=True)
+class Lease:
+    """One node's exclusive (or, for twins, speculative) claim on a unit."""
+    unit_idx: int
+    node_id: str
+    epoch: int
+    granted_at: float
+    speculative: bool = False
+
+
+class WorkQueue:
+    """In-process coordinator state: per-node deques + leases + heartbeats.
+
+    Thread-safe; every public method takes the single internal lock. ``now``
+    is injectable for deterministic tests.
+    """
+
+    def __init__(self, units: Sequence[WorkUnit], node_ids: Sequence[str], *,
+                 lease_ttl_s: float = 2.0, now=time.time):
+        if not node_ids:
+            raise ValueError("WorkQueue needs at least one node")
+        self.units = list(units)
+        self.lease_ttl_s = float(lease_ttl_s)
+        self._now = now
+        self._lock = threading.Lock()
+        self._queues: Dict[str, Deque[int]] = {n: deque() for n in node_ids}
+        for i in range(len(self.units)):            # round-robin partition
+            self._queues[node_ids[i % len(node_ids)]].append(i)
+        self._epochs: Dict[int, int] = {i: 0 for i in range(len(self.units))}
+        self._leases: Dict[int, Lease] = {}          # primary lease per unit
+        self._spec: Dict[int, Lease] = {}            # at most one twin per unit
+        self._spec_queues: Dict[str, Deque[int]] = {n: deque() for n in node_ids}
+        self._started: Dict[int, float] = {}         # compute began (post-prefetch)
+        self._done: Dict[int, str] = {}              # unit idx -> terminal status
+        self._failed_pending: Dict[int, str] = {}    # primary failed, twin racing
+        self._heartbeats: Dict[str, float] = {n: now() for n in node_ids}
+        self._dead: set = set()
+        self.steals: Dict[str, int] = {n: 0 for n in node_ids}
+        self.requeues: List[int] = []                # reaped unit idxs (log)
+
+    # -- leasing ------------------------------------------------------------
+
+    def _grant(self, idx: int, node_id: str, speculative: bool) -> Lease:
+        self._epochs[idx] += 1
+        lease = Lease(idx, node_id, self._epochs[idx], self._now(),
+                      speculative=speculative)
+        (self._spec if speculative else self._leases)[idx] = lease
+        return lease
+
+    def next_unit(self, node_id: str) -> Optional[Tuple[WorkUnit, Lease]]:
+        """Lease the next unit for ``node_id``: own speculative work first,
+        then own deque head, then steal the tail half of the longest peer
+        deque. Returns ``None`` when no leasable work exists *right now*
+        (the node should re-poll until :meth:`finished`)."""
+        with self._lock:
+            if node_id in self._dead:
+                return None
+            sq = self._spec_queues[node_id]
+            while sq:
+                idx = sq.popleft()
+                if idx in self._done:
+                    self._spec.pop(idx, None)
+                    continue
+                return self.units[idx], self._spec[idx]
+            q = self._queues[node_id]
+            if not q:
+                self._steal_into(node_id)
+            while q:
+                idx = q.popleft()
+                if idx in self._done:
+                    continue
+                return self.units[idx], self._grant(idx, node_id, False)
+            return None
+
+    def _steal_into(self, thief: str):
+        victims = [(len(q), n) for n, q in self._queues.items()
+                   if n != thief and n not in self._dead and len(q)]
+        if not victims:
+            return
+        _, victim = max(victims)
+        vq = self._queues[victim]
+        k = max(1, len(vq) // 2)
+        grabbed = [vq.pop() for _ in range(k)]
+        # reverse: popping the tail reversed the order; keep victim's ordering
+        self._queues[thief].extend(reversed(grabbed))
+        self.steals[thief] += 1
+
+    def mark_started(self, idx: int):
+        """Compute (not prefetch) began — the straggler clock starts here."""
+        with self._lock:
+            self._started.setdefault(idx, self._now())
+
+    def complete(self, idx: int, node_id: str, status: str, *,
+                 speculative: bool = False):
+        """Record a terminal result for a lease.
+
+        Primary leases retire the unit on ``ok``/``skipped``; a terminal
+        ``failed`` (retries exhausted — same semantics as ``LocalRunner``)
+        retires it only when no speculative twin is still racing — otherwise
+        retirement is deferred so the twin's ok can still save the unit. A
+        twin retires the unit on ``ok``/``skipped``, and on ``failed`` only
+        settles a deferred primary failure (both racers lost). Results from
+        nodes already declared dead are ignored for retirement — their unit
+        was requeued, and the provenance commit arbitration already made any
+        late zombie write harmless — and late completions of already-done
+        units are no-ops."""
+        with self._lock:
+            if node_id in self._dead:
+                return
+            if speculative:
+                spec = self._spec.get(idx)
+                if spec is not None and spec.node_id == node_id:
+                    self._spec.pop(idx)
+                if idx in self._done:
+                    return
+                if status in ("ok", "skipped"):
+                    self._done[idx] = status
+                    self._started.pop(idx, None)
+                    self._failed_pending.pop(idx, None)
+                elif idx in self._failed_pending:
+                    self._done[idx] = self._failed_pending.pop(idx)
+                return
+            lease = self._leases.get(idx)
+            if lease is not None and lease.node_id == node_id:
+                self._leases.pop(idx)
+                self._started.pop(idx, None)
+            if idx in self._done:
+                return
+            if status == "failed" and idx in self._spec:
+                self._failed_pending[idx] = status   # twin still racing
+                return
+            self._done[idx] = status
+            self._failed_pending.pop(idx, None)
+
+    # -- speculation --------------------------------------------------------
+
+    def speculate(self, idx: int, node_id: str) -> Optional[Lease]:
+        """Queue a speculative twin of ``idx`` on ``node_id`` (must differ
+        from the primary lease holder; at most one twin per unit)."""
+        with self._lock:
+            lease = self._leases.get(idx)
+            if (idx in self._done or idx in self._spec or lease is None
+                    or lease.node_id == node_id or node_id in self._dead):
+                return None
+            twin = self._grant(idx, node_id, True)
+            self._spec_queues[node_id].append(idx)
+            return twin
+
+    def running(self) -> List[Tuple[int, float, str]]:
+        """Units in compute: (idx, started_at, node) for straggler checks."""
+        with self._lock:
+            return [(i, t0, self._leases[i].node_id)
+                    for i, t0 in self._started.items()
+                    if i not in self._done and i in self._leases]
+
+    # -- heartbeats + failure handling --------------------------------------
+
+    def heartbeat(self, node_id: str):
+        with self._lock:
+            if node_id not in self._dead:
+                self._heartbeats[node_id] = self._now()
+
+    def mark_dead(self, node_id: str):
+        """Explicit fail-fast path (e.g. a node's thread crashed)."""
+        with self._lock:
+            self._declare_dead(node_id)
+
+    def reap(self) -> List[int]:
+        """Declare heartbeat-expired nodes dead; requeue their leased units
+        (epoch bumps on re-grant) and redistribute their queued entries onto
+        the least-loaded alive nodes. Returns the requeued unit idxs."""
+        with self._lock:
+            now = self._now()
+            newly_dead = [n for n, hb in self._heartbeats.items()
+                          if n not in self._dead and now - hb > self.lease_ttl_s]
+            requeued: List[int] = []
+            for n in newly_dead:
+                requeued.extend(self._declare_dead(n))
+            return requeued
+
+    def _declare_dead(self, node_id: str) -> List[int]:
+        if node_id in self._dead:
+            return []
+        self._dead.add(node_id)
+        alive = [n for n in self._queues if n not in self._dead]
+        orphans: List[int] = []
+        # leased-but-unfinished units held by the dead node
+        for idx, lease in list(self._leases.items()):
+            if lease.node_id == node_id and idx not in self._done:
+                self._leases.pop(idx)
+                self._started.pop(idx, None)
+                orphans.append(idx)
+        # a twin on a dead node just evaporates — the primary still runs,
+        # unless the primary already failed and was waiting on this twin
+        for idx, lease in list(self._spec.items()):
+            if lease.node_id == node_id:
+                self._spec.pop(idx)
+                if idx in self._failed_pending and idx not in self._done:
+                    self._done[idx] = self._failed_pending.pop(idx)
+        self._spec_queues[node_id].clear()
+        # unleased entries still sitting in its deque
+        orphans.extend(i for i in self._queues[node_id] if i not in self._done)
+        self._queues[node_id].clear()
+        if alive:
+            for idx in orphans:
+                target = min(alive, key=lambda n: len(self._queues[n]))
+                # front of the queue: requeued work is the oldest work
+                self._queues[target].appendleft(idx)
+        self.requeues.extend(orphans)
+        return orphans
+
+    # -- introspection ------------------------------------------------------
+
+    def finished(self) -> bool:
+        with self._lock:
+            return len(self._done) == len(self.units)
+
+    def pending(self) -> int:
+        with self._lock:
+            return len(self.units) - len(self._done)
+
+    def alive_nodes(self) -> List[str]:
+        with self._lock:
+            return [n for n in self._queues if n not in self._dead]
+
+    def done_status(self) -> Dict[int, str]:
+        with self._lock:
+            return dict(self._done)
+
+    def queue_depths(self) -> Dict[str, int]:
+        with self._lock:
+            return {n: len(q) for n, q in self._queues.items()}
+
+    def active_leases(self) -> Dict[str, str]:
+        """``job_id -> node_id`` for every in-flight lease (primary + twin) —
+        the view :func:`repro.core.query.query_available_work` consumes to
+        avoid double-submitting leased sessions."""
+        with self._lock:
+            out = {self.units[i].job_id: l.node_id
+                   for i, l in self._leases.items() if i not in self._done}
+            for i, l in self._spec.items():
+                if i not in self._done:
+                    out.setdefault(self.units[i].job_id, l.node_id)
+            return out

@@ -1,0 +1,73 @@
+"""Shared body of the distributed-executor safety invariant, used by the
+hypothesis property test (random parameters) and by a deterministic sweep in
+``test_cluster.py`` (so the invariant still runs where hypothesis is absent).
+"""
+import json
+import tempfile
+import threading
+from pathlib import Path
+
+import numpy as np
+
+
+def check_cluster_invariant(n_subjects: int, sessions: int, nodes: int,
+                            flaky: bool, die: int):
+    """For the given unit list / node count / injected failures: every unit
+    must end with exactly one committed ok provenance, and a concurrent
+    reader must never observe a partial output file or torn provenance."""
+    from repro.core import (Provenance, builtin_pipelines,
+                            query_available_work, synthesize_dataset)
+    from repro.dist import ClusterRunner
+
+    with tempfile.TemporaryDirectory() as td:
+        ds = synthesize_dataset(Path(td), "prop", n_subjects=n_subjects,
+                                sessions_per_subject=sessions, shape=(6, 6, 6),
+                                seed=n_subjects * 10 + sessions)
+        pipe = builtin_pipelines()["bias_correct"]
+        units, _ = query_available_work(ds, pipe)
+        deriv = Path(ds.root) / "derivatives"
+
+        violations = []
+        stop = threading.Event()
+
+        def watcher():
+            # any visible output must always be whole: loadable .npy, valid
+            # JSON provenance (atomic tmp+rename keeps dot-tmps invisible)
+            while not stop.is_set():
+                for p in list(deriv.rglob("*")) if deriv.exists() else []:
+                    try:
+                        if p.name == "provenance.json":
+                            json.loads(p.read_text())
+                        elif p.suffix == ".npy":
+                            np.load(p, allow_pickle=False)
+                    except FileNotFoundError:
+                        pass               # completed+renamed mid-scan: fine
+                    except Exception as e:  # noqa: BLE001
+                        violations.append(f"{p}: {type(e).__name__}: {e}")
+
+        def fault(unit, attempt):
+            if flaky and attempt == 1:
+                raise RuntimeError("transient")
+
+        die_after = {f"node-{die % nodes}": 1} if nodes > 1 else {}
+        w = threading.Thread(target=watcher, daemon=True)
+        w.start()
+        try:
+            runner = ClusterRunner(pipe, ds.root, nodes=nodes,
+                                   fault_hook=fault, die_after=die_after,
+                                   lease_ttl_s=0.4, hb_interval_s=0.1,
+                                   straggler_factor=100.0, poll_s=0.02)
+            results = runner.run(units)
+        finally:
+            stop.set()
+            w.join(timeout=5)
+
+        assert violations == []
+        assert sum(r.status == "ok" for r in results) == len(units)
+        ok_ids = [r.unit.job_id for r in results if r.status == "ok"]
+        assert len(ok_ids) == len(set(ok_ids))
+        for u in units:
+            prov = Provenance.load(Path(u.out_dir))
+            assert prov is not None and prov.status == "ok"
+            assert prov.pipeline_digest == pipe.digest()
+        assert not list(deriv.rglob("*.tmp-*"))      # all commits atomic

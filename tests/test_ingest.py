@@ -56,3 +56,84 @@ def test_ingested_dataset_flows_into_workflow(raw_dir, tmp_path):
     pipe = builtin_pipelines()["bias_correct"]
     work, excluded = query_available_work(manifest, pipe)
     assert len(work) == 2
+
+
+# ---------------------------------------------------------------------------
+# fused QA+checksum at ingest scale: mixed shape-buckets vs the numpy oracle
+# ---------------------------------------------------------------------------
+
+def test_qa_checksum_batched_mixed_shape_buckets_bit_exact():
+    """Ingest-scale batching: volumes arrive in mixed shapes; each shape
+    bucket goes through ONE ``qa_checksum_batched`` call. Every bucket must
+    agree bit-exactly with the numpy oracle, and each row must equal the
+    unbatched kernel on that volume (so bucketing never changes results)."""
+    import jax.numpy as jnp
+    from repro.kernels.checksum import (qa_checksum, qa_checksum_batched,
+                                        qa_checksum_batched_ref)
+
+    rng = np.random.default_rng(7)
+    volumes = (
+        [rng.normal(100, 20, (16, 16, 16)).astype(np.float32) for _ in range(3)]
+        + [rng.normal(50, 9, (12, 12, 8)).astype(np.float32) for _ in range(4)]
+        + [rng.normal(0, 1, (7, 5)).astype(np.float32) for _ in range(2)]
+    )
+    # NaN/Inf volumes exercise finite_count and the finite-only min/max/sum
+    volumes[1] = volumes[1].copy()
+    volumes[1][0, 0, 0] = np.nan
+    volumes[4] = volumes[4].copy()
+    volumes[4][3, 2, 1] = np.inf
+    volumes[4][0, 1, 0] = -np.inf
+
+    buckets = {}
+    for v in volumes:
+        buckets.setdefault(v.shape, []).append(v)
+    assert len(buckets) == 3                         # genuinely mixed shapes
+
+    for shape, vols in buckets.items():
+        batch = np.stack(vols)
+        got = qa_checksum_batched(jnp.asarray(batch), interpret=True)
+        ref = qa_checksum_batched_ref(batch)
+        for a, b in zip(got, ref):
+            a = np.asarray(a)
+            assert a.dtype == b.dtype
+            assert np.array_equal(a, b, equal_nan=True), (shape, a, b)
+        # row-wise: bucketed result == unbatched kernel per volume
+        for i, v in enumerate(vols):
+            s, q, c = qa_checksum(jnp.asarray(v), interpret=True)
+            assert np.array_equal(np.asarray(s), np.asarray(got[0][i]))
+            assert np.array_equal(np.asarray(q), np.asarray(got[1][i]),
+                                  equal_nan=True)
+            assert np.array_equal(np.asarray(c), np.asarray(got[2][i]))
+
+
+def test_qa_checksum_batched_counts_nonfinite_voxels():
+    """finite_count drives the ingest QA gate: it must count exactly the
+    finite voxels of each volume in the bucket."""
+    import jax.numpy as jnp
+    from repro.kernels.checksum import qa_checksum_batched
+
+    rng = np.random.default_rng(3)
+    batch = rng.normal(0, 1, (4, 10, 10)).astype(np.float32)
+    batch[1, 0, 0] = np.nan
+    batch[2, 3, 3] = np.inf
+    batch[2, 4, 4] = -np.inf
+    batch[3] = np.nan                                # fully non-finite volume
+    _, qa, cnt = qa_checksum_batched(jnp.asarray(batch), interpret=True)
+    cnt = np.asarray(cnt)[:, 0]
+    assert cnt.tolist() == [100, 99, 98, 0]
+    qa = np.asarray(qa)
+    assert qa[3, 0] == np.inf and qa[3, 1] == -np.inf   # empty-finite min/max
+    assert qa[3, 2] == 0.0
+
+
+def test_ingest_device_qa_uses_checksum_consistently(tmp_path):
+    """device_qa ingest records carry the fused checksum; re-ingesting the
+    same bytes reproduces it (content-derived, not run-derived)."""
+    rng = np.random.default_rng(0)
+    d = tmp_path / "raw"
+    vol = rng.normal(100, 20, (16, 16, 16)).astype(np.float32)
+    write_raw_dump(d / "a.npz", vol, subject="001", session="01",
+                   protocol="T1w")
+    _, rec1 = ingest_directory(d, tmp_path / "b1", "s", device_qa=True)
+    _, rec2 = ingest_directory(d, tmp_path / "b2", "s", device_qa=True)
+    assert rec1[0].checksum and rec1[0].checksum == rec2[0].checksum

@@ -88,6 +88,21 @@ def test_split_computations_basic():
     assert set(comps) == {"comp_a", "main"}
 
 
+@given(n_subjects=st.integers(1, 4), sessions=st.integers(1, 2),
+       nodes=st.integers(1, 3), flaky=st.booleans(),
+       die=st.integers(0, 3))
+@settings(max_examples=8, deadline=None)
+def test_cluster_exactly_one_ok_provenance_and_no_torn_files(
+        n_subjects, sessions, nodes, flaky, die):
+    """Distributed-executor invariant: for random unit lists, node counts and
+    injected failures (transient faults + one node death), every unit ends
+    with exactly one committed ok provenance, and a concurrent reader NEVER
+    observes a partial output file or torn provenance (atomic tmp+rename).
+    Body shared with the deterministic sweep in test_cluster.py."""
+    from cluster_invariant import check_cluster_invariant
+    check_cluster_invariant(n_subjects, sessions, nodes, flaky, die)
+
+
 @given(st.integers(2, 16), st.integers(2, 8), st.integers(2, 8))
 @settings(max_examples=10, deadline=None)
 def test_moe_dispatch_conservation(S, E, C):
