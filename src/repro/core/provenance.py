@@ -33,6 +33,12 @@ class Provenance:
     # first-run commit from a post-node-death re-run years later.
     node_id: str = ""
     lease_epoch: int = 0
+    # True iff every input array was served from the host's content-addressed
+    # input cache (repro.dist.cache) instead of shared storage. The input
+    # checksums recorded above are identical either way (a cache hit re-hashes
+    # the local bytes), so this flag is pure data-plane provenance: it lets a
+    # reader audit which commits never touched the storage link.
+    cache_hit: bool = False
 
     def save(self, out_dir: Path):
         """Atomic write (tmp + rename): a concurrent reader — or a racing
@@ -57,13 +63,15 @@ class Provenance:
 def make_provenance(pipeline: str, digest: str, inputs: Dict[str, str],
                     outputs: Dict[str, str], started: float, status: str = "ok",
                     error: Optional[str] = None, attempt: int = 1,
-                    node_id: str = "", lease_epoch: int = 0) -> Provenance:
+                    node_id: str = "", lease_epoch: int = 0,
+                    cache_hit: bool = False) -> Provenance:
     return Provenance(
         pipeline=pipeline, pipeline_digest=digest,
         user=getpass.getuser(), host=platform.node(),
         started_at=started, finished_at=time.time(),
         inputs=inputs, outputs=outputs, status=status, error=error,
-        attempt=attempt, node_id=node_id, lease_epoch=lease_epoch)
+        attempt=attempt, node_id=node_id, lease_epoch=lease_epoch,
+        cache_hit=cache_hit)
 
 
 def is_complete(out_dir: Path, digest: Optional[str] = None) -> bool:

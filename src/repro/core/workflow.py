@@ -150,29 +150,42 @@ def _commit_lock(out_dir: Path) -> _DirLock:
         return holder
 
 
-LoadedInputs = Tuple[Dict[str, np.ndarray], Dict[str, str]]
+# (inputs by suffix, rel-path -> sha256, every input served from host cache)
+LoadedInputs = Tuple[Dict[str, np.ndarray], Dict[str, str], bool]
 
 
-def load_unit_inputs(unit: WorkUnit, data_root: Path) -> LoadedInputs:
+def load_unit_inputs(unit: WorkUnit, data_root: Path,
+                     cache=None) -> LoadedInputs:
     """Verify-and-load a unit's inputs with one read per file: each array is
     hashed from the same bytes it is deserialized from (no sha256_file +
-    np.load double-read). This is the prefetch stage of the executor."""
+    np.load double-read). This is the prefetch stage of the executor.
+
+    ``cache`` (a :class:`repro.dist.cache.InputCache`) serves inputs whose
+    bytes are already on the host's local disk instead of re-reading shared
+    storage; the returned digests are identical either way. The third element
+    of the result is True iff *every* input came from the cache — stamped
+    into provenance as ``cache_hit``."""
     data_root = Path(data_root)
     inputs: Dict[str, np.ndarray] = {}
     in_sums: Dict[str, str] = {}
+    hits = 0
     for suffix, rel in unit.inputs.items():
-        arr, digest = sha256_load_array(data_root / rel)
+        if cache is not None:
+            arr, digest, hit = cache.fetch_array(data_root / rel)
+            hits += bool(hit)
+        else:
+            arr, digest = sha256_load_array(data_root / rel)
         in_sums[rel] = digest
         inputs[suffix] = arr
-    return inputs, in_sums
+    return inputs, in_sums, bool(unit.inputs) and hits == len(unit.inputs)
 
 
-def safe_load_unit_inputs(unit: WorkUnit, data_root: Path
-                          ) -> Optional[LoadedInputs]:
+def safe_load_unit_inputs(unit: WorkUnit, data_root: Path,
+                          cache=None) -> Optional[LoadedInputs]:
     """Prefetch-stage wrapper shared by both executors: a failed load returns
     ``None`` so the compute stage reloads and raises with full context."""
     try:
-        return load_unit_inputs(unit, data_root)
+        return load_unit_inputs(unit, data_root, cache=cache)
     except Exception:  # noqa: BLE001 — the compute stage re-raises properly
         return None
 
@@ -181,7 +194,8 @@ def run_unit(unit: WorkUnit, pipeline: Pipeline, data_root: Path,
              attempt: int = 1,
              fault_hook: Optional[Callable[[WorkUnit, int], None]] = None,
              preloaded: Optional[LoadedInputs] = None,
-             node_id: str = "", lease_epoch: int = 0) -> UnitResult:
+             node_id: str = "", lease_epoch: int = 0,
+             cache=None) -> UnitResult:
     """Execute one work unit: verify inputs, run, write outputs + provenance.
 
     ``preloaded`` short-circuits the input stage with already verified+loaded
@@ -190,7 +204,9 @@ def run_unit(unit: WorkUnit, pipeline: Pipeline, data_root: Path,
     ``is_complete`` re-check, so a racing duplicate commits exactly once; the
     loser returns ``skipped``. ``node_id``/``lease_epoch`` stamp the committed
     provenance when the unit runs under a cluster lease
-    (:mod:`repro.dist.cluster`).
+    (:mod:`repro.dist.cluster`); ``cache`` serves the input stage from the
+    host's content-addressed cache and stamps ``cache_hit`` when every input
+    avoided shared storage.
     """
     t0 = time.time()
     data_root = Path(data_root)
@@ -201,9 +217,10 @@ def run_unit(unit: WorkUnit, pipeline: Pipeline, data_root: Path,
         if fault_hook is not None:
             fault_hook(unit, attempt)       # test hook: injected node failures
         if preloaded is not None:
-            inputs, in_sums = preloaded
+            inputs, in_sums, cache_hit = preloaded
         else:
-            inputs, in_sums = load_unit_inputs(unit, data_root)
+            inputs, in_sums, cache_hit = load_unit_inputs(unit, data_root,
+                                                          cache=cache)
         outputs = pipeline.run(inputs)
         out_sums = {}
         out_dir.mkdir(parents=True, exist_ok=True)
@@ -216,7 +233,8 @@ def run_unit(unit: WorkUnit, pipeline: Pipeline, data_root: Path,
                 return UnitResult(unit, "skipped", time.time() - t0, attempt)
             make_provenance(unit.pipeline, unit.pipeline_digest, in_sums,
                             out_sums, t0, attempt=attempt, node_id=node_id,
-                            lease_epoch=lease_epoch).save(out_dir)
+                            lease_epoch=lease_epoch,
+                            cache_hit=cache_hit).save(out_dir)
         return UnitResult(unit, "ok", time.time() - t0, attempt)
     except Exception as e:  # noqa: BLE001 — recorded, retried by the runner
         holder = _commit_lock(out_dir)
@@ -236,17 +254,19 @@ def run_unit_with_retries(
         max_retries: int = 2, backoff_s: float = 0.05,
         fault_hook: Optional[Callable[[WorkUnit, int], None]] = None,
         preloaded: Optional[LoadedInputs] = None,
-        node_id: str = "", lease_epoch: int = 0) -> UnitResult:
+        node_id: str = "", lease_epoch: int = 0, cache=None) -> UnitResult:
     """The executor retry stage, shared by :class:`LocalRunner` workers and
     cluster nodes: run a unit up to ``max_retries + 1`` times with exponential
-    backoff. Prefetched inputs are only trusted on the first attempt — a
-    retry re-verifies from storage (the failure may have been a torn read)."""
+    backoff. Prefetched inputs — and the host input cache — are only trusted
+    on the first attempt: a retry re-verifies from storage (the failure may
+    have been a torn read that the cache would otherwise replay)."""
     res = None
     for attempt in range(1, max_retries + 2):
         res = run_unit(unit, pipeline, data_root, attempt=attempt,
                        fault_hook=fault_hook,
                        preloaded=preloaded if attempt == 1 else None,
-                       node_id=node_id, lease_epoch=lease_epoch)
+                       node_id=node_id, lease_epoch=lease_epoch,
+                       cache=cache if attempt == 1 else None)
         if res.status in ("ok", "skipped"):
             break
         if attempt <= max_retries:          # no dead sleep after the last try

@@ -1,6 +1,9 @@
 """Distribution layer: logical-axis sharding rules, compressed collectives,
-and the multi-node work-stealing executor (``cluster`` + ``queue``)."""
-from .cluster import ClusterRunner, ClusterStats, Node
+the multi-node work-stealing executor (``cluster`` + ``queue``), its socket
+transport (``rpc``), and the per-host content-addressed input cache
+(``cache``)."""
+from .cache import InputCache, cache_from_env
+from .cluster import ClusterRunner, ClusterStats, Node, run_worker
 from .queue import Lease, WorkQueue
 from .sharding import (Rules, attn_shard_choice, constrain, constrain_residual,
                        constrain_params_gathered, current_rules, param_spec_for,
@@ -8,7 +11,17 @@ from .sharding import (Rules, attn_shard_choice, constrain, constrain_residual,
 
 __all__ = [
     "ClusterRunner", "ClusterStats", "Node", "Lease", "WorkQueue",
+    "InputCache", "cache_from_env", "QueueClient", "QueueServer", "run_worker",
     "Rules", "attn_shard_choice", "constrain", "constrain_residual",
     "constrain_params_gathered", "current_rules", "param_spec_for",
     "param_specs", "shardings_for", "tp_size", "use_rules",
 ]
+
+
+def __getattr__(name):
+    # rpc is loaded lazily so `python -m repro.dist.rpc` (the worker/server
+    # CLI) doesn't trip runpy's found-in-sys.modules warning
+    if name in ("QueueClient", "QueueServer"):
+        from . import rpc
+        return getattr(rpc, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

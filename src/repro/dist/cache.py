@@ -1,0 +1,248 @@
+"""Per-host content-addressed input cache for the cluster data plane.
+
+The paper's cost argument rests on keeping storage->compute transfer fast
+(0.60 Gb/s over the lab network vs 0.33 Gb/s from cloud storage); once nodes
+are real machines behind ``repro.dist.rpc``, every input fetch crosses that
+link. This cache makes repeated fetches free: a work unit whose inputs were
+already pulled by *any* prior lease on the host — a retried unit, a stolen
+unit whose neighbour shares a subject, a speculative twin — hits node-local
+disk instead of shared storage.
+
+Design:
+
+* **Content-addressed blobs.** A cached file is stored once under the sha256
+  of its bytes (``<cache>/blobs/<digest>``), so two source paths with equal
+  content share one blob, and the digest a hit returns is byte-for-byte the
+  digest the provenance records (``inputs: path -> sha256``).
+* **Source index.** Lookups key on ``abspath:size:mtime_ns`` of the shared-
+  storage file — anything cheaper than reading the bytes — mapping to the
+  content digest. A source file whose rewrite changes its size or mtime
+  gets a new key, so its stale blob is never served (the old blob ages out
+  via LRU). The residual window is a same-size in-place rewrite within the
+  storage filesystem's mtime granularity (coarse on NFS/FAT) — served bytes
+  still match the *recorded* checksum, so provenance stays self-consistent,
+  but archive-discipline (no in-place mutation of inputs) is what rules the
+  window out; see the caveat in ``docs/operating.md``.
+* **Verified hits.** A hit re-hashes the local bytes and falls back to a
+  miss (dropping the blob) on mismatch — a corrupted cache degrades to
+  shared-storage reads, never to wrong data. One read per byte either way,
+  the same single-pass discipline as :mod:`repro.core.integrity`.
+* **Size-bounded LRU.** Total blob bytes are capped at ``max_bytes``;
+  inserting past the cap evicts least-recently-used blobs. The source index
+  persists as an append-only JSON-lines journal (O(1) per insert; compacted
+  atomically on eviction, torn tail lines skipped on load) so a restarted
+  worker re-uses the host's warm cache.
+
+Thread-safe: one lock guards index + LRU state; nodes sharing a host (and a
+cache dir) within a process share one :class:`InputCache`. Cross-process
+sharing of a cache dir is safe for blobs (content-addressed, atomically
+committed) with last-writer-wins on the index — the loser's entries are
+re-fetched, never corrupted.
+"""
+from __future__ import annotations
+
+import hashlib
+import io
+import json
+import os
+import threading
+from collections import OrderedDict
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.integrity import atomic_write_bytes
+
+# Runbook knobs (docs/operating.md): where the host cache lives and how big
+# it may grow. Read by the worker CLI (repro.dist.rpc) and ClusterRunner.
+CACHE_DIR_ENV = "REPRO_CACHE_DIR"
+CACHE_MAX_MB_ENV = "REPRO_CACHE_MAX_MB"
+DEFAULT_MAX_BYTES = 1 << 30          # 1 GiB per host
+
+
+def cache_from_env(default_dir: Optional[Path] = None) -> Optional["InputCache"]:
+    """Build an :class:`InputCache` from the runbook env knobs; ``None`` when
+    no cache dir is configured (cold path: every fetch hits shared storage)."""
+    root = os.environ.get(CACHE_DIR_ENV) or default_dir
+    if not root:
+        return None
+    max_mb = os.environ.get(CACHE_MAX_MB_ENV)
+    max_bytes = int(float(max_mb) * 2**20) if max_mb else DEFAULT_MAX_BYTES
+    if max_bytes <= 0:
+        return None                  # a zero budget means "no cache", not a crash
+    return InputCache(Path(root), max_bytes=max_bytes)
+
+
+class InputCache:
+    """sha256-keyed, size-bounded LRU blob cache on node-local disk."""
+
+    def __init__(self, root: Path, *, max_bytes: int = DEFAULT_MAX_BYTES):
+        if max_bytes <= 0:
+            raise ValueError("max_bytes must be positive")
+        self.root = Path(root)
+        self.blob_dir = self.root / "blobs"
+        self.blob_dir.mkdir(parents=True, exist_ok=True)
+        self.max_bytes = int(max_bytes)
+        self._lock = threading.Lock()
+        self._index: Dict[str, str] = {}              # source key -> digest
+        self._blobs: "OrderedDict[str, int]" = OrderedDict()  # digest -> bytes (LRU)
+        self._total = 0                               # running blob byte total
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self._load_persisted()
+
+    # -- persistence ---------------------------------------------------------
+    # append-only JSON-lines journal: O(1) write per insert (a full-index
+    # rewrite per miss would make cold runs O(n^2)), last entry per key wins
+    # on load, compacted to the live set whenever eviction shrinks it
+
+    def _index_path(self) -> Path:
+        return self.root / "index.jsonl"
+
+    def _load_persisted(self):
+        """Adopt blobs + index left by a previous worker on this host."""
+        persisted: Dict[str, str] = {}
+        try:
+            for line in self._index_path().read_text().splitlines():
+                try:
+                    entry = json.loads(line)
+                    persisted[entry["k"]] = entry["d"]
+                except (json.JSONDecodeError, KeyError, TypeError):
+                    continue             # torn tail line from a crash: skip
+        except OSError:
+            pass
+        found = []
+        for p in self.blob_dir.iterdir():
+            if p.name.startswith("."):           # in-flight atomic-write tmps
+                continue
+            try:                                 # concurrent evict/rename race
+                st = p.stat()
+            except OSError:
+                continue
+            found.append((st.st_mtime, p.name, st.st_size))
+        for _, name, size in sorted(found):      # oldest first = LRU order
+            self._blobs[name] = size
+        self._total = sum(self._blobs.values())
+        self._index = {k: d for k, d in persisted.items() if d in self._blobs}
+
+    def _append_index(self, key: str, digest: str):
+        with open(self._index_path(), "a") as f:
+            f.write(json.dumps({"k": key, "d": digest}) + "\n")
+
+    def _compact_index(self):
+        lines = "".join(json.dumps({"k": k, "d": d}) + "\n"
+                        for k, d in self._index.items())
+        atomic_write_bytes(self._index_path(), lines.encode(), fsync=False)
+
+    # -- core ----------------------------------------------------------------
+
+    @staticmethod
+    def _source_key(path: Path) -> Optional[str]:
+        try:
+            st = os.stat(path)
+        except OSError:
+            return None
+        return f"{os.path.abspath(path)}:{st.st_size}:{st.st_mtime_ns}"
+
+    def _blob_path(self, digest: str) -> Path:
+        return self.blob_dir / digest
+
+    def _evict_to_budget(self, evicted_out: List[str]) -> bool:
+        """Caller holds the lock. Drops LRU entries from the in-memory state
+        and appends their digests to ``evicted_out`` — the caller unlinks the
+        files *after* releasing the lock (disk I/O never blocks peers)."""
+        evicted = False
+        while self._blobs and self._total > self.max_bytes:
+            digest, size = self._blobs.popitem(last=False)    # LRU
+            self._total -= size
+            evicted_out.append(digest)
+            self.evictions += 1
+            evicted = True
+        if evicted:
+            live = set(self._blobs)
+            self._index = {k: d for k, d in self._index.items() if d in live}
+        return evicted
+
+    def fetch_array(self, src: Path) -> Tuple[np.ndarray, str, bool]:
+        """Load the .npy at ``src``, serving from the host cache when its
+        bytes are already local. Returns ``(array, sha256, cache_hit)`` —
+        the digest is of the file content either way, so provenance input
+        checksums are identical on hit and miss. A miss reads shared storage
+        once and inserts the bytes (then evicts down to ``max_bytes``)."""
+        src = Path(src)
+        key = self._source_key(src)
+        with self._lock:
+            digest = self._index.get(key) if key else None
+            blob = self._blob_path(digest) if digest else None
+        if digest is not None:
+            try:
+                data = blob.read_bytes()
+            except OSError:
+                data = None
+            if data is not None and hashlib.sha256(data).hexdigest() == digest:
+                with self._lock:
+                    if digest in self._blobs:
+                        self._blobs.move_to_end(digest)       # LRU touch
+                    self.hits += 1
+                return (np.load(io.BytesIO(data), allow_pickle=False),
+                        digest, True)
+            with self._lock:                # corrupt or vanished blob: drop it
+                size = self._blobs.pop(digest, None)
+                if size is not None:
+                    self._total -= size
+                self._blob_path(digest).unlink(missing_ok=True)
+                self._index = {k: d for k, d in self._index.items()
+                               if d != digest}
+        # miss: one read of shared storage, hash the same bytes, then insert
+        data = src.read_bytes()
+        digest = hashlib.sha256(data).hexdigest()
+        arr = np.load(io.BytesIO(data), allow_pickle=False)
+        if len(data) > self.max_bytes:
+            # an input bigger than the whole budget can never be served
+            # later; inserting it would wipe every warm blob on the host
+            # (and re-wipe on each fetch) for nothing — pass it through
+            with self._lock:
+                self.misses += 1
+            return arr, digest, False
+        with self._lock:
+            known = digest in self._blobs
+        if not known:
+            # the multi-MB blob write happens OUTSIDE the lock — it must not
+            # serialize the other prefetch threads' fetches. Content
+            # addressing + atomic rename make a racing duplicate writer
+            # idempotent (same bytes, last rename wins).
+            atomic_write_bytes(self._blob_path(digest), data, fsync=False)
+        evict: List[str] = []
+        with self._lock:
+            self.misses += 1
+            if digest not in self._blobs:
+                self._total += len(data)
+            self._blobs[digest] = len(data)
+            self._blobs.move_to_end(digest)
+            if key:
+                self._index[key] = digest
+            if self._evict_to_budget(evict):
+                self._compact_index()
+            elif key:
+                self._append_index(key, digest)
+        for d in evict:                          # unlinks, after the lock
+            self._blob_path(d).unlink(missing_ok=True)
+        return arr, digest, False
+
+    # -- introspection -------------------------------------------------------
+
+    def total_bytes(self) -> int:
+        with self._lock:
+            return self._total
+
+    def blob_count(self) -> int:
+        with self._lock:
+            return len(self._blobs)
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions,
+                    "bytes": self._total, "blobs": len(self._blobs)}

@@ -24,11 +24,18 @@ the next rung — a cluster of :class:`Node` workers draining one
   surviving nodes. A zombie that later commits anyway loses the commit
   arbitration and surfaces as ``skipped``.
 
-Nodes here are threads sharing a filesystem root (in-process cluster), but
-every node<->coordinator interaction goes through the ``WorkQueue`` method
-surface, which is designed to become an RPC boundary: pointing the same node
-loop at a network-backed queue implementation is the intended transport
-follow-up (see ROADMAP).
+Every node<->coordinator interaction goes through the ``WorkQueue`` method
+surface, which *is* an RPC boundary: with ``transport="rpc"`` the
+coordinator serves its queue over ``repro.dist.rpc`` and every local
+:class:`Node` talks to it through a :class:`~repro.dist.rpc.QueueClient`
+socket — and worker processes on other hosts join the same queue via
+:func:`run_worker` (or ``python -m repro.dist.rpc work``), register
+themselves, steal work, and commit to shared storage. Their results flow
+back as ``complete(meta=...)`` payloads and are folded into the
+coordinator's result list from ``results_snapshot()``. Long-haul leases stay
+alive through the node heartbeat thread's **renewal loop** (``renew`` per
+held lease), and each host serves repeated inputs from its content-addressed
+:class:`~repro.dist.cache.InputCache` instead of shared storage.
 
 Failure model: fail-stop nodes (crash = heartbeat silence; no Byzantine
 nodes), shared storage survives node death, and commits are atomic. Under
@@ -52,7 +59,21 @@ from ..core.query import WorkUnit
 from ..core.workflow import (StragglerDetector, UnitResult, dedupe_results,
                              run_unit, run_unit_with_retries,
                              safe_load_unit_inputs)
+from .cache import InputCache, cache_from_env
 from .queue import Lease, WorkQueue
+
+
+def result_meta(res: UnitResult) -> dict:
+    """JSON-safe result payload attached to ``complete`` so coordinators in
+    other processes can rebuild a :class:`UnitResult` (sans the unit object,
+    which both sides already hold by index)."""
+    return {"seconds": res.seconds, "attempts": res.attempts,
+            "error": res.error}
+
+
+def _meta_result(unit: WorkUnit, m: dict) -> UnitResult:
+    return UnitResult(unit, m["status"], m.get("seconds", 0.0),
+                      m.get("attempts", 1), m.get("error"))
 
 
 class Node:
@@ -73,7 +94,8 @@ class Node:
                  backoff_s: float = 0.05,
                  fault_hook: Optional[Callable[[WorkUnit, int], None]] = None,
                  hb_interval_s: float = 0.25, poll_s: float = 0.02,
-                 die_after: Optional[int] = None):
+                 die_after: Optional[int] = None,
+                 cache: Optional[InputCache] = None, renew: bool = True):
         self.node_id = node_id
         self.queue = queue
         self.pipeline = pipeline
@@ -86,9 +108,14 @@ class Node:
         self.hb_interval_s = hb_interval_s
         self.poll_s = poll_s
         self.die_after = die_after
+        self.cache = cache
+        self.renew = renew
         self.killed = threading.Event()
         self.processed = 0
+        self.lease_lost = 0                  # renewals rejected (stale epoch)
         self.crash: Optional[str] = None
+        self._held: set = set()              # (unit_idx, epoch) in-hand leases
+        self._held_lock = threading.Lock()
         self._loader = ThreadPoolExecutor(
             max_workers=1, thread_name_prefix=f"{node_id}-loader")
         self._worker = threading.Thread(
@@ -115,12 +142,39 @@ class Node:
     # -- stages -------------------------------------------------------------
 
     def _heartbeat(self):
+        """Node-level heartbeat plus the lease renewal loop: every interval,
+        re-assert liveness and renew each in-hand lease. A rejected renewal
+        (the coordinator reaped us or re-granted the unit — WAN-scale TTLs
+        make this routine) is counted and the stale lease dropped from the
+        renew set; the unit itself still runs to completion, where commit
+        arbitration makes the zombie write harmless."""
         while not self.killed.is_set():
-            self.queue.heartbeat(self.node_id)
-            self.killed.wait(self.hb_interval_s)
+            try:
+                self.queue.heartbeat(self.node_id)
+                if self.renew:
+                    with self._held_lock:
+                        held = list(self._held)
+                    for idx, epoch in held:
+                        if self.killed.is_set():
+                            break
+                        with self._held_lock:
+                            if (idx, epoch) not in self._held:
+                                continue     # completed since the snapshot
+                        if not self.queue.renew(idx, self.node_id, epoch):
+                            with self._held_lock:
+                                # only a lease we still hold counts as lost —
+                                # a renew losing the race with its own unit's
+                                # completion is routine, not a WAN event
+                                lost = (idx, epoch) in self._held
+                                self._held.discard((idx, epoch))
+                            if lost:
+                                self.lease_lost += 1
+            except ConnectionError:
+                return                       # transport gone: die silent,
+            self.killed.wait(self.hb_interval_s)  # the reaper does the rest
 
     def _safe_load(self, unit: WorkUnit):
-        return safe_load_unit_inputs(unit, self.data_root)
+        return safe_load_unit_inputs(unit, self.data_root, cache=self.cache)
 
     def _work(self):
         inhand: deque = deque()            # [(unit, lease, load_future|None)]
@@ -133,6 +187,8 @@ class Node:
                     if nxt is None:
                         break
                     unit, lease = nxt
+                    with self._held_lock:
+                        self._held.add((lease.unit_idx, lease.epoch))
                     fut = (None if lease.speculative
                            else self._loader.submit(self._safe_load, unit))
                     if lease.speculative:
@@ -157,21 +213,26 @@ class Node:
                                    attempt=self.max_retries + 2,
                                    fault_hook=self.fault_hook,
                                    node_id=self.node_id,
-                                   lease_epoch=lease.epoch)
+                                   lease_epoch=lease.epoch, cache=self.cache)
                 else:
                     res = run_unit_with_retries(
                         unit, self.pipeline, self.data_root,
                         max_retries=self.max_retries,
                         backoff_s=self.backoff_s, fault_hook=self.fault_hook,
                         preloaded=pre, node_id=self.node_id,
-                        lease_epoch=lease.epoch)
+                        lease_epoch=lease.epoch, cache=self.cache)
                 self.processed += 1
+                with self._held_lock:
+                    self._held.discard((idx, lease.epoch))
                 self.record(idx, res, lease)
                 if self.die_after is not None and self.processed >= self.die_after:
                     self.kill()
         except Exception:  # noqa: BLE001 — a crashed node is a dead node
             self.crash = traceback.format_exc(limit=5)
-            self.queue.mark_dead(self.node_id)
+            try:
+                self.queue.mark_dead(self.node_id)
+            except ConnectionError:
+                pass     # transport already gone: silence reaches the reaper
         finally:
             self._loader.shutdown(wait=False)
 
@@ -184,16 +245,30 @@ class ClusterStats:
     requeued: List[int]
     speculated: int
     dead_nodes: List[str]
+    remote_nodes: List[str] = dataclasses.field(default_factory=list)
+    renew_rejections: int = 0
+    cache: Optional[Dict[str, int]] = None    # InputCache.stats() when caching
 
 
 class ClusterRunner:
-    """Drive ``nodes`` in-process :class:`Node` workers over one unit list.
+    """Drive ``nodes`` :class:`Node` workers over one unit list.
 
     Same result contract as ``LocalRunner.run``: one result per unit with a
     committed status, plus ``status="speculative"`` rows for every duplicate
     (twins and zombie re-runs) so ok-counts are never inflated. After
     :meth:`run`, :attr:`stats` holds steal/requeue/speculation counters.
-    """
+
+    Transport injection: with ``transport="local"`` (default) nodes call the
+    in-process :class:`WorkQueue` directly; with ``transport="rpc"`` the
+    coordinator serves the queue over ``repro.dist.rpc`` and every node —
+    still threads here — talks to it through a socket-backed
+    :class:`~repro.dist.rpc.QueueClient`, byte-identical to what a worker on
+    another machine uses. ``serve_addr`` (``"host:port"``, port 0 = ephemeral;
+    implied by ``transport="rpc"``) additionally opens the queue to external
+    worker processes (:func:`run_worker`): they register, steal work, commit
+    to shared storage, and their results are folded in from
+    ``results_snapshot()``. ``cache_dir`` gives the coordinator host one
+    content-addressed input cache shared by its nodes."""
 
     def __init__(self, pipeline: Pipeline, data_root: Path, *,
                  nodes: int = 4, prefetch: int = 1, max_retries: int = 2,
@@ -201,9 +276,14 @@ class ClusterRunner:
                  straggler_min_s: float = 0.5, lease_ttl_s: float = 2.0,
                  hb_interval_s: float = 0.25, poll_s: float = 0.05,
                  fault_hook: Optional[Callable[[WorkUnit, int], None]] = None,
-                 die_after: Optional[Dict[str, int]] = None):
+                 die_after: Optional[Dict[str, int]] = None,
+                 transport: str = "local", serve_addr: Optional[str] = None,
+                 cache_dir: Optional[Path] = None,
+                 cache_bytes: Optional[int] = None):
         if nodes < 1:
             raise ValueError("need at least one node")
+        if transport not in ("local", "rpc"):
+            raise ValueError(f"unknown transport {transport!r}")
         self.pipeline = pipeline
         self.data_root = Path(data_root)
         self.n_nodes = int(nodes)
@@ -217,11 +297,22 @@ class ClusterRunner:
         self.poll_s = poll_s
         self.fault_hook = fault_hook
         self.die_after = dict(die_after or {})
+        self.transport = transport
+        self.serve_addr = serve_addr
+        self.cache_dir = cache_dir
+        self.cache_bytes = cache_bytes
         self.stats: Optional[ClusterStats] = None
         self.queue: Optional[WorkQueue] = None
+        self.server = None                   # QueueServer once run() serves
 
     def node_ids(self) -> List[str]:
         return [f"node-{i}" for i in range(self.n_nodes)]
+
+    def _make_cache(self) -> Optional[InputCache]:
+        if self.cache_dir is None:
+            return None
+        kw = {} if self.cache_bytes is None else {"max_bytes": self.cache_bytes}
+        return InputCache(Path(self.cache_dir), **kw)
 
     def run(self, units: List[WorkUnit]) -> List[UnitResult]:
         if not units:
@@ -229,6 +320,12 @@ class ClusterRunner:
         node_ids = self.node_ids()
         queue = WorkQueue(units, node_ids, lease_ttl_s=self.lease_ttl_s)
         self.queue = queue
+        serving = self.transport == "rpc" or self.serve_addr is not None
+        clients = []
+        if serving:
+            from .rpc import QueueServer, parse_addr
+            host, port = parse_addr(self.serve_addr or "127.0.0.1:0")
+            self.server = QueueServer(queue, host, port).start()
         detector = StragglerDetector(self.straggler_factor,
                                      self.straggler_min_s)
         primaries: Dict[int, UnitResult] = {}
@@ -243,16 +340,36 @@ class ClusterRunner:
                     primaries[idx] = res
                 if res.status == "ok":
                     detector.observe(res.seconds)
+            # local nodes report straight to the coordinator's queue object
+            # (meta included, so snapshot-side consumers see every node alike)
             queue.complete(idx, lease.node_id, res.status,
-                           speculative=lease.speculative)
+                           speculative=lease.speculative,
+                           meta=result_meta(res))
 
-        nodes = [Node(nid, queue, self.pipeline, self.data_root, record,
-                      prefetch=self.prefetch, max_retries=self.max_retries,
-                      backoff_s=self.backoff_s, fault_hook=self.fault_hook,
+        def node_queue():
+            """The queue handle a local node drives: the in-process object,
+            or a per-node socket client when the transport is rpc."""
+            if self.transport != "rpc":
+                return queue
+            from .rpc import QueueClient
+            host, port = self.server.address
+            if host in ("0.0.0.0", "::", ""):    # wildcard bind: dial loopback
+                host = "127.0.0.1"
+            client = QueueClient((host, port))
+            clients.append(client)
+            return client
+
+        cache = self._make_cache()
+        nodes = [Node(nid, node_queue(), self.pipeline, self.data_root,
+                      record, prefetch=self.prefetch,
+                      max_retries=self.max_retries, backoff_s=self.backoff_s,
+                      fault_hook=self.fault_hook,
                       hb_interval_s=self.hb_interval_s, poll_s=self.poll_s,
-                      die_after=self.die_after.get(nid))
+                      die_after=self.die_after.get(nid), cache=cache)
                  for nid in node_ids]
+        local_ids = set(node_ids)
         speculated: set = set()
+        log_cursor = 0
         for nd in nodes:
             nd.start()
         try:
@@ -263,6 +380,14 @@ class ClusterRunner:
                 if not alive and not queue.finished():
                     raise RuntimeError(
                         f"all nodes dead with {queue.pending()} units pending")
+                # fold remote ok durations into the straggler median so
+                # cross-node speculation sees the whole cluster's pace —
+                # incremental (cursor into the retirement log), so a tick's
+                # cost tracks new completions, not the whole history
+                for m in queue.primary_log(log_cursor):
+                    log_cursor += 1
+                    if m["node_id"] not in local_ids and m["status"] == "ok":
+                        detector.observe(m.get("seconds", 0.0))
                 # cross-node straggler speculation: twin on a different node
                 now = time.time()
                 depths = queue.queue_depths()
@@ -280,11 +405,32 @@ class ClusterRunner:
                 nd.kill()
             for nd in nodes:
                 nd.join(timeout=5.0)
+            for client in clients:
+                client.close()
+            if self.server is not None:
+                self.server.stop()
+        # units finished by worker processes (never seen by record()) come
+        # back through the queue's result metadata
+        snap = queue.results_snapshot()
+        remote_primaries = {idx: m for idx, m in snap["primaries"].items()
+                            if m["node_id"] not in local_ids}
+        remote_processed: Dict[str, int] = {}
+        for idx, m in remote_primaries.items():
+            remote_processed[m["node_id"]] = \
+                remote_processed.get(m["node_id"], 0) + 1
+            extras.append((idx, _meta_result(units[idx], m)))
+        for m in snap["duplicates"]:
+            if m["node_id"] not in local_ids:
+                extras.append((m["idx"], _meta_result(units[m["idx"]], m)))
         self.stats = ClusterStats(
-            processed={nd.node_id: nd.processed for nd in nodes},
+            processed={**{nd.node_id: nd.processed for nd in nodes},
+                       **remote_processed},
             steals=dict(queue.steals), requeued=list(queue.requeues),
             speculated=len(speculated),
-            dead_nodes=[n for n in node_ids if n not in queue.alive_nodes()])
+            dead_nodes=[n for n in node_ids if n not in queue.alive_nodes()],
+            remote_nodes=sorted(set(queue.queue_depths()) - local_ids),
+            renew_rejections=queue.renew_rejections,
+            cache=cache.stats() if cache is not None else None)
         # fold: exactly one committed-status result per unit; a unit whose
         # only finisher was a twin (primary died mid-flight) promotes it
         pending_extras: List[Tuple[int, UnitResult]] = []
@@ -302,3 +448,52 @@ class ClusterRunner:
         pos = {idx: p for p, idx in enumerate(order)}
         return dedupe_results([primaries[idx] for idx in order],
                               [(pos[idx], res) for idx, res in pending_extras])
+
+
+def run_worker(addr, pipeline, data_root: Path, node_id: str, *,
+               prefetch: int = 1, max_retries: int = 2,
+               backoff_s: float = 0.05, hb_interval_s: float = 0.25,
+               poll_s: float = 0.05,
+               cache: Optional[InputCache] = None) -> int:
+    """Join a remote queue as one worker host and drain it: the process
+    behind ``python -m repro.dist.rpc work``.
+
+    Dials ``addr``, registers ``node_id``, and runs one :class:`Node` loop —
+    the same code the coordinator's threads run — against the socket-backed
+    queue, with inputs served through this host's content-addressed cache
+    (default: built from ``$REPRO_CACHE_DIR`` / ``$REPRO_CACHE_MAX_MB``).
+    Results travel back as ``complete(meta=...)`` payloads; outputs and
+    provenance are committed to shared storage exactly as in-process nodes
+    commit them, so the coordinator's exactly-one-ok arbitration spans
+    processes for free. Returns the number of units this worker recorded.
+    A lost coordinator (connection drop) ends the worker quietly: its
+    silence is the crash signal the reaper is built around."""
+    from ..core.pipelines import builtin_pipelines
+    from .rpc import QueueClient
+    if isinstance(pipeline, str):
+        pipeline = builtin_pipelines()[pipeline]
+    if cache is None:
+        cache = cache_from_env()
+    client = QueueClient(addr)
+    if not client.register(node_id):
+        raise RuntimeError(f"queue at {addr} rejected node id {node_id!r} "
+                           "(reaped earlier? rejoin under a fresh id)")
+
+    def record(idx: int, res: UnitResult, lease: Lease):
+        client.complete(idx, lease.node_id, res.status,
+                        speculative=lease.speculative, meta=result_meta(res))
+
+    node = Node(node_id, client, pipeline, Path(data_root), record,
+                prefetch=prefetch, max_retries=max_retries,
+                backoff_s=backoff_s, hb_interval_s=hb_interval_s,
+                poll_s=poll_s, cache=cache)
+    node.start()
+    try:
+        while node.is_alive():
+            node.join(timeout=poll_s * 4)
+    except KeyboardInterrupt:
+        node.kill()
+        node.join(timeout=5.0)
+    finally:
+        client.close()
+    return node.processed

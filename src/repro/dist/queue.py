@@ -22,10 +22,23 @@ Protocol (see ``docs/cluster.md`` for the failure model):
 * **Speculate** — ``speculate(idx, node)`` grants a *twin* lease on a
   different node for a straggling unit; twins race the primary through the
   same idempotent commit, and duplicates surface as ``status="speculative"``.
+* **Renew** — ``renew(idx, node, epoch)`` is a lease-scoped heartbeat for
+  WAN-scale TTLs: it refreshes the holder's liveness *and* confirms the
+  lease is still authoritative. A renewal naming a stale epoch (the unit was
+  reaped and re-granted), a retired unit, or a dead node is rejected — the
+  holder learns it lost the lease instead of heartbeating into the void.
+* **Register** — ``register(node)`` joins a node after construction (the
+  network-transport case: worker hosts dial in whenever they boot). A queue
+  may start with zero nodes; units wait in a backlog that the first
+  registrant drains and later registrants steal from.
 
 Everything is guarded by one lock — the queue is the single shared-state
-object, designed so a network transport (each call becomes an RPC to the
-coordinator) can replace the in-process instance without touching nodes.
+object, and the whole method surface is JSON-serializable by design:
+``repro.dist.rpc`` wraps it in a socket server (each call becomes one
+JSON-lines RPC to the coordinator) without touching nodes. ``complete``
+optionally carries a result ``meta`` payload so a coordinator can fold in
+results from worker processes it never shared memory with
+(:meth:`WorkQueue.results_snapshot`).
 """
 from __future__ import annotations
 
@@ -55,17 +68,22 @@ class WorkQueue:
     is injectable for deterministic tests.
     """
 
-    def __init__(self, units: Sequence[WorkUnit], node_ids: Sequence[str], *,
+    def __init__(self, units: Sequence[WorkUnit],
+                 node_ids: Sequence[str] = (), *,
                  lease_ttl_s: float = 2.0, now=time.time):
-        if not node_ids:
-            raise ValueError("WorkQueue needs at least one node")
         self.units = list(units)
         self.lease_ttl_s = float(lease_ttl_s)
         self._now = now
         self._lock = threading.Lock()
         self._queues: Dict[str, Deque[int]] = {n: deque() for n in node_ids}
-        for i in range(len(self.units)):            # round-robin partition
-            self._queues[node_ids[i % len(node_ids)]].append(i)
+        # with no nodes yet (network transport: workers register later) the
+        # units wait in a backlog; otherwise round-robin partition as before
+        self._backlog: Deque[int] = deque()
+        if node_ids:
+            for i in range(len(self.units)):
+                self._queues[node_ids[i % len(node_ids)]].append(i)
+        else:
+            self._backlog.extend(range(len(self.units)))
         self._epochs: Dict[int, int] = {i: 0 for i in range(len(self.units))}
         self._leases: Dict[int, Lease] = {}          # primary lease per unit
         self._spec: Dict[int, Lease] = {}            # at most one twin per unit
@@ -77,6 +95,22 @@ class WorkQueue:
         self._dead: set = set()
         self.steals: Dict[str, int] = {n: 0 for n in node_ids}
         self.requeues: List[int] = []                # reaped unit idxs (log)
+        self.renew_rejections: int = 0               # stale-lease renew count
+        # result metadata carried by complete(meta=...): the retiring
+        # completion per unit, plus every duplicate report (twin losers,
+        # zombies) — what a coordinator folds into its result list for units
+        # finished by worker processes it never shared memory with
+        self._primary_meta: Dict[int, dict] = {}
+        self._primary_log: List[dict] = []           # same entries, in order
+        self._pending_meta: Dict[int, dict] = {}     # deferred primary failure
+        self._dup_meta: List[dict] = []
+
+    def _retire_meta(self, idx: int, entry: dict):
+        """Record the completion that retired ``idx``: keyed for the final
+        fold, appended to the ordered log for incremental polling. Each unit
+        retires exactly once, so the log never rewrites an entry."""
+        self._primary_meta[idx] = entry
+        self._primary_log.append(entry)
 
     # -- leasing ------------------------------------------------------------
 
@@ -89,11 +123,13 @@ class WorkQueue:
 
     def next_unit(self, node_id: str) -> Optional[Tuple[WorkUnit, Lease]]:
         """Lease the next unit for ``node_id``: own speculative work first,
-        then own deque head, then steal the tail half of the longest peer
-        deque. Returns ``None`` when no leasable work exists *right now*
-        (the node should re-poll until :meth:`finished`)."""
+        then own deque head, then a fair share of the registration backlog,
+        then steal the tail half of the longest peer deque. Returns ``None``
+        when no leasable work exists *right now* (the node should re-poll
+        until :meth:`finished`) — including for unknown node ids, so a
+        transport client that skipped :meth:`register` fails soft."""
         with self._lock:
-            if node_id in self._dead:
+            if node_id in self._dead or node_id not in self._queues:
                 return None
             sq = self._spec_queues[node_id]
             while sq:
@@ -104,6 +140,8 @@ class WorkQueue:
                 return self.units[idx], self._spec[idx]
             q = self._queues[node_id]
             if not q:
+                self._fill_from_backlog(node_id)
+            if not q:
                 self._steal_into(node_id)
             while q:
                 idx = q.popleft()
@@ -111,6 +149,20 @@ class WorkQueue:
                     continue
                 return self.units[idx], self._grant(idx, node_id, False)
             return None
+
+    def _fill_from_backlog(self, node_id: str):
+        """Move a fair share of never-partitioned units (queue built with no
+        nodes, or orphans reaped while no node was alive) onto ``node_id``'s
+        deque — late registrants then rebalance via ordinary stealing."""
+        if not self._backlog:
+            return
+        alive = max(1, sum(1 for n in self._queues if n not in self._dead))
+        k = max(1, len(self._backlog) // alive)
+        q = self._queues[node_id]
+        for _ in range(k):
+            if not self._backlog:
+                break
+            q.append(self._backlog.popleft())
 
     def _steal_into(self, thief: str):
         victims = [(len(q), n) for n, q in self._queues.items()
@@ -131,7 +183,7 @@ class WorkQueue:
             self._started.setdefault(idx, self._now())
 
     def complete(self, idx: int, node_id: str, status: str, *,
-                 speculative: bool = False):
+                 speculative: bool = False, meta: Optional[dict] = None):
         """Record a terminal result for a lease.
 
         Primary leases retire the unit on ``ok``/``skipped``; a terminal
@@ -143,34 +195,98 @@ class WorkQueue:
         nodes already declared dead are ignored for retirement — their unit
         was requeued, and the provenance commit arbitration already made any
         late zombie write harmless — and late completions of already-done
-        units are no-ops."""
+        units are no-ops.
+
+        ``meta`` (JSON-safe: e.g. ``{"seconds": ..., "attempts": ...,
+        "error": ...}``) attaches the worker-side result to the completion so
+        a coordinator that never shared memory with the worker can rebuild
+        its result list: the retiring completion's meta lands in
+        :meth:`results_snapshot` ``primaries``, every non-retiring report
+        (twin losers, zombies, late duplicates) in ``duplicates``."""
         with self._lock:
+            entry = None
+            if meta is not None:
+                entry = {"idx": idx, "node_id": node_id, "status": status,
+                         "speculative": speculative, **meta}
             if node_id in self._dead:
+                if entry is not None:
+                    self._dup_meta.append(entry)
                 return
             if speculative:
                 spec = self._spec.get(idx)
                 if spec is not None and spec.node_id == node_id:
                     self._spec.pop(idx)
                 if idx in self._done:
+                    if entry is not None:
+                        self._dup_meta.append(entry)
                     return
                 if status in ("ok", "skipped"):
                     self._done[idx] = status
                     self._started.pop(idx, None)
                     self._failed_pending.pop(idx, None)
+                    # the twin won: its result is the unit's result, and the
+                    # deferred primary failure (if any) is superseded
+                    self._pending_meta.pop(idx, None)
+                    if entry is not None:
+                        self._retire_meta(idx, entry)
                 elif idx in self._failed_pending:
                     self._done[idx] = self._failed_pending.pop(idx)
+                    pend = self._pending_meta.pop(idx, None)
+                    if pend is not None:
+                        self._retire_meta(idx, pend)
+                    if entry is not None:
+                        self._dup_meta.append(entry)
+                elif entry is not None:
+                    self._dup_meta.append(entry)
                 return
             lease = self._leases.get(idx)
             if lease is not None and lease.node_id == node_id:
                 self._leases.pop(idx)
                 self._started.pop(idx, None)
             if idx in self._done:
+                if entry is not None:
+                    self._dup_meta.append(entry)
                 return
             if status == "failed" and idx in self._spec:
                 self._failed_pending[idx] = status   # twin still racing
+                if entry is not None:
+                    self._pending_meta[idx] = entry
                 return
             self._done[idx] = status
             self._failed_pending.pop(idx, None)
+            self._pending_meta.pop(idx, None)
+            if entry is not None:
+                self._retire_meta(idx, entry)
+
+    def renew(self, idx: int, node_id: str, epoch: int) -> bool:
+        """Lease-scoped heartbeat for WAN-scale TTLs: refresh ``node_id``'s
+        liveness *and* confirm its lease on ``idx`` (primary or twin) is still
+        authoritative at ``epoch``. Returns False — without touching any
+        state — when the lease is gone: the node is dead, the unit retired,
+        or the unit was reaped and re-granted (epoch bumped), in which case
+        the caller is now a zombie and should not expect its commit to win.
+        A successful renewal refreshes the lease's ``granted_at``.
+
+        ``renew_rejections`` counts only the *interesting* rejections (dead
+        node, wrong holder, stale epoch) — a renew that loses an ordinary
+        race with its own unit's completion is not a lost lease and stays
+        out of the WAN-health signal."""
+        with self._lock:
+            if idx in self._done:
+                return False                 # completed: routine, not counted
+            if node_id in self._dead:
+                self.renew_rejections += 1
+                return False
+            lease = self._leases.get(idx)
+            if lease is None or lease.node_id != node_id or lease.epoch != epoch:
+                lease = self._spec.get(idx)
+            if lease is None or lease.node_id != node_id or lease.epoch != epoch:
+                self.renew_rejections += 1
+                return False
+            self._heartbeats[node_id] = self._now()
+            renewed = dataclasses.replace(lease, granted_at=self._now())
+            (self._spec if lease.speculative else self._leases)[idx] = renewed
+            return True
 
     # -- speculation --------------------------------------------------------
 
@@ -195,9 +311,27 @@ class WorkQueue:
 
     # -- heartbeats + failure handling --------------------------------------
 
+    def register(self, node_id: str) -> bool:
+        """Join ``node_id`` to the cluster after construction — the network-
+        transport path where worker hosts dial in whenever they boot. A new
+        node starts with an empty deque and picks up work from the backlog or
+        by stealing. Re-registering an alive node just refreshes its
+        heartbeat; a reaped node id stays dead (rejoin under a fresh id)."""
+        with self._lock:
+            if node_id in self._dead:
+                return False
+            if node_id not in self._queues:
+                self._queues[node_id] = deque()
+                self._spec_queues[node_id] = deque()
+                self.steals.setdefault(node_id, 0)
+            self._heartbeats[node_id] = self._now()
+            return True
+
     def heartbeat(self, node_id: str):
         with self._lock:
-            if node_id not in self._dead:
+            # unknown ids are dropped (not auto-registered): a reap must never
+            # see a heartbeat for a node that has no deque to clean up
+            if node_id not in self._dead and node_id in self._queues:
                 self._heartbeats[node_id] = self._now()
 
     def mark_dead(self, node_id: str):
@@ -237,6 +371,9 @@ class WorkQueue:
                 self._spec.pop(idx)
                 if idx in self._failed_pending and idx not in self._done:
                     self._done[idx] = self._failed_pending.pop(idx)
+                    pend = self._pending_meta.pop(idx, None)
+                    if pend is not None:
+                        self._retire_meta(idx, pend)
         self._spec_queues[node_id].clear()
         # unleased entries still sitting in its deque
         orphans.extend(i for i in self._queues[node_id] if i not in self._done)
@@ -246,6 +383,10 @@ class WorkQueue:
                 target = min(alive, key=lambda n: len(self._queues[n]))
                 # front of the queue: requeued work is the oldest work
                 self._queues[target].appendleft(idx)
+        else:
+            # nobody alive to take them: park in the backlog so a later
+            # register() (network transport) can still finish the job
+            self._backlog.extendleft(reversed(orphans))
         self.requeues.extend(orphans)
         return orphans
 
@@ -270,6 +411,34 @@ class WorkQueue:
     def queue_depths(self) -> Dict[str, int]:
         with self._lock:
             return {n: len(q) for n, q in self._queues.items()}
+
+    def results_snapshot(self) -> Dict[str, object]:
+        """Everything ``complete(meta=...)`` has recorded so far:
+        ``{"primaries": {idx: entry}, "duplicates": [entry, ...]}`` where an
+        entry is the JSON-safe completion record (idx, node_id, status,
+        speculative, plus the caller's meta). ``primaries`` holds the
+        completion that retired each unit; ``duplicates`` every non-retiring
+        report. A coordinator folds these into its result list for units
+        finished by nodes in other processes."""
+        with self._lock:
+            return {"primaries": {i: dict(m)
+                                  for i, m in self._primary_meta.items()},
+                    "duplicates": [dict(m) for m in self._dup_meta]}
+
+    def primary_log(self, start: int = 0) -> List[dict]:
+        """Retiring completions in retirement order, from offset ``start`` —
+        the incremental feed a coordinator polls each tick (pass the count
+        it has already consumed) instead of re-copying the full snapshot."""
+        with self._lock:
+            return [dict(m) for m in self._primary_log[start:]]
+
+    def stats_snapshot(self) -> Dict[str, object]:
+        """Control-plane counters in one JSON-safe call (the transport client
+        mirrors these as properties): steals, requeues, renew rejections."""
+        with self._lock:
+            return {"steals": dict(self.steals),
+                    "requeues": list(self.requeues),
+                    "renew_rejections": self.renew_rejections}
 
     def active_leases(self) -> Dict[str, str]:
         """``job_id -> node_id`` for every in-flight lease (primary + twin) —

@@ -1,0 +1,445 @@
+"""Networked WorkQueue transport: the RPC boundary from ``docs/cluster.md``
+made real.
+
+The in-process :class:`~repro.dist.queue.WorkQueue` was designed as a single
+lock-guarded object with a small JSON-serializable method surface; this
+module wraps it in a socket server and gives workers a drop-in client:
+
+* :class:`QueueServer` — owns the one real ``WorkQueue`` and serves it over
+  TCP. Wire format is **JSON lines**: one request object per line
+  (``{"id": n, "method": "...", "params": {...}}``), one response per line
+  (``{"id": n, "ok": true, "result": ...}`` or ``{"id": n, "ok": false,
+  "error": "..."}``), UTF-8, ``\\n``-framed. One thread per connection; a
+  dropped connection kills only that worker's session — its leases die with
+  its heartbeats and are reaped like any crashed node.
+* :class:`QueueClient` — implements the exact ``WorkQueue`` method surface
+  (``next_unit`` / ``complete`` / ``heartbeat`` / ``speculate`` / ``reap`` /
+  ``renew`` / ``register`` / introspection) over one persistent connection,
+  so :class:`~repro.dist.cluster.Node` and ``ClusterRunner`` run unchanged
+  against either the in-process queue or a remote one.
+
+Only already-JSON data crosses the wire: ``WorkUnit`` and ``Lease`` are flat
+dataclasses, and results travel as the ``meta`` payload of ``complete``.
+Array bytes never do — nodes read inputs from shared storage (through the
+per-host :mod:`repro.dist.cache`) and commit outputs there directly, so the
+coordinator link stays control-plane-thin (the paper's 0.60 Gb/s
+storage->compute path is not funneled through one TCP socket).
+
+CLI (see ``docs/operating.md`` for the full runbook)::
+
+    # coordinator host: serve a unit list
+    python -m repro.dist.rpc serve --units units.json --addr 0.0.0.0:7077
+
+    # each worker host: join and drain (REPRO_QUEUE_ADDR also works)
+    python -m repro.dist.rpc work --addr coord:7077 --pipeline bias_correct \\
+        --data-root /shared/dataset --node-id $(hostname)
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import socket
+import socketserver
+import threading
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+from ..core.query import WorkUnit
+from .queue import Lease, WorkQueue
+
+QUEUE_ADDR_ENV = "REPRO_QUEUE_ADDR"
+
+# The queue surface a client may invoke. getattr-dispatch is gated on this
+# allowlist so a malformed request can name only protocol methods, nothing
+# else on the object.
+_METHODS = frozenset({
+    "next_unit", "complete", "mark_started", "heartbeat", "mark_dead",
+    "reap", "speculate", "renew", "register", "running", "finished",
+    "pending", "alive_nodes", "done_status", "queue_depths", "active_leases",
+    "results_snapshot", "stats_snapshot", "primary_log",
+})
+
+
+def parse_addr(addr: str) -> Tuple[str, int]:
+    """``"host:port"`` -> ``(host, port)``; bare ``":port"`` binds all ifaces."""
+    host, _, port = addr.rpartition(":")
+    return host or "0.0.0.0", int(port)
+
+
+def addr_from_env() -> Optional[Tuple[str, int]]:
+    raw = os.environ.get(QUEUE_ADDR_ENV)
+    return parse_addr(raw) if raw else None
+
+
+# ---------------------------------------------------------------------------
+# wire encoding: only two non-scalar types cross the boundary
+# ---------------------------------------------------------------------------
+
+def _encode(obj: Any) -> Any:
+    """Make a queue-method return value JSON-safe. The queue already returns
+    plain data except for ``WorkUnit``/``Lease`` dataclasses and the
+    ``(unit, lease)`` grant tuple."""
+    if obj is None or isinstance(obj, (bool, int, float, str)):
+        return obj
+    if isinstance(obj, Lease):
+        return {"__lease__": dataclasses.asdict(obj)}
+    if isinstance(obj, WorkUnit):
+        return {"__unit__": dataclasses.asdict(obj)}
+    if isinstance(obj, dict):
+        return {str(k): _encode(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_encode(v) for v in obj]
+    raise TypeError(f"cannot encode {type(obj).__name__} for the wire")
+
+
+def _decode(obj: Any) -> Any:
+    if isinstance(obj, dict):
+        if "__lease__" in obj:
+            return Lease(**obj["__lease__"])
+        if "__unit__" in obj:
+            return WorkUnit(**obj["__unit__"])
+        return {k: _decode(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_decode(v) for v in obj]
+    return obj
+
+
+# ---------------------------------------------------------------------------
+# server
+# ---------------------------------------------------------------------------
+
+class _Handler(socketserver.StreamRequestHandler):
+    def setup(self):
+        super().setup()
+        with self.server.conn_lock:                     # type: ignore[attr-defined]
+            self.server.conns.add(self.connection)      # type: ignore[attr-defined]
+
+    def finish(self):
+        with self.server.conn_lock:                     # type: ignore[attr-defined]
+            self.server.conns.discard(self.connection)  # type: ignore[attr-defined]
+        super().finish()
+
+    def handle(self):
+        queue: WorkQueue = self.server.queue            # type: ignore[attr-defined]
+        while True:
+            line = self.rfile.readline()
+            if not line:
+                return                                   # client hung up
+            req = None
+            try:
+                req = json.loads(line)
+                if not isinstance(req, dict):
+                    raise ValueError("request must be a JSON object")
+                method = req.get("method")
+                if method not in _METHODS:
+                    raise ValueError(f"unknown method {method!r}")
+                params = req.get("params") or {}
+                result = getattr(queue, method)(**params)
+                resp = {"id": req.get("id"), "ok": True,
+                        "result": _encode(result)}
+            except Exception as e:  # noqa: BLE001 — reported to the caller
+                resp = {"id": req.get("id") if isinstance(req, dict) else None,
+                        "ok": False, "error": f"{type(e).__name__}: {e}"}
+            try:
+                self.wfile.write(json.dumps(resp).encode() + b"\n")
+                self.wfile.flush()
+            except OSError:
+                return                                   # connection dropped
+
+
+class _Server(socketserver.ThreadingTCPServer):
+    allow_reuse_address = True
+    daemon_threads = True
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.conn_lock = threading.Lock()
+        self.conns: set = set()
+
+
+class QueueServer:
+    """Serve one :class:`WorkQueue` over TCP JSON-lines.
+
+    The server owns nothing but the socket: the queue's semantics (leases,
+    reaping, commit arbitration) are untouched, and the coordinator process
+    keeps calling the queue object directly while remote workers go through
+    the wire. ``port=0`` picks a free port; read it back from
+    :attr:`address` after :meth:`start`."""
+
+    def __init__(self, queue: WorkQueue, host: str = "127.0.0.1",
+                 port: int = 0):
+        self.queue = queue
+        self._srv = _Server((host, port), _Handler)
+        self._srv.queue = queue                          # type: ignore[attr-defined]
+        self._thread = threading.Thread(
+            target=self._srv.serve_forever, name="queue-server", daemon=True)
+
+    @property
+    def address(self) -> Tuple[str, int]:
+        return self._srv.server_address[:2]
+
+    @property
+    def addr_str(self) -> str:
+        host, port = self.address
+        return f"{host}:{port}"
+
+    def start(self) -> "QueueServer":
+        self._thread.start()
+        return self
+
+    def stop(self):
+        self._srv.shutdown()
+        # drop live worker connections too: handler threads block on
+        # readline and would otherwise outlive the server, and clients
+        # deserve a prompt ConnectionError over a silent hang
+        with self._srv.conn_lock:
+            conns = list(self._srv.conns)
+        for conn in conns:
+            try:
+                conn.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+        self._srv.server_close()
+
+    def __enter__(self) -> "QueueServer":
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop()
+
+
+# ---------------------------------------------------------------------------
+# client
+# ---------------------------------------------------------------------------
+
+class QueueClient:
+    """``WorkQueue``-shaped proxy over one persistent JSON-lines connection.
+
+    Thread-safe: a node's worker, loader, and heartbeat threads share the
+    client; one lock serializes request/response pairs on the socket (calls
+    are sub-millisecond control-plane messages, never data transfers). Any
+    transport error raises :class:`ConnectionError` — to the node loop that
+    is indistinguishable from its own crash, which is exactly the failure
+    semantics the reaper expects (silence -> lease requeue)."""
+
+    def __init__(self, addr: Tuple[str, int], *, timeout_s: float = 30.0):
+        self.addr = addr
+        self._lock = threading.Lock()
+        self._id = 0
+        self._poisoned = False
+        self._sock = socket.create_connection(addr, timeout=timeout_s)
+        self._file = self._sock.makefile("rb")
+
+    def close(self):
+        with self._lock:
+            self._poison()
+
+    def _call(self, method: str, **params) -> Any:
+        with self._lock:
+            if self._poisoned:
+                raise ConnectionError(
+                    f"queue rpc {method}: connection to {self.addr} is down")
+            self._id += 1
+            req = {"id": self._id, "method": method, "params": params}
+            try:
+                self._sock.sendall(json.dumps(req).encode() + b"\n")
+                line = self._file.readline()
+            except OSError as e:
+                # a timed-out call may leave its reply in flight: the stream
+                # is no longer aligned, so poison the connection rather than
+                # let the next call consume the wrong response
+                self._poison()
+                raise ConnectionError(
+                    f"queue rpc {method} to {self.addr}: {e}") from e
+            if not line:
+                self._poison()
+                raise ConnectionError(
+                    f"queue server {self.addr} closed the connection")
+            try:
+                resp = json.loads(line)
+            except json.JSONDecodeError as e:
+                # a truncated line at EOF (server killed mid-reply) is a
+                # transport death, not a protocol error: poison + ConnectionError
+                # so node loops see the failure mode they are built for
+                self._poison()
+                raise ConnectionError(
+                    f"queue rpc {method}: truncated/garbage response "
+                    f"from {self.addr}: {e}") from e
+            if resp.get("id") != req["id"]:        # desync: never trust again
+                self._poison()
+                raise ConnectionError(
+                    f"queue rpc {method}: response id {resp.get('id')!r} != "
+                    f"request id {req['id']} — stream desynchronized")
+        if not resp.get("ok"):
+            raise RuntimeError(f"queue rpc {method}: {resp.get('error')}")
+        return _decode(resp.get("result"))
+
+    def _poison(self):
+        """Caller holds the lock: drop the socket; every later call raises."""
+        self._poisoned = True
+        try:
+            self._file.close()
+            self._sock.close()
+        except OSError:
+            pass
+
+    # -- the WorkQueue surface, verbatim ------------------------------------
+
+    def next_unit(self, node_id: str):
+        got = self._call("next_unit", node_id=node_id)
+        return None if got is None else (got[0], got[1])
+
+    def complete(self, idx: int, node_id: str, status: str, *,
+                 speculative: bool = False, meta: Optional[dict] = None):
+        self._call("complete", idx=idx, node_id=node_id, status=status,
+                   speculative=speculative, meta=meta)
+
+    def mark_started(self, idx: int):
+        self._call("mark_started", idx=idx)
+
+    def heartbeat(self, node_id: str):
+        self._call("heartbeat", node_id=node_id)
+
+    def mark_dead(self, node_id: str):
+        self._call("mark_dead", node_id=node_id)
+
+    def reap(self):
+        return self._call("reap")
+
+    def speculate(self, idx: int, node_id: str):
+        return self._call("speculate", idx=idx, node_id=node_id)
+
+    def renew(self, idx: int, node_id: str, epoch: int) -> bool:
+        return self._call("renew", idx=idx, node_id=node_id, epoch=epoch)
+
+    def register(self, node_id: str) -> bool:
+        return self._call("register", node_id=node_id)
+
+    def running(self):
+        return [tuple(r) for r in self._call("running")]
+
+    def finished(self) -> bool:
+        return self._call("finished")
+
+    def pending(self) -> int:
+        return self._call("pending")
+
+    def alive_nodes(self):
+        return self._call("alive_nodes")
+
+    def done_status(self):
+        return {int(k): v for k, v in self._call("done_status").items()}
+
+    def queue_depths(self):
+        return self._call("queue_depths")
+
+    def active_leases(self):
+        return self._call("active_leases")
+
+    def results_snapshot(self):
+        snap = self._call("results_snapshot")
+        return {"primaries": {int(k): v
+                              for k, v in snap["primaries"].items()},
+                "duplicates": snap["duplicates"]}
+
+    def primary_log(self, start: int = 0):
+        return self._call("primary_log", start=start)
+
+    def stats_snapshot(self):
+        return self._call("stats_snapshot")
+
+    # the in-process queue exposes these as attributes; mirror them so
+    # observability code works against either implementation
+    @property
+    def steals(self):
+        return self.stats_snapshot()["steals"]
+
+    @property
+    def requeues(self):
+        return self.stats_snapshot()["requeues"]
+
+
+# ---------------------------------------------------------------------------
+# CLI: coordinator + worker entrypoints for real multi-host runs
+# ---------------------------------------------------------------------------
+
+def _main():
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="networked WorkQueue: serve a unit list / join as worker")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    sv = sub.add_parser("serve", help="run the coordinator queue server")
+    sv.add_argument("--units", required=True,
+                    help="units JSON from generate_jobs (…_units.json)")
+    sv.add_argument("--addr", default=os.environ.get(QUEUE_ADDR_ENV,
+                                                     "127.0.0.1:7077"))
+    sv.add_argument("--lease-ttl", type=float, default=30.0,
+                    help="seconds of heartbeat silence before a node is reaped")
+    sv.add_argument("--reap-interval", type=float, default=1.0)
+
+    wk = sub.add_parser("work", help="join the queue and drain units")
+    wk.add_argument("--addr", default=os.environ.get(QUEUE_ADDR_ENV),
+                    help=f"coordinator host:port (or ${QUEUE_ADDR_ENV})")
+    wk.add_argument("--pipeline", required=True)
+    wk.add_argument("--data-root", required=True)
+    wk.add_argument("--node-id", default=None,
+                    help="default: <hostname>-<pid>")
+    wk.add_argument("--prefetch", type=int, default=1)
+    wk.add_argument("--max-retries", type=int, default=2)
+    wk.add_argument("--cache-dir", default=None,
+                    help="host input cache (or $REPRO_CACHE_DIR)")
+    wk.add_argument("--cache-mb", type=float, default=None,
+                    help="cache budget in MiB (or $REPRO_CACHE_MAX_MB)")
+    args = ap.parse_args()
+
+    if args.cmd == "serve":
+        units = [WorkUnit(**u)
+                 for u in json.loads(Path(args.units).read_text())]
+        queue = WorkQueue(units, (), lease_ttl_s=args.lease_ttl)
+        host, port = parse_addr(args.addr)
+        server = QueueServer(queue, host, port).start()
+        print(f"queue server on {server.addr_str}: {len(units)} units, "
+              f"lease ttl {args.lease_ttl}s", flush=True)
+        import time
+        try:
+            while not queue.finished():
+                time.sleep(args.reap_interval)
+                reaped = queue.reap()
+                if reaped:
+                    print(f"reaped units {reaped} "
+                          f"(alive: {queue.alive_nodes()})", flush=True)
+        finally:
+            server.stop()
+        status = queue.done_status()
+        ok = sum(1 for s in status.values() if s == "ok")
+        print(f"finished: {ok}/{len(units)} ok", flush=True)
+        raise SystemExit(0 if len(status) == len(units)
+                         and all(s in ("ok", "skipped")
+                                 for s in status.values()) else 1)
+
+    # work
+    if not args.addr:
+        ap.error(f"--addr or ${QUEUE_ADDR_ENV} is required")
+    from .cluster import run_worker            # late: pulls in jax pipelines
+    node_id = args.node_id or f"{socket.gethostname()}-{os.getpid()}"
+    if args.cache_dir:                       # explicit flags beat the env
+        os.environ["REPRO_CACHE_DIR"] = args.cache_dir
+    if args.cache_mb is not None:
+        os.environ["REPRO_CACHE_MAX_MB"] = str(args.cache_mb)
+    try:
+        processed = run_worker(parse_addr(args.addr), args.pipeline,
+                               Path(args.data_root), node_id,
+                               prefetch=args.prefetch,
+                               max_retries=args.max_retries)
+    except (ConnectionError, OSError) as e:
+        # the coordinator is gone (job finished, or not up yet): a worker
+        # host exits quietly — its silence is the signal the reaper handles
+        print(f"{node_id}: queue at {args.addr} unreachable ({e})", flush=True)
+        raise SystemExit(3)
+    print(f"{node_id}: processed {processed} unit(s)", flush=True)
+
+
+if __name__ == "__main__":
+    _main()

@@ -1,7 +1,9 @@
 """Shared body of the distributed-executor safety invariant, used by the
-hypothesis property test (random parameters) and by a deterministic sweep in
-``test_cluster.py`` (so the invariant still runs where hypothesis is absent).
+hypothesis property test (random parameters), a deterministic sweep in
+``test_cluster.py`` (so the invariant still runs where hypothesis is absent),
+and the transport/cache/renewal variants in ``test_rpc.py``.
 """
+import itertools
 import json
 import tempfile
 import threading
@@ -11,10 +13,18 @@ import numpy as np
 
 
 def check_cluster_invariant(n_subjects: int, sessions: int, nodes: int,
-                            flaky: bool, die: int):
+                            flaky: bool, die: int, *,
+                            transport: str = "local", cache: bool = False,
+                            harass_renew: bool = False):
     """For the given unit list / node count / injected failures: every unit
     must end with exactly one committed ok provenance, and a concurrent
-    reader must never observe a partial output file or torn provenance."""
+    reader must never observe a partial output file or torn provenance.
+
+    ``transport="rpc"`` runs the same schedule over the socket transport;
+    ``cache=True`` serves inputs through a host :class:`InputCache`;
+    ``harass_renew=True`` floods the queue with renewals carrying cycling
+    (mostly stale) epochs while the run is live — a renewal racing a reap or
+    a re-grant must be rejected without ever disturbing retirement."""
     from repro.core import (Provenance, builtin_pipelines,
                             query_available_work, synthesize_dataset)
     from repro.dist import ClusterRunner
@@ -52,15 +62,41 @@ def check_cluster_invariant(n_subjects: int, sessions: int, nodes: int,
         die_after = {f"node-{die % nodes}": 1} if nodes > 1 else {}
         w = threading.Thread(target=watcher, daemon=True)
         w.start()
+        runner = ClusterRunner(
+            pipe, ds.root, nodes=nodes, fault_hook=fault, die_after=die_after,
+            lease_ttl_s=0.4, hb_interval_s=0.1, straggler_factor=100.0,
+            poll_s=0.02, transport=transport,
+            cache_dir=(Path(td) / "host-cache") if cache else None)
+
+        wrongly_renewed = []
+
+        def harasser():
+            # cycling unit idx / node id, epochs far past any real grant:
+            # every renewal is stale (post-epoch-bump) and must be rejected
+            # without disturbing leases, heartbeats, or retirement. Failures
+            # are collected, not asserted — an assert in a daemon thread
+            # would die silently and the test would still pass.
+            for i in itertools.count():
+                if stop.is_set():
+                    return
+                q = runner.queue
+                if q is not None and units:
+                    if q.renew(i % len(units), f"node-{i % nodes}",
+                               1000 + (i % 3)):
+                        wrongly_renewed.append((i % len(units), 1000 + (i % 3)))
+
+        h = None
+        if harass_renew:
+            h = threading.Thread(target=harasser, daemon=True)
+            h.start()
         try:
-            runner = ClusterRunner(pipe, ds.root, nodes=nodes,
-                                   fault_hook=fault, die_after=die_after,
-                                   lease_ttl_s=0.4, hb_interval_s=0.1,
-                                   straggler_factor=100.0, poll_s=0.02)
             results = runner.run(units)
         finally:
             stop.set()
             w.join(timeout=5)
+            if h is not None:
+                h.join(timeout=5)
+        assert wrongly_renewed == []
 
         assert violations == []
         assert sum(r.status == "ok" for r in results) == len(units)

@@ -1,0 +1,78 @@
+#!/usr/bin/env python
+"""Check that every intra-repo markdown link resolves.
+
+Scans ``docs/*.md`` plus the repo-root ``*.md`` files for inline links
+(``[text](target)``) and reference definitions (``[ref]: target``), and
+fails listing every relative target that does not exist on disk. External
+schemes (http/https/mailto) and pure in-page anchors are skipped; a
+``path#anchor`` target is checked for the file part only.
+
+Run locally:  python tools/check_links.py
+CI runs it in the ``docs`` job — a doc that names a file that moved breaks
+the build, not the next reader.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+# [text](target) — target up to the first unescaped ')'; plus [ref]: target
+_INLINE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_REFDEF = re.compile(r"^\[[^\]]+\]:\s+(\S+)", re.M)
+_SKIP_SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+
+
+def md_files() -> list[Path]:
+    files = sorted(REPO.glob("*.md")) + sorted((REPO / "docs").glob("*.md"))
+    return [f for f in files if f.is_file()]
+
+
+def strip_code(text: str) -> str:
+    """Drop fenced and inline code spans: links in code are examples."""
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    return re.sub(r"`[^`\n]*`", "", text)
+
+
+def check(files: list[Path]) -> list[str]:
+    broken: list[str] = []
+    for f in files:
+        text = strip_code(f.read_text())
+        targets = _INLINE.findall(text) + _REFDEF.findall(text)
+        for raw in targets:
+            if raw.startswith(_SKIP_SCHEMES) or raw.startswith("#"):
+                continue
+            path = raw.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (f.parent / path).resolve()
+            if not resolved.exists():
+                broken.append(f"{_rel(f)}: [{raw}] -> {_rel(resolved)} missing")
+    return broken
+
+
+def _rel(p: Path) -> str:
+    return str(p.relative_to(REPO)) if p.is_relative_to(REPO) else str(p)
+
+
+def main() -> int:
+    files = md_files()
+    broken = check(files)
+    n_links = sum(len(_INLINE.findall(strip_code(f.read_text())))
+                  + len(_REFDEF.findall(strip_code(f.read_text())))
+                  for f in files)
+    if broken:
+        print(f"{len(broken)} broken intra-repo link(s) "
+              f"across {len(files)} markdown files:")
+        for b in broken:
+            print(f"  {b}")
+        return 1
+    print(f"all intra-repo links resolve "
+          f"({len(files)} files, {n_links} link targets scanned)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
