@@ -1,0 +1,184 @@
+"""Locality-aware placement vs locality-blind scheduling on a warm cluster.
+
+The paper's headline perf claim is data-movement efficiency (0.60 Gb/s
+storage->compute on the lab network vs 0.33 Gb/s from cloud storage). PR 3's
+per-host input cache only helped when a unit *happened* to land where its
+inputs were already warm; this bench measures what coordinator-side
+digest-summary placement (``docs/cluster.md`` placement policy) buys on the
+64-unit chaos schedule:
+
+1. **Warm-up** — a locality-blind round-robin run over 4 nodes, each with
+   its *own* cache dir (``cache_per_node``: the multi-host shape in one
+   process). Each node ends up holding roughly its partition's input bytes.
+   The cache dirs are snapshotted.
+2. **Measured runs** — derivatives wiped, caches restored from the
+   snapshot, and the same 64 units re-run twice from an unpartitioned
+   backlog with mid-run chaos (one node dies after 4 units): once with
+   ``locality=False`` (blind FIFO fills/steals — a unit lands wherever)
+   and once with ``locality=True`` (grants/fills/steals/requeues scored
+   against the per-node digest summaries).
+
+Same seed, same chaos, same warm bytes — the only difference is whether the
+coordinator *uses* the summaries. The acceptance gate (checked here and in
+CI): locality-on must achieve a **strictly higher cache hit-rate** and move
+**strictly fewer bytes from storage** than locality-off. The JSON artifact
+(``benchmarks/out/locality_throughput.json``; CI uploads it) reports
+hit-rates, bytes from cache vs storage, effective and storage-link Gb/s, and
+the paper's 0.60/0.33 Gb/s reference for cross-PR trajectory.
+
+Runs thread-pinned in a subprocess like the other executor benches
+(see ``_pin``); override the artifact path with ``REPRO_BENCH_JSON``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+from ._pin import run_pinned
+
+N_SUBJECTS = 32
+SESSIONS = 2                        # 64 units
+SHAPE = (32, 32, 32)                # 128 KiB float32 input per unit
+PIPELINE = "bias_correct"
+NODES = 4
+PAPER_REFERENCE_GBPS = {"lab_network": 0.60, "cloud_storage": 0.33}
+
+_INPROC_FLAG = "REPRO_LOCALITY_BENCH_INPROC"
+_JSON_OUT = Path(__file__).resolve().parent / "out" / "locality_throughput.json"
+
+
+def _cache_totals(runner) -> dict:
+    totals: dict = {}
+    for st in (runner.stats.cache_by_node or {}).values():
+        for k, v in st.items():
+            totals[k] = totals.get(k, 0) + v
+    return totals
+
+
+def _hit_rate(totals: dict) -> float:
+    lookups = totals.get("hits", 0) + totals.get("misses", 0)
+    return totals.get("hits", 0) / lookups if lookups else 0.0
+
+
+def _run_inproc():
+    from repro.core import (builtin_pipelines, query_available_work,
+                            synthesize_dataset)
+    from repro.dist import ClusterRunner
+    rows = []
+    with tempfile.TemporaryDirectory() as td:
+        td = Path(td)
+        ds = synthesize_dataset(td / "ds", "locbench", n_subjects=N_SUBJECTS,
+                                sessions_per_subject=SESSIONS, shape=SHAPE)
+        pipe = builtin_pipelines()[PIPELINE]
+        units, _ = query_available_work(ds, pipe)
+        assert len(units) == N_SUBJECTS * SESSIONS
+        deriv = Path(ds.root) / "derivatives"
+        in_bits = sum(u.total_input_bytes for u in units) * 8
+        caches = td / "hosts"
+        snapshot = td / "hosts-warm"
+
+        # -- warm-up: populate per-node caches, locality-blind ---------------
+        warm = ClusterRunner(pipe, ds.root, nodes=NODES, locality=False,
+                             cache_dir=caches, cache_per_node=True,
+                             straggler_factor=100.0, poll_s=0.02)
+        results = warm.run(units)
+        ok = sum(r.status == "ok" for r in results)
+        if ok != len(units):
+            raise RuntimeError(f"warm-up incomplete: {ok}/{len(units)} ok")
+        shutil.copytree(caches, snapshot)
+        shutil.rmtree(deriv, ignore_errors=True)
+
+        # -- measured: same warm bytes, same chaos, scoring on/off -----------
+        def measure(locality: bool) -> dict:
+            shutil.rmtree(caches, ignore_errors=True)
+            shutil.copytree(snapshot, caches)
+            units_now, _ = query_available_work(ds, pipe)
+            runner = ClusterRunner(
+                pipe, ds.root, nodes=NODES, locality=locality,
+                partition="backlog", cache_dir=caches, cache_per_node=True,
+                die_after={"node-1": 4}, lease_ttl_s=0.6, hb_interval_s=0.1,
+                straggler_factor=100.0, poll_s=0.02)
+            t0 = time.time()
+            results = runner.run(units_now)
+            dt = time.time() - t0
+            ok = sum(r.status == "ok" for r in results)
+            if ok != len(units_now):
+                raise RuntimeError(
+                    f"locality={locality}: {ok}/{len(units_now)} ok")
+            totals = _cache_totals(runner)
+            shutil.rmtree(deriv, ignore_errors=True)
+            return {
+                "seconds": round(dt, 3), "ok": ok,
+                "hits": totals.get("hits", 0),
+                "misses": totals.get("misses", 0),
+                "hit_rate": round(_hit_rate(totals), 4),
+                "bytes_from_cache": totals.get("bytes_from_cache", 0),
+                "bytes_from_storage": totals.get("bytes_from_storage", 0),
+                "effective_gbps": round(in_bits / dt / 1e9, 3),
+                "storage_gbps": round(
+                    totals.get("bytes_from_storage", 0) * 8 / dt / 1e9, 3),
+                "locality_counters": runner.stats.locality,
+                "requeued": len(runner.stats.requeued),
+                "steals": sum(runner.stats.steals.values()),
+            }
+
+        off = measure(False)
+        on = measure(True)
+
+        for phase, m in (("off", off), ("on", on)):
+            rows.append((f"locality_hit_rate_{phase}", m["hit_rate"],
+                         f"{m['hits']}/{m['hits'] + m['misses']} warm-cluster "
+                         f"input fetches served node-local (locality {phase})"))
+            rows.append((f"locality_storage_bytes_{phase}",
+                         m["bytes_from_storage"],
+                         f"input bytes moved from shared storage "
+                         f"(locality {phase})"))
+            rows.append((f"locality_effective_gbps_{phase}",
+                         m["effective_gbps"],
+                         f"input bits consumed / wall-clock; paper reference "
+                         f"{PAPER_REFERENCE_GBPS['lab_network']} (lab) vs "
+                         f"{PAPER_REFERENCE_GBPS['cloud_storage']} (cloud)"))
+        saved = off["bytes_from_storage"] - on["bytes_from_storage"]
+        rows.append(("locality_storage_bytes_saved", saved,
+                     "bytes locality-aware placement kept off the storage "
+                     "link on the same warm 64-unit chaos schedule"))
+
+        # acceptance gate (CI runs this module; a regression must fail loud):
+        # strictly better reuse, strictly less data movement
+        if on["hit_rate"] <= off["hit_rate"]:
+            raise RuntimeError(
+                f"locality-on hit rate {on['hit_rate']} not strictly above "
+                f"locality-off {off['hit_rate']} — placement regression")
+        if on["bytes_from_storage"] >= off["bytes_from_storage"]:
+            raise RuntimeError(
+                f"locality-on moved {on['bytes_from_storage']} bytes from "
+                f"storage, not strictly below locality-off "
+                f"{off['bytes_from_storage']} — placement regression")
+
+    out = Path(os.environ.get("REPRO_BENCH_JSON", _JSON_OUT))
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps({
+        "units": N_SUBJECTS * SESSIONS, "shape": list(SHAPE), "nodes": NODES,
+        "chaos": {"die_after": {"node-1": 4}},
+        "paper_reference_gbps": PAPER_REFERENCE_GBPS,
+        "locality_off": off, "locality_on": on,
+        "gate": {"hit_rate_strictly_higher": True,
+                 "storage_bytes_strictly_lower": True},
+        "rows": [[n, v, d] for n, v, d in rows],
+    }, indent=1))
+    return rows
+
+
+def run():
+    """Benchmark entry (benchmarks.run): re-exec pinned — see ``_pin``."""
+    return run_pinned("benchmarks.locality_throughput", "locality_",
+                      _INPROC_FLAG, _run_inproc, timeout=1800)
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(",".join(str(c) for c in row))

@@ -44,6 +44,11 @@ SESSIONS = 2                        # 32 units
 SHAPE = (64, 64, 64)                # 1 MiB float32 input per unit
 PIPELINE = "bias_correct"
 FETCH_REPS = 5
+# the paper's storage->compute link speeds (§3): the lab-network setup the
+# cost argument depends on, and the cloud-storage baseline it beats. Keeping
+# both in the artifact makes the repo's effective Gb/s trajectory comparable
+# across PRs against a fixed yardstick.
+PAPER_REFERENCE_GBPS = {"lab_network": 0.60, "cloud_storage": 0.33}
 
 _INPROC_FLAG = "REPRO_RPC_BENCH_INPROC"
 _JSON_OUT = Path(__file__).resolve().parent / "out" / "rpc_throughput.json"
@@ -154,17 +159,34 @@ def _run_inproc():
             hits = sum(1 for u in units_now
                        if (p := Provenance.load(Path(u.out_dir))) is not None
                        and p.cache_hit)
+            # bytes served per link (coordinator-host cache counters; the
+            # external worker's cache adds to the real saving but reports in
+            # its own process) -> effective storage-link Gb/s vs the paper's
+            cstats = runner.stats.cache or {}
+            bfc = cstats.get("bytes_from_cache", 0)
+            bfs = cstats.get("bytes_from_storage", 0)
             e2e[phase] = {"seconds": round(dt, 3), "ok": ok,
                           "units": len(units_now), "cache_hit_commits": hits,
                           "images_per_s": round(ok / dt, 3),
                           "gbps": round(in_bits / dt / 1e9, 3),
+                          "bytes_from_cache": bfc,
+                          "bytes_from_storage": bfs,
+                          "storage_gbps": round(bfs * 8 / dt / 1e9, 3),
                           "remote_nodes": runner.stats.remote_nodes,
                           "processed": runner.stats.processed}
             rows.append((f"rpc_e2e_images_per_s_{phase}", e2e[phase]["images_per_s"],
                          f"{ok}/{len(units_now)} ok in {dt:.2f}s over socket "
                          f"transport, {hits} cache-hit commits"))
+            rows.append((f"rpc_e2e_effective_gbps_{phase}",
+                         e2e[phase]["gbps"],
+                         f"input bits consumed / wall-clock "
+                         f"({bfc} B from cache, {bfs} B from storage); paper "
+                         f"reference {PAPER_REFERENCE_GBPS['lab_network']} "
+                         f"(lab) vs {PAPER_REFERENCE_GBPS['cloud_storage']} "
+                         f"(cloud)"))
             shutil.rmtree(deriv, ignore_errors=True)
         report["e2e"] = e2e
+        report["paper_reference_gbps"] = PAPER_REFERENCE_GBPS
     out = Path(os.environ.get("REPRO_BENCH_JSON", _JSON_OUT))
     out.parent.mkdir(parents=True, exist_ok=True)
     report["rows"] = [[n, v, d] for n, v, d in rows]

@@ -39,6 +39,14 @@ class Provenance:
     # the local bytes), so this flag is pure data-plane provenance: it lets a
     # reader audit which commits never touched the storage link.
     cache_hit: bool = False
+    # Data-movement provenance for locality-aware scheduling: the fraction of
+    # this unit's input bytes the coordinator *estimated* were already local
+    # when it granted the lease (the placement score, from the node's digest
+    # summary), and the input bytes that *actually* came off node-local disk.
+    # Comparing the two audits the scheduler: a high score with low
+    # bytes_from_cache means a stale summary or Bloom false positive.
+    locality_score: float = 0.0
+    bytes_from_cache: int = 0
 
     def save(self, out_dir: Path):
         """Atomic write (tmp + rename): a concurrent reader — or a racing
@@ -64,14 +72,16 @@ def make_provenance(pipeline: str, digest: str, inputs: Dict[str, str],
                     outputs: Dict[str, str], started: float, status: str = "ok",
                     error: Optional[str] = None, attempt: int = 1,
                     node_id: str = "", lease_epoch: int = 0,
-                    cache_hit: bool = False) -> Provenance:
+                    cache_hit: bool = False, locality_score: float = 0.0,
+                    bytes_from_cache: int = 0) -> Provenance:
     return Provenance(
         pipeline=pipeline, pipeline_digest=digest,
         user=getpass.getuser(), host=platform.node(),
         started_at=started, finished_at=time.time(),
         inputs=inputs, outputs=outputs, status=status, error=error,
         attempt=attempt, node_id=node_id, lease_epoch=lease_epoch,
-        cache_hit=cache_hit)
+        cache_hit=cache_hit, locality_score=locality_score,
+        bytes_from_cache=bytes_from_cache)
 
 
 def is_complete(out_dir: Path, digest: Optional[str] = None) -> bool:

@@ -23,10 +23,23 @@ class WorkUnit:
     pipeline_digest: str
     inputs: Dict[str, str]          # suffix -> path relative to dataset root
     out_dir: str                    # derivatives/<pipeline>/sub-x/ses-y
+    # data-plane shape of the unit, straight from the manifest: content
+    # digests and sizes per input suffix. The cluster queue scores these
+    # against per-node cache summaries to place the unit where its bytes
+    # already live (locality-aware scheduling, docs/cluster.md). Both default
+    # empty so pre-existing units JSON (and manifests scanned with
+    # checksum=False, whose digests are "") keep working — the unit is then
+    # locality-blind, never broken.
+    input_digests: Dict[str, str] = dataclasses.field(default_factory=dict)
+    input_bytes: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     @property
     def job_id(self) -> str:
         return f"{self.dataset}_{self.pipeline}_sub-{self.subject}_ses-{self.session}"
+
+    @property
+    def total_input_bytes(self) -> int:
+        return sum(self.input_bytes.values())
 
 
 @dataclasses.dataclass
@@ -62,11 +75,15 @@ def query_available_work(manifest: DatasetManifest, pipeline: Pipeline, *,
         if is_complete(out_dir, digest):
             excluded.append(Exclusion(sub, ses, "already processed (digest match)"))
             continue
+        req = pipeline.spec.required_suffixes
         wu = WorkUnit(
             dataset=manifest.name, subject=sub, session=ses,
             pipeline=pipeline.name, pipeline_digest=digest,
-            inputs={s: by_suffix[s].path for s in pipeline.spec.required_suffixes},
-            out_dir=str(out_dir))
+            inputs={s: by_suffix[s].path for s in req},
+            out_dir=str(out_dir),
+            input_digests={s: by_suffix[s].sha256 for s in req
+                           if by_suffix[s].sha256},
+            input_bytes={s: by_suffix[s].size_bytes for s in req})
         if wu.job_id in leases:
             excluded.append(Exclusion(sub, ses,
                                       f"leased by {leases[wu.job_id]}"))

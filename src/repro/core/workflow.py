@@ -115,6 +115,11 @@ class UnitResult:
     seconds: float
     attempts: int
     error: Optional[str] = None
+    # data-movement accounting (mirrors the provenance stamps): input bytes
+    # served from the host cache on the committing run, and the scheduler's
+    # grant-time estimate of the locally-available input fraction
+    bytes_from_cache: int = 0
+    locality_score: float = 0.0
 
 
 # Commit arbitration for concurrent workers racing the same output dir.
@@ -150,8 +155,9 @@ def _commit_lock(out_dir: Path) -> _DirLock:
         return holder
 
 
-# (inputs by suffix, rel-path -> sha256, every input served from host cache)
-LoadedInputs = Tuple[Dict[str, np.ndarray], Dict[str, str], bool]
+# (inputs by suffix, rel-path -> sha256, every input served from host cache,
+#  input bytes that came off node-local disk rather than shared storage)
+LoadedInputs = Tuple[Dict[str, np.ndarray], Dict[str, str], bool, int]
 
 
 def load_unit_inputs(unit: WorkUnit, data_root: Path,
@@ -164,20 +170,24 @@ def load_unit_inputs(unit: WorkUnit, data_root: Path,
     bytes are already on the host's local disk instead of re-reading shared
     storage; the returned digests are identical either way. The third element
     of the result is True iff *every* input came from the cache — stamped
-    into provenance as ``cache_hit``."""
+    into provenance as ``cache_hit`` — and the fourth counts the input bytes
+    the cache kept off the storage link (``bytes_from_cache``)."""
     data_root = Path(data_root)
     inputs: Dict[str, np.ndarray] = {}
     in_sums: Dict[str, str] = {}
     hits = 0
+    hit_bytes = 0
     for suffix, rel in unit.inputs.items():
         if cache is not None:
-            arr, digest, hit = cache.fetch_array(data_root / rel)
+            arr, digest, hit, nbytes = cache.fetch_array(data_root / rel)
             hits += bool(hit)
+            hit_bytes += nbytes if hit else 0
         else:
             arr, digest = sha256_load_array(data_root / rel)
         in_sums[rel] = digest
         inputs[suffix] = arr
-    return inputs, in_sums, bool(unit.inputs) and hits == len(unit.inputs)
+    return (inputs, in_sums,
+            bool(unit.inputs) and hits == len(unit.inputs), hit_bytes)
 
 
 def safe_load_unit_inputs(unit: WorkUnit, data_root: Path,
@@ -195,7 +205,7 @@ def run_unit(unit: WorkUnit, pipeline: Pipeline, data_root: Path,
              fault_hook: Optional[Callable[[WorkUnit, int], None]] = None,
              preloaded: Optional[LoadedInputs] = None,
              node_id: str = "", lease_epoch: int = 0,
-             cache=None) -> UnitResult:
+             cache=None, locality_score: float = 0.0) -> UnitResult:
     """Execute one work unit: verify inputs, run, write outputs + provenance.
 
     ``preloaded`` short-circuits the input stage with already verified+loaded
@@ -206,7 +216,9 @@ def run_unit(unit: WorkUnit, pipeline: Pipeline, data_root: Path,
     provenance when the unit runs under a cluster lease
     (:mod:`repro.dist.cluster`); ``cache`` serves the input stage from the
     host's content-addressed cache and stamps ``cache_hit`` when every input
-    avoided shared storage.
+    avoided shared storage. ``locality_score`` is the scheduler's grant-time
+    estimate of the locally-available input fraction — stamped next to the
+    measured ``bytes_from_cache`` so placement quality is auditable per image.
     """
     t0 = time.time()
     data_root = Path(data_root)
@@ -217,10 +229,10 @@ def run_unit(unit: WorkUnit, pipeline: Pipeline, data_root: Path,
         if fault_hook is not None:
             fault_hook(unit, attempt)       # test hook: injected node failures
         if preloaded is not None:
-            inputs, in_sums, cache_hit = preloaded
+            inputs, in_sums, cache_hit, hit_bytes = preloaded
         else:
-            inputs, in_sums, cache_hit = load_unit_inputs(unit, data_root,
-                                                          cache=cache)
+            inputs, in_sums, cache_hit, hit_bytes = load_unit_inputs(
+                unit, data_root, cache=cache)
         outputs = pipeline.run(inputs)
         out_sums = {}
         out_dir.mkdir(parents=True, exist_ok=True)
@@ -233,9 +245,12 @@ def run_unit(unit: WorkUnit, pipeline: Pipeline, data_root: Path,
                 return UnitResult(unit, "skipped", time.time() - t0, attempt)
             make_provenance(unit.pipeline, unit.pipeline_digest, in_sums,
                             out_sums, t0, attempt=attempt, node_id=node_id,
-                            lease_epoch=lease_epoch,
-                            cache_hit=cache_hit).save(out_dir)
-        return UnitResult(unit, "ok", time.time() - t0, attempt)
+                            lease_epoch=lease_epoch, cache_hit=cache_hit,
+                            locality_score=locality_score,
+                            bytes_from_cache=hit_bytes).save(out_dir)
+        return UnitResult(unit, "ok", time.time() - t0, attempt,
+                          bytes_from_cache=hit_bytes,
+                          locality_score=locality_score)
     except Exception as e:  # noqa: BLE001 — recorded, retried by the runner
         holder = _commit_lock(out_dir)
         with holder.lock:
@@ -254,7 +269,8 @@ def run_unit_with_retries(
         max_retries: int = 2, backoff_s: float = 0.05,
         fault_hook: Optional[Callable[[WorkUnit, int], None]] = None,
         preloaded: Optional[LoadedInputs] = None,
-        node_id: str = "", lease_epoch: int = 0, cache=None) -> UnitResult:
+        node_id: str = "", lease_epoch: int = 0, cache=None,
+        locality_score: float = 0.0) -> UnitResult:
     """The executor retry stage, shared by :class:`LocalRunner` workers and
     cluster nodes: run a unit up to ``max_retries + 1`` times with exponential
     backoff. Prefetched inputs — and the host input cache — are only trusted
@@ -266,7 +282,8 @@ def run_unit_with_retries(
                        fault_hook=fault_hook,
                        preloaded=preloaded if attempt == 1 else None,
                        node_id=node_id, lease_epoch=lease_epoch,
-                       cache=cache if attempt == 1 else None)
+                       cache=cache if attempt == 1 else None,
+                       locality_score=locality_score)
         if res.status in ("ok", "skipped"):
             break
         if attempt <= max_retries:          # no dead sleep after the last try

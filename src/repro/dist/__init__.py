@@ -2,7 +2,7 @@
 the multi-node work-stealing executor (``cluster`` + ``queue``), its socket
 transport (``rpc``), and the per-host content-addressed input cache
 (``cache``)."""
-from .cache import InputCache, cache_from_env
+from .cache import DigestSummary, InputCache, cache_from_env
 from .cluster import ClusterRunner, ClusterStats, Node, run_worker
 from .queue import Lease, WorkQueue
 from .sharding import (Rules, attn_shard_choice, constrain, constrain_residual,
@@ -11,7 +11,8 @@ from .sharding import (Rules, attn_shard_choice, constrain, constrain_residual,
 
 __all__ = [
     "ClusterRunner", "ClusterStats", "Node", "Lease", "WorkQueue",
-    "InputCache", "cache_from_env", "QueueClient", "QueueServer", "run_worker",
+    "DigestSummary", "InputCache", "cache_from_env", "QueueClient",
+    "QueueServer", "run_worker",
     "Rules", "attn_shard_choice", "constrain", "constrain_residual",
     "constrain_params_gathered", "current_rules", "param_spec_for",
     "param_specs", "shardings_for", "tp_size", "use_rules",

@@ -32,6 +32,14 @@ Design:
   persists as an append-only JSON-lines journal (O(1) per insert; compacted
   atomically on eviction, torn tail lines skipped on load) so a restarted
   worker re-uses the host's warm cache.
+* **Digest summary.** The cache maintains a :class:`DigestSummary` — a
+  counting Bloom filter over the blob sha256s, updated on every insert and
+  evict — that serializes to a few KB no matter how many blobs the host
+  holds. Nodes push it (full on join, deltas piggybacked on heartbeats) to
+  the coordinator, whose :class:`~repro.dist.queue.WorkQueue` scores
+  candidate units by estimated cache-local bytes and places work where its
+  inputs already live. That turns this cache from a lucky retry win into a
+  placement policy (see the placement-policy section of ``docs/cluster.md``).
 
 Thread-safe: one lock guards index + LRU state; nodes sharing a host (and a
 cache dir) within a process share one :class:`InputCache`. Cross-process
@@ -46,9 +54,9 @@ import io
 import json
 import os
 import threading
-from collections import OrderedDict
+from collections import OrderedDict, deque
 from pathlib import Path
-from typing import Dict, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -74,6 +82,108 @@ def cache_from_env(default_dir: Optional[Path] = None) -> Optional["InputCache"]
     return InputCache(Path(root), max_bytes=max_bytes)
 
 
+SUMMARY_WIRE_VERSION = 1     # bump when the summary wire shape changes;
+                             # receivers ignore versions they don't speak
+                             # (locality-blind fallback, never a crash)
+
+# retained per-cache op-log window: a consumer whose cursor fell further
+# behind than this gets a full summary instead of a delta
+SUMMARY_OPS_RETAINED = 4096
+
+# Bloom positions require a sha256 of the digest *string*; the coordinator
+# probes the same unit digests against every node's summary on every grant,
+# so memoize the hash bytes process-wide (positions are then one cheap mod
+# per cell). Bounded by wholesale clear; GIL makes the get/set race benign —
+# a lost write just re-hashes once.
+_DIGEST_HASH_CACHE: Dict[str, bytes] = {}
+_DIGEST_HASH_CACHE_MAX = 1 << 16
+
+
+def _digest_hash(digest: str) -> bytes:
+    h = _DIGEST_HASH_CACHE.get(digest)
+    if h is None:
+        if len(_DIGEST_HASH_CACHE) >= _DIGEST_HASH_CACHE_MAX:
+            _DIGEST_HASH_CACHE.clear()
+        h = hashlib.sha256(digest.encode()).digest()
+        _DIGEST_HASH_CACHE[digest] = h
+    return h
+
+
+class DigestSummary:
+    """Counting Bloom filter over blob content digests.
+
+    The compact "what does this host hold" answer the coordinator needs for
+    locality-aware placement: ``d in summary`` is *probably in the cache*
+    (false positives at the usual Bloom rate, never false negatives for
+    balanced add/discard), costs O(k), and the whole structure serializes to
+    a few KB regardless of blob count. Counting (not bit) cells make
+    evictions removable, so one summary tracks a churning LRU cache for the
+    life of the host.
+
+    Positions are derived by re-hashing the digest string (sha256 of its
+    UTF-8 bytes, k 4-byte windows mod m) — uniform for any key, including
+    non-hex test digests. Not thread-safe on its own; :class:`InputCache`
+    mutates it under its lock, and the coordinator under the queue lock.
+    """
+
+    def __init__(self, m: int = 8192, k: int = 4):
+        if m <= 0 or k <= 0 or 4 * k > 32:
+            raise ValueError(f"bad summary geometry m={m} k={k}")
+        self.m = int(m)
+        self.k = int(k)
+        self._counts: List[int] = [0] * self.m
+        self._n = 0                          # distinct adds currently held
+
+    def _positions(self, digest: str) -> List[int]:
+        raw = _digest_hash(digest)
+        return [int.from_bytes(raw[4 * i:4 * i + 4], "big") % self.m
+                for i in range(self.k)]
+
+    def add(self, digest: str):
+        for p in self._positions(digest):
+            if self._counts[p] < 0xFFFF:     # saturate, never wrap
+                self._counts[p] += 1
+        self._n += 1
+
+    def discard(self, digest: str):
+        """Remove one prior ``add``. A discard for a digest never added is a
+        no-op (decrementing would manufacture false negatives elsewhere)."""
+        pos = self._positions(digest)
+        if any(self._counts[p] == 0 for p in pos):
+            return
+        for p in pos:
+            self._counts[p] -= 1
+        self._n = max(0, self._n - 1)
+
+    def __contains__(self, digest: str) -> bool:
+        return all(self._counts[p] > 0 for p in self._positions(digest))
+
+    def __len__(self) -> int:
+        return self._n
+
+    def to_wire(self) -> dict:
+        """Sparse JSON encoding: only non-zero cells travel, so an empty or
+        lightly-loaded summary is tens of bytes and a full one a few KB."""
+        return {"v": SUMMARY_WIRE_VERSION, "m": self.m, "k": self.k,
+                "n": self._n,
+                "nz": [[i, c] for i, c in enumerate(self._counts) if c]}
+
+    @classmethod
+    def from_wire(cls, wire: object) -> Optional["DigestSummary"]:
+        """Decode a :meth:`to_wire` payload; ``None`` for anything this
+        version doesn't speak — the caller falls back to locality-blind."""
+        if not isinstance(wire, dict) or wire.get("v") != SUMMARY_WIRE_VERSION:
+            return None
+        try:
+            s = cls(int(wire["m"]), int(wire["k"]))
+            for i, c in wire["nz"]:
+                s._counts[int(i)] = min(0xFFFF, max(0, int(c)))
+            s._n = max(0, int(wire.get("n", 0)))
+            return s
+        except (KeyError, TypeError, ValueError, IndexError):
+            return None
+
+
 class InputCache:
     """sha256-keyed, size-bounded LRU blob cache on node-local disk."""
 
@@ -91,6 +201,16 @@ class InputCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.bytes_from_cache = 0     # blob bytes served locally (hits)
+        self.bytes_from_storage = 0   # bytes that crossed the storage link
+        # digest summary + op log for locality-aware placement: every blob
+        # insert/evict lands in the summary and in a bounded op window that
+        # nodes drain as heartbeat-piggybacked deltas (multiple nodes sharing
+        # one host cache each keep their own cursor; a cursor that falls off
+        # the window triggers a full re-sync instead)
+        self.summary = DigestSummary()
+        self._ops: Deque[Tuple[int, str, str]] = deque()   # (seq, op, digest)
+        self._seq = 0
         self._load_persisted()
 
     # -- persistence ---------------------------------------------------------
@@ -124,6 +244,7 @@ class InputCache:
             found.append((st.st_mtime, p.name, st.st_size))
         for _, name, size in sorted(found):      # oldest first = LRU order
             self._blobs[name] = size
+            self.summary.add(name)
         self._total = sum(self._blobs.values())
         self._index = {k: d for k, d in persisted.items() if d in self._blobs}
 
@@ -149,6 +270,15 @@ class InputCache:
     def _blob_path(self, digest: str) -> Path:
         return self.blob_dir / digest
 
+    def _record_op(self, op: str, digest: str):
+        """Caller holds the lock: mirror a blob insert/evict into the digest
+        summary and the bounded delta window nodes drain for the coordinator."""
+        (self.summary.add if op == "add" else self.summary.discard)(digest)
+        self._seq += 1
+        self._ops.append((self._seq, op, digest))
+        while len(self._ops) > SUMMARY_OPS_RETAINED:
+            self._ops.popleft()
+
     def _evict_to_budget(self, evicted_out: List[str]) -> bool:
         """Caller holds the lock. Drops LRU entries from the in-memory state
         and appends their digests to ``evicted_out`` — the caller unlinks the
@@ -159,18 +289,21 @@ class InputCache:
             self._total -= size
             evicted_out.append(digest)
             self.evictions += 1
+            self._record_op("drop", digest)
             evicted = True
         if evicted:
             live = set(self._blobs)
             self._index = {k: d for k, d in self._index.items() if d in live}
         return evicted
 
-    def fetch_array(self, src: Path) -> Tuple[np.ndarray, str, bool]:
+    def fetch_array(self, src: Path) -> Tuple[np.ndarray, str, bool, int]:
         """Load the .npy at ``src``, serving from the host cache when its
-        bytes are already local. Returns ``(array, sha256, cache_hit)`` —
-        the digest is of the file content either way, so provenance input
-        checksums are identical on hit and miss. A miss reads shared storage
-        once and inserts the bytes (then evicts down to ``max_bytes``)."""
+        bytes are already local. Returns ``(array, sha256, cache_hit,
+        nbytes)`` — the digest is of the file content either way, so
+        provenance input checksums are identical on hit and miss, and
+        ``nbytes`` is the file size the hit kept off (or the miss moved over)
+        the storage link. A miss reads shared storage once and inserts the
+        bytes (then evicts down to ``max_bytes``)."""
         src = Path(src)
         key = self._source_key(src)
         with self._lock:
@@ -186,12 +319,14 @@ class InputCache:
                     if digest in self._blobs:
                         self._blobs.move_to_end(digest)       # LRU touch
                     self.hits += 1
+                    self.bytes_from_cache += len(data)
                 return (np.load(io.BytesIO(data), allow_pickle=False),
-                        digest, True)
+                        digest, True, len(data))
             with self._lock:                # corrupt or vanished blob: drop it
                 size = self._blobs.pop(digest, None)
                 if size is not None:
                     self._total -= size
+                    self._record_op("drop", digest)
                 self._blob_path(digest).unlink(missing_ok=True)
                 self._index = {k: d for k, d in self._index.items()
                                if d != digest}
@@ -205,7 +340,8 @@ class InputCache:
             # (and re-wipe on each fetch) for nothing — pass it through
             with self._lock:
                 self.misses += 1
-            return arr, digest, False
+                self.bytes_from_storage += len(data)
+            return arr, digest, False, len(data)
         with self._lock:
             known = digest in self._blobs
         if not known:
@@ -217,8 +353,10 @@ class InputCache:
         evict: List[str] = []
         with self._lock:
             self.misses += 1
+            self.bytes_from_storage += len(data)
             if digest not in self._blobs:
                 self._total += len(data)
+                self._record_op("add", digest)
             self._blobs[digest] = len(data)
             self._blobs.move_to_end(digest)
             if key:
@@ -229,7 +367,43 @@ class InputCache:
                 self._append_index(key, digest)
         for d in evict:                          # unlinks, after the lock
             self._blob_path(d).unlink(missing_ok=True)
-        return arr, digest, False
+        return arr, digest, False, len(data)
+
+    # -- digest-summary sync (locality-aware placement) ----------------------
+
+    def _stats_locked(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
+                "bytes": self._total, "blobs": len(self._blobs),
+                "bytes_from_cache": self.bytes_from_cache,
+                "bytes_from_storage": self.bytes_from_storage}
+
+    def summary_sync(self) -> Tuple[int, dict]:
+        """Full summary push: ``(cursor, wire)`` where the wire carries the
+        whole Bloom filter plus current cache stats. A node sends this once
+        on join (``register``/``put_summary``) and keeps ``cursor`` to drain
+        deltas from."""
+        with self._lock:
+            return self._seq, {"v": SUMMARY_WIRE_VERSION,
+                               "full": self.summary.to_wire(),
+                               "stats": self._stats_locked()}
+
+    def summary_delta_since(self, cursor: int) -> Tuple[int, dict]:
+        """Heartbeat piggyback: ``(new_cursor, wire)``. The wire carries the
+        blob digests added/dropped since ``cursor`` (typically empty or a
+        handful — bytes, not KB) and always the live stats counters. A
+        cursor that fell off the retained op window degrades to a full
+        summary, so a long-asleep node resyncs instead of drifting."""
+        with self._lock:
+            stats = self._stats_locked()
+            if self._ops and cursor < self._ops[0][0] - 1:
+                return self._seq, {"v": SUMMARY_WIRE_VERSION,
+                                   "full": self.summary.to_wire(),
+                                   "stats": stats}
+            add = [d for seq, op, d in self._ops if seq > cursor and op == "add"]
+            drop = [d for seq, op, d in self._ops if seq > cursor and op == "drop"]
+            return self._seq, {"v": SUMMARY_WIRE_VERSION, "add": add,
+                               "drop": drop, "stats": stats}
 
     # -- introspection -------------------------------------------------------
 
@@ -243,6 +417,4 @@ class InputCache:
 
     def stats(self) -> Dict[str, int]:
         with self._lock:
-            return {"hits": self.hits, "misses": self.misses,
-                    "evictions": self.evictions,
-                    "bytes": self._total, "blobs": len(self._blobs)}
+            return self._stats_locked()

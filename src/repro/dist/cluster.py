@@ -66,14 +66,19 @@ from .queue import Lease, WorkQueue
 def result_meta(res: UnitResult) -> dict:
     """JSON-safe result payload attached to ``complete`` so coordinators in
     other processes can rebuild a :class:`UnitResult` (sans the unit object,
-    which both sides already hold by index)."""
+    which both sides already hold by index). Carries the data-movement
+    stamps too, so ``results_snapshot`` shows cache hit-rates and placement
+    quality without anyone grepping provenance files."""
     return {"seconds": res.seconds, "attempts": res.attempts,
-            "error": res.error}
+            "error": res.error, "bytes_from_cache": res.bytes_from_cache,
+            "locality_score": res.locality_score}
 
 
 def _meta_result(unit: WorkUnit, m: dict) -> UnitResult:
     return UnitResult(unit, m["status"], m.get("seconds", 0.0),
-                      m.get("attempts", 1), m.get("error"))
+                      m.get("attempts", 1), m.get("error"),
+                      bytes_from_cache=m.get("bytes_from_cache", 0),
+                      locality_score=m.get("locality_score", 0.0))
 
 
 class Node:
@@ -95,7 +100,8 @@ class Node:
                  fault_hook: Optional[Callable[[WorkUnit, int], None]] = None,
                  hb_interval_s: float = 0.25, poll_s: float = 0.02,
                  die_after: Optional[int] = None,
-                 cache: Optional[InputCache] = None, renew: bool = True):
+                 cache: Optional[InputCache] = None, renew: bool = True,
+                 summary_cursor: Optional[int] = None):
         self.node_id = node_id
         self.queue = queue
         self.pipeline = pipeline
@@ -110,6 +116,11 @@ class Node:
         self.die_after = die_after
         self.cache = cache
         self.renew = renew
+        # cache op-log position last pushed; a caller that already announced
+        # the full summary (run_worker piggybacks it on register) hands the
+        # sync cursor in, so the loop doesn't re-send an identical full push
+        self._summary_cursor = summary_cursor or 0
+        self._summary_pushed = summary_cursor is not None
         self.killed = threading.Event()
         self.processed = 0
         self.lease_lost = 0                  # renewals rejected (stale epoch)
@@ -141,16 +152,44 @@ class Node:
 
     # -- stages -------------------------------------------------------------
 
+    def _push_summary(self):
+        """Full digest-summary push for this host's cache — the coordinator
+        learns what bytes this node already holds before it makes any
+        placement decision for it. Best-effort: an old coordinator (no
+        ``put_summary``) leaves the run locality-blind, never broken."""
+        if self.cache is None or self._summary_pushed:
+            return
+        cursor, wire = self.cache.summary_sync()
+        try:
+            put = getattr(self.queue, "put_summary", None)
+            if put is not None and put(self.node_id, wire) is not False:
+                self._summary_cursor = cursor
+                self._summary_pushed = True
+        except RuntimeError:
+            pass                           # pre-summary coordinator: blind
+
+    def _summary_delta(self):
+        """Delta wire for the heartbeat piggyback (None when the transport
+        downgraded to the pre-summary protocol)."""
+        if self.cache is None:
+            return None
+        cursor, wire = self.cache.summary_delta_since(self._summary_cursor)
+        self._summary_cursor = cursor
+        return wire
+
     def _heartbeat(self):
         """Node-level heartbeat plus the lease renewal loop: every interval,
-        re-assert liveness and renew each in-hand lease. A rejected renewal
+        re-assert liveness — piggybacking the cache digest-summary delta, so
+        coordinator-side placement scoring tracks this host's cache within a
+        heartbeat — and renew each in-hand lease. A rejected renewal
         (the coordinator reaped us or re-granted the unit — WAN-scale TTLs
         make this routine) is counted and the stale lease dropped from the
         renew set; the unit itself still runs to completion, where commit
         arbitration makes the zombie write harmless."""
         while not self.killed.is_set():
             try:
-                self.queue.heartbeat(self.node_id)
+                self.queue.heartbeat(self.node_id,
+                                     summary_delta=self._summary_delta())
                 if self.renew:
                     with self._held_lock:
                         held = list(self._held)
@@ -179,6 +218,9 @@ class Node:
     def _work(self):
         inhand: deque = deque()            # [(unit, lease, load_future|None)]
         try:
+            # announce this host's warm bytes before asking for work: the
+            # very first grant can then already be locality-aware
+            self._push_summary()
             while not self.killed.is_set():
                 # top up the leased in-hand window; prefetch primary inputs
                 # (a speculative twin skips prefetch — it must start *now*)
@@ -208,19 +250,25 @@ class Node:
                 # straggler clock starts at compute, not at the input load —
                 # a slow prefetch must not trigger spurious speculation
                 self.queue.mark_started(idx)
+                # grant-time placement estimate, normalized to the unit's
+                # input bytes — stamped into provenance as locality_score
+                total = unit.total_input_bytes
+                score = (min(1.0, lease.local_bytes / total) if total else 0.0)
                 if lease.speculative:
                     res = run_unit(unit, self.pipeline, self.data_root,
                                    attempt=self.max_retries + 2,
                                    fault_hook=self.fault_hook,
                                    node_id=self.node_id,
-                                   lease_epoch=lease.epoch, cache=self.cache)
+                                   lease_epoch=lease.epoch, cache=self.cache,
+                                   locality_score=score)
                 else:
                     res = run_unit_with_retries(
                         unit, self.pipeline, self.data_root,
                         max_retries=self.max_retries,
                         backoff_s=self.backoff_s, fault_hook=self.fault_hook,
                         preloaded=pre, node_id=self.node_id,
-                        lease_epoch=lease.epoch, cache=self.cache)
+                        lease_epoch=lease.epoch, cache=self.cache,
+                        locality_score=score)
                 self.processed += 1
                 with self._held_lock:
                     self._held.discard((idx, lease.epoch))
@@ -247,7 +295,10 @@ class ClusterStats:
     dead_nodes: List[str]
     remote_nodes: List[str] = dataclasses.field(default_factory=list)
     renew_rejections: int = 0
-    cache: Optional[Dict[str, int]] = None    # InputCache.stats() when caching
+    cache: Optional[Dict[str, int]] = None    # coordinator-host cache stats
+                                              # (summed over per-node caches)
+    locality: Optional[Dict[str, int]] = None  # queue placement counters
+    cache_by_node: Optional[Dict[str, Dict[str, int]]] = None
 
 
 class ClusterRunner:
@@ -279,7 +330,9 @@ class ClusterRunner:
                  die_after: Optional[Dict[str, int]] = None,
                  transport: str = "local", serve_addr: Optional[str] = None,
                  cache_dir: Optional[Path] = None,
-                 cache_bytes: Optional[int] = None):
+                 cache_bytes: Optional[int] = None,
+                 cache_per_node: bool = False,
+                 locality: bool = True, partition: str = "round_robin"):
         if nodes < 1:
             raise ValueError("need at least one node")
         if transport not in ("local", "rpc"):
@@ -301,6 +354,13 @@ class ClusterRunner:
         self.serve_addr = serve_addr
         self.cache_dir = cache_dir
         self.cache_bytes = cache_bytes
+        # cache_per_node gives every local node its own cache dir
+        # (cache_dir/<node_id>) — the multi-host shape (one cache per host)
+        # simulated in one process, which is what makes locality-aware
+        # placement testable and benchmarkable without a real cluster
+        self.cache_per_node = cache_per_node
+        self.locality = locality
+        self.partition = partition
         self.stats: Optional[ClusterStats] = None
         self.queue: Optional[WorkQueue] = None
         self.server = None                   # QueueServer once run() serves
@@ -308,17 +368,21 @@ class ClusterRunner:
     def node_ids(self) -> List[str]:
         return [f"node-{i}" for i in range(self.n_nodes)]
 
-    def _make_cache(self) -> Optional[InputCache]:
+    def _make_cache(self, node_id: Optional[str] = None) -> Optional[InputCache]:
         if self.cache_dir is None:
             return None
+        root = Path(self.cache_dir)
+        if self.cache_per_node and node_id is not None:
+            root = root / node_id
         kw = {} if self.cache_bytes is None else {"max_bytes": self.cache_bytes}
-        return InputCache(Path(self.cache_dir), **kw)
+        return InputCache(root, **kw)
 
     def run(self, units: List[WorkUnit]) -> List[UnitResult]:
         if not units:
             return []
         node_ids = self.node_ids()
-        queue = WorkQueue(units, node_ids, lease_ttl_s=self.lease_ttl_s)
+        queue = WorkQueue(units, node_ids, lease_ttl_s=self.lease_ttl_s,
+                          locality=self.locality, partition=self.partition)
         self.queue = queue
         serving = self.transport == "rpc" or self.serve_addr is not None
         clients = []
@@ -359,13 +423,16 @@ class ClusterRunner:
             clients.append(client)
             return client
 
-        cache = self._make_cache()
+        caches = {nid: (self._make_cache(nid) if self.cache_per_node
+                        else None) for nid in node_ids}
+        shared_cache = None if self.cache_per_node else self._make_cache()
         nodes = [Node(nid, node_queue(), self.pipeline, self.data_root,
                       record, prefetch=self.prefetch,
                       max_retries=self.max_retries, backoff_s=self.backoff_s,
                       fault_hook=self.fault_hook,
                       hb_interval_s=self.hb_interval_s, poll_s=self.poll_s,
-                      die_after=self.die_after.get(nid), cache=cache)
+                      die_after=self.die_after.get(nid),
+                      cache=caches[nid] or shared_cache)
                  for nid in node_ids]
         local_ids = set(node_ids)
         speculated: set = set()
@@ -388,17 +455,15 @@ class ClusterRunner:
                     log_cursor += 1
                     if m["node_id"] not in local_ids and m["status"] == "ok":
                         detector.observe(m.get("seconds", 0.0))
-                # cross-node straggler speculation: twin on a different node
+                # cross-node straggler speculation: twin on a different node,
+                # placed by the queue itself — on the node already holding
+                # the most of the unit's input bytes (least-loaded when no
+                # summary covers it), so the twin starts from warm local disk
                 now = time.time()
-                depths = queue.queue_depths()
                 for idx, t0, holder in queue.running():
                     if idx in speculated or not detector.is_straggler(now - t0):
                         continue
-                    targets = [n for n in alive if n != holder]
-                    if not targets:
-                        continue
-                    target = min(targets, key=lambda n: depths.get(n, 0))
-                    if queue.speculate(idx, target) is not None:
+                    if queue.speculate(idx) is not None:
                         speculated.add(idx)
         finally:
             for nd in nodes:
@@ -422,6 +487,20 @@ class ClusterRunner:
         for m in snap["duplicates"]:
             if m["node_id"] not in local_ids:
                 extras.append((m["idx"], _meta_result(units[m["idx"]], m)))
+        # coordinator-host cache stats: one shared cache, or the sum over the
+        # per-node caches (the simulated multi-host shape)
+        node_caches = {nd.node_id: nd.cache.stats() for nd in nodes
+                       if nd.cache is not None}
+        if shared_cache is not None:
+            cache_stats = shared_cache.stats()
+        elif node_caches:
+            cache_stats: Dict[str, int] = {}
+            for st in node_caches.values():
+                for k, v in st.items():
+                    cache_stats[k] = cache_stats.get(k, 0) + v
+        else:
+            cache_stats = None
+        qstats = queue.stats_snapshot()
         self.stats = ClusterStats(
             processed={**{nd.node_id: nd.processed for nd in nodes},
                        **remote_processed},
@@ -430,7 +509,9 @@ class ClusterRunner:
             dead_nodes=[n for n in node_ids if n not in queue.alive_nodes()],
             remote_nodes=sorted(set(queue.queue_depths()) - local_ids),
             renew_rejections=queue.renew_rejections,
-            cache=cache.stats() if cache is not None else None)
+            cache=cache_stats,
+            locality=dict(qstats["locality"]),
+            cache_by_node=(node_caches if self.cache_per_node else None))
         # fold: exactly one committed-status result per unit; a unit whose
         # only finisher was a twin (primary died mid-flight) promotes it
         pending_extras: List[Tuple[int, UnitResult]] = []
@@ -458,9 +539,11 @@ def run_worker(addr, pipeline, data_root: Path, node_id: str, *,
     """Join a remote queue as one worker host and drain it: the process
     behind ``python -m repro.dist.rpc work``.
 
-    Dials ``addr``, registers ``node_id``, and runs one :class:`Node` loop —
-    the same code the coordinator's threads run — against the socket-backed
-    queue, with inputs served through this host's content-addressed cache
+    Dials ``addr``, registers ``node_id`` — announcing the host cache's
+    digest summary, so a warm worker is placed locality-aware from its first
+    grant — and runs one :class:`Node` loop — the same code the
+    coordinator's threads run — against the socket-backed queue, with inputs
+    served through this host's content-addressed cache
     (default: built from ``$REPRO_CACHE_DIR`` / ``$REPRO_CACHE_MAX_MB``).
     Results travel back as ``complete(meta=...)`` payloads; outputs and
     provenance are committed to shared storage exactly as in-process nodes
@@ -475,7 +558,10 @@ def run_worker(addr, pipeline, data_root: Path, node_id: str, *,
     if cache is None:
         cache = cache_from_env()
     client = QueueClient(addr)
-    if not client.register(node_id):
+    cursor = summary = None
+    if cache is not None:
+        cursor, summary = cache.summary_sync()
+    if not client.register(node_id, summary=summary):
         raise RuntimeError(f"queue at {addr} rejected node id {node_id!r} "
                            "(reaped earlier? rejoin under a fresh id)")
 
@@ -486,7 +572,7 @@ def run_worker(addr, pipeline, data_root: Path, node_id: str, *,
     node = Node(node_id, client, pipeline, Path(data_root), record,
                 prefetch=prefetch, max_retries=max_retries,
                 backoff_s=backoff_s, hb_interval_s=hb_interval_s,
-                poll_s=poll_s, cache=cache)
+                poll_s=poll_s, cache=cache, summary_cursor=cursor)
     node.start()
     try:
         while node.is_alive():

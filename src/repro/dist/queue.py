@@ -31,6 +31,16 @@ Protocol (see ``docs/cluster.md`` for the failure model):
   network-transport case: worker hosts dial in whenever they boot). A queue
   may start with zero nodes; units wait in a backlog that the first
   registrant drains and later registrants steal from.
+* **Locality** — nodes push compact digest summaries of their host input
+  cache (:class:`~repro.dist.cache.DigestSummary`; full on
+  ``register``/``put_summary``, deltas piggybacked on ``heartbeat``/
+  ``renew``). Every placement decision — grant, backlog fill, steal,
+  speculation target, dead-node redistribution — scores candidate units by
+  **estimated cache-local bytes** (``Σ input_bytes[s]`` over input digests
+  the node's summary holds) and prefers keeping bytes where they already
+  live. Scoring is purely advisory: a stale or missing summary degrades to
+  the locality-blind behaviour of PR 2/3, never to a wrong schedule. See
+  the placement-policy section of ``docs/cluster.md``.
 
 Everything is guarded by one lock — the queue is the single shared-state
 object, and the whole method surface is JSON-serializable by design:
@@ -49,16 +59,35 @@ from collections import deque
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 from ..core.query import WorkUnit
+from .cache import DigestSummary
+
+# grant-time scoring looks this deep into a node's own deque for a
+# higher-affinity unit; bounded so next_unit stays O(window · inputs) even
+# on six-figure unit lists
+LOCALITY_SCAN_WINDOW = 16
+
+# backlog fills and steals score at most this many candidates; past it they
+# fall back to the blind (FIFO / tail-half) shape. All scoring happens under
+# the one queue lock, so an unbounded sort over a six-figure backlog would
+# stall heartbeats/renewals long enough for short TTLs to reap live nodes —
+# at that scale, per-unit placement nuance is worth less than lock latency.
+LOCALITY_BULK_SCAN_CAP = 512
 
 
 @dataclasses.dataclass(frozen=True)
 class Lease:
-    """One node's exclusive (or, for twins, speculative) claim on a unit."""
+    """One node's exclusive (or, for twins, speculative) claim on a unit.
+
+    ``local_bytes`` is the coordinator's estimate, at grant time, of how many
+    of the unit's input bytes were already in the holder's cache — stamped
+    into provenance as ``locality_score`` (normalized) so placement quality
+    is auditable after the fact."""
     unit_idx: int
     node_id: str
     epoch: int
     granted_at: float
     speculative: bool = False
+    local_bytes: int = 0
 
 
 class WorkQueue:
@@ -70,16 +99,23 @@ class WorkQueue:
 
     def __init__(self, units: Sequence[WorkUnit],
                  node_ids: Sequence[str] = (), *,
-                 lease_ttl_s: float = 2.0, now=time.time):
+                 lease_ttl_s: float = 2.0, now=time.time,
+                 locality: bool = True, partition: str = "round_robin"):
+        if partition not in ("round_robin", "backlog"):
+            raise ValueError(f"unknown partition {partition!r}")
         self.units = list(units)
         self.lease_ttl_s = float(lease_ttl_s)
+        self.locality = bool(locality)
         self._now = now
         self._lock = threading.Lock()
         self._queues: Dict[str, Deque[int]] = {n: deque() for n in node_ids}
         # with no nodes yet (network transport: workers register later) the
-        # units wait in a backlog; otherwise round-robin partition as before
+        # units wait in a backlog; otherwise round-robin partition as before.
+        # partition="backlog" keeps even a node-listed queue unpartitioned so
+        # the (locality-scored) backlog fill decides initial placement once
+        # nodes have pushed their cache summaries.
         self._backlog: Deque[int] = deque()
-        if node_ids:
+        if node_ids and partition == "round_robin":
             for i in range(len(self.units)):
                 self._queues[node_ids[i % len(node_ids)]].append(i)
         else:
@@ -96,6 +132,22 @@ class WorkQueue:
         self.steals: Dict[str, int] = {n: 0 for n in node_ids}
         self.requeues: List[int] = []                # reaped unit idxs (log)
         self.renew_rejections: int = 0               # stale-lease renew count
+        # locality state: per-node cache digest summaries (pushed by nodes)
+        # plus the cache stats that piggyback on the same wire, and the
+        # placement counters operators read from stats_snapshot()
+        self._summaries: Dict[str, DigestSummary] = {}
+        self._cache_stats: Dict[str, Dict[str, int]] = {}
+        self._steal_rr = 0                           # round-robin tie cursor
+        self.locality_stats: Dict[str, int] = {
+            "scored_grants": 0,       # grants where affinity picked the unit
+            "blind_grants": 0,        # grants with no usable summary/score
+            "local_bytes_granted": 0,  # Σ estimated cache-local bytes granted
+            "input_bytes_granted": 0,  # Σ total input bytes granted
+            "steals_scored": 0,       # steals shaped by affinity scoring
+            "steals_blind": 0,        # plain tail-half steals
+            "stolen_local_bytes": 0,  # Σ thief-local bytes of stolen units
+            "summary_rejected": 0,    # summary wires we couldn't decode
+        }
         # result metadata carried by complete(meta=...): the retiring
         # completion per unit, plus every duplicate report (twin losers,
         # zombies) — what a coordinator folds into its result list for units
@@ -112,19 +164,123 @@ class WorkQueue:
         self._primary_meta[idx] = entry
         self._primary_log.append(entry)
 
+    # -- locality scoring ----------------------------------------------------
+    # All helpers assume the caller holds the lock. Scores are *estimates*
+    # (Bloom false positives, stale summaries) and only ever shape ordering —
+    # correctness (exactly-one-ok, lease epochs, reaping) is score-blind.
+
+    def _local_bytes(self, idx: int, node_id: str) -> int:
+        """Estimated bytes of unit ``idx``'s inputs already in ``node_id``'s
+        host cache, per its last pushed digest summary. 0 without a summary
+        (old client, no cache, version skew) — the locality-blind fallback."""
+        summary = self._summaries.get(node_id)
+        if not self.locality or not summary or not len(summary):
+            return 0
+        unit = self.units[idx]
+        if not unit.input_digests:
+            return 0
+        return sum(unit.input_bytes.get(s, 0)
+                   for s, d in unit.input_digests.items() if d in summary)
+
+    def _node_scores(self, node_id: str) -> bool:
+        """Whether scoring can distinguish anything for this node."""
+        s = self._summaries.get(node_id)
+        return self.locality and s is not None and len(s) > 0
+
+    def _best_node(self, idx: int, candidates: List[str]) -> str:
+        """The candidate holding the most of ``idx``'s input bytes; ties go
+        to the shallowest deque, then lexicographic for determinism."""
+        return min(candidates,
+                   key=lambda n: (-self._local_bytes(idx, n),
+                                  len(self._queues[n]), n))
+
+    def _apply_summary_wire(self, node_id: str, wire) -> bool:
+        """Fold a summary push (full or delta) into the per-node state.
+        Anything malformed or version-skewed is counted and dropped — the
+        node stays schedulable, just locality-blind. Returns True iff the
+        wire was understood and applied."""
+        if node_id in self._dead or node_id not in self._queues:
+            return False
+        if not isinstance(wire, dict) or wire.get("v") != 1:
+            self.locality_stats["summary_rejected"] += 1
+            return False
+        stats = wire.get("stats")
+        if isinstance(stats, dict):
+            self._cache_stats[node_id] = dict(stats)
+        if "full" in wire:
+            summary = DigestSummary.from_wire(wire["full"])
+            if summary is None:
+                self.locality_stats["summary_rejected"] += 1
+                return False
+            self._summaries[node_id] = summary
+            return True
+        summary = self._summaries.setdefault(node_id, DigestSummary())
+        try:
+            for d in wire.get("add") or []:
+                summary.add(str(d))
+            for d in wire.get("drop") or []:
+                summary.discard(str(d))
+        except (TypeError, ValueError):
+            self.locality_stats["summary_rejected"] += 1
+            return False
+        return True
+
     # -- leasing ------------------------------------------------------------
 
-    def _grant(self, idx: int, node_id: str, speculative: bool) -> Lease:
+    def _grant(self, idx: int, node_id: str, speculative: bool,
+               local_bytes: int = 0) -> Lease:
         self._epochs[idx] += 1
         lease = Lease(idx, node_id, self._epochs[idx], self._now(),
-                      speculative=speculative)
+                      speculative=speculative, local_bytes=local_bytes)
         (self._spec if speculative else self._leases)[idx] = lease
         return lease
 
+    def _pop_scored(self, node_id: str) -> Optional[Tuple[int, int]]:
+        """Pop the next unit off ``node_id``'s deque: the highest-affinity
+        unit within the head scan window when the node has a usable summary,
+        the plain head otherwise (exact PR 2 behaviour). Returns
+        ``(unit_idx, estimated_local_bytes)`` or ``None`` on an empty deque.
+        Retired entries encountered anywhere in the window are dropped, so
+        the pop — and therefore :meth:`next_unit` — never hands out a done
+        unit."""
+        q = self._queues[node_id]
+        while True:
+            while q and q[0] in self._done:
+                q.popleft()
+            if not q:
+                return None
+            if not self._node_scores(node_id):
+                self.locality_stats["blind_grants"] += 1
+                return q.popleft(), 0
+            best_pos, best_score = None, -1
+            dead: List[int] = []
+            for pos in range(min(len(q), LOCALITY_SCAN_WINDOW)):
+                idx = q[pos]
+                if idx in self._done:
+                    dead.append(pos)
+                    continue
+                score = self._local_bytes(idx, node_id)
+                if score > best_score:     # ties keep the earliest (FIFO)
+                    best_pos, best_score = pos, score
+            for pos in reversed(dead):     # drop retired entries for good
+                del q[pos]
+            if best_pos is None:
+                continue                   # window was all retired: rescan
+            best_pos -= sum(1 for p in dead if p < best_pos)
+            idx = q[best_pos]
+            del q[best_pos]
+            key = "scored_grants" if best_score > 0 else "blind_grants"
+            self.locality_stats[key] += 1
+            self.locality_stats["local_bytes_granted"] += max(0, best_score)
+            self.locality_stats["input_bytes_granted"] += \
+                self.units[idx].total_input_bytes
+            return idx, max(0, best_score)
+
     def next_unit(self, node_id: str) -> Optional[Tuple[WorkUnit, Lease]]:
         """Lease the next unit for ``node_id``: own speculative work first,
-        then own deque head, then a fair share of the registration backlog,
-        then steal the tail half of the longest peer deque. Returns ``None``
+        then the best-affinity unit near the node's own deque head, then a
+        (locality-scored) share of the registration backlog, then steal the
+        lowest-affinity half of the fullest peer deque. Returns ``None``
         when no leasable work exists *right now* (the node should re-poll
         until :meth:`finished`) — including for unknown node ids, so a
         transport client that skipped :meth:`register` fails soft."""
@@ -143,38 +299,82 @@ class WorkQueue:
                 self._fill_from_backlog(node_id)
             if not q:
                 self._steal_into(node_id)
-            while q:
-                idx = q.popleft()
-                if idx in self._done:
-                    continue
-                return self.units[idx], self._grant(idx, node_id, False)
-            return None
+            got = self._pop_scored(node_id)   # never returns a retired unit
+            if got is None:
+                return None
+            idx, score = got
+            return self.units[idx], self._grant(idx, node_id, False,
+                                                local_bytes=score)
 
     def _fill_from_backlog(self, node_id: str):
         """Move a fair share of never-partitioned units (queue built with no
-        nodes, or orphans reaped while no node was alive) onto ``node_id``'s
-        deque — late registrants then rebalance via ordinary stealing."""
+        nodes or ``partition="backlog"``, or orphans reaped while no node was
+        alive) onto ``node_id``'s deque — late registrants then rebalance via
+        ordinary stealing. With a usable summary the share is the node's
+        **top-k by cache-local bytes** (warmest first, so prefetch starts on
+        the warmest work); otherwise FIFO, exactly the PR 3 behaviour."""
         if not self._backlog:
             return
         alive = max(1, sum(1 for n in self._queues if n not in self._dead))
         k = max(1, len(self._backlog) // alive)
         q = self._queues[node_id]
-        for _ in range(k):
-            if not self._backlog:
-                break
-            q.append(self._backlog.popleft())
+        if (not self._node_scores(node_id)
+                or len(self._backlog) > LOCALITY_BULK_SCAN_CAP):
+            for _ in range(k):
+                if not self._backlog:
+                    break
+                q.append(self._backlog.popleft())
+            return
+        scored = sorted(range(len(self._backlog)),
+                        key=lambda p: (-self._local_bytes(self._backlog[p],
+                                                          node_id), p))
+        take = set(scored[:k])
+        chosen = [self._backlog[p] for p in scored[:k]]
+        self._backlog = deque(idx for p, idx in enumerate(self._backlog)
+                              if p not in take)
+        q.extend(chosen)                    # warmest-first order
 
     def _steal_into(self, thief: str):
-        victims = [(len(q), n) for n, q in self._queues.items()
-                   if n != thief and n not in self._dead and len(q)]
-        if not victims:
+        """Steal half of the fullest peer deque. Victim ties break by a
+        round-robin cursor over the tied node ids (deterministic for a fixed
+        steal sequence, fair across victims — ``max`` on ``(len, node_id)``
+        used to bias every tie toward the lexicographically-last node).
+        With usable summaries the thief takes the entries that are
+        **coldest for the victim** (preferring, among those, warmest for the
+        thief); blind, it takes the tail half, preserving the victim's head
+        locality and prefetch exactly as before."""
+        lens = {n: len(q) for n, q in self._queues.items()
+                if n != thief and n not in self._dead and len(q)}
+        if not lens:
             return
-        _, victim = max(victims)
+        deepest = max(lens.values())
+        tied = sorted(n for n, l in lens.items() if l == deepest)
+        victim = tied[self._steal_rr % len(tied)]
+        self._steal_rr += 1
         vq = self._queues[victim]
         k = max(1, len(vq) // 2)
-        grabbed = [vq.pop() for _ in range(k)]
-        # reverse: popping the tail reversed the order; keep victim's ordering
-        self._queues[thief].extend(reversed(grabbed))
+        scoring = ((self._node_scores(thief) or self._node_scores(victim))
+                   and len(vq) <= LOCALITY_BULK_SCAN_CAP)
+        if scoring:
+            # coldest-for-victim first; among equals prefer warmest-for-thief,
+            # then latest position (degrades to tail-half when scores tie)
+            order = sorted(range(len(vq)),
+                           key=lambda p: (self._local_bytes(vq[p], victim),
+                                          -self._local_bytes(vq[p], thief),
+                                          -p))
+            take = sorted(order[:k])        # preserve victim's ordering
+            grabbed = [vq[p] for p in take]
+            self._queues[victim] = deque(idx for p, idx in enumerate(vq)
+                                         if p not in set(take))
+            self.locality_stats["steals_scored"] += 1
+            self.locality_stats["stolen_local_bytes"] += \
+                sum(self._local_bytes(i, thief) for i in grabbed)
+        else:
+            grabbed = [vq.pop() for _ in range(k)]
+            # reverse: popping the tail reversed the order; keep victim's order
+            grabbed = list(reversed(grabbed))
+            self.locality_stats["steals_blind"] += 1
+        self._queues[thief].extend(grabbed)
         self.steals[thief] += 1
 
     def mark_started(self, idx: int):
@@ -258,7 +458,8 @@ class WorkQueue:
             if entry is not None:
                 self._retire_meta(idx, entry)
 
-    def renew(self, idx: int, node_id: str, epoch: int) -> bool:
+    def renew(self, idx: int, node_id: str, epoch: int,
+              summary_delta=None) -> bool:
         """Lease-scoped heartbeat for WAN-scale TTLs: refresh ``node_id``'s
         liveness *and* confirm its lease on ``idx`` (primary or twin) is still
         authoritative at ``epoch``. Returns False — without touching any
@@ -267,11 +468,19 @@ class WorkQueue:
         the caller is now a zombie and should not expect its commit to win.
         A successful renewal refreshes the lease's ``granted_at``.
 
+        ``summary_delta`` optionally piggybacks a cache digest-summary delta
+        (same wire as :meth:`heartbeat`) so WAN workers renewing long leases
+        keep their placement summaries fresh without extra round trips. It is
+        applied even when the renewal itself is rejected — a zombie's cache
+        contents are still real.
+
         ``renew_rejections`` counts only the *interesting* rejections (dead
         node, wrong holder, stale epoch) — a renew that loses an ordinary
         race with its own unit's completion is not a lost lease and stays
         out of the WAN-health signal."""
         with self._lock:
+            if summary_delta is not None:
+                self._apply_summary_wire(node_id, summary_delta)
             if idx in self._done:
                 return False                 # completed: routine, not counted
             if node_id in self._dead:
@@ -290,15 +499,28 @@ class WorkQueue:
 
     # -- speculation --------------------------------------------------------
 
-    def speculate(self, idx: int, node_id: str) -> Optional[Lease]:
+    def speculate(self, idx: int, node_id: Optional[str] = None
+                  ) -> Optional[Lease]:
         """Queue a speculative twin of ``idx`` on ``node_id`` (must differ
-        from the primary lease holder; at most one twin per unit)."""
+        from the primary lease holder; at most one twin per unit). With
+        ``node_id=None`` the queue places the twin itself, on the alive node
+        holding the most of the unit's input bytes (ties: shallowest deque) —
+        a straggler's twin starts fastest where its inputs are already warm."""
         with self._lock:
             lease = self._leases.get(idx)
-            if (idx in self._done or idx in self._spec or lease is None
-                    or lease.node_id == node_id or node_id in self._dead):
+            if idx in self._done or idx in self._spec or lease is None:
                 return None
-            twin = self._grant(idx, node_id, True)
+            if node_id is None:
+                candidates = [n for n in self._queues
+                              if n not in self._dead and n != lease.node_id]
+                if not candidates:
+                    return None
+                node_id = self._best_node(idx, candidates)
+            if lease.node_id == node_id or node_id in self._dead \
+                    or node_id not in self._queues:
+                return None
+            twin = self._grant(idx, node_id, True,
+                               local_bytes=self._local_bytes(idx, node_id))
             self._spec_queues[node_id].append(idx)
             return twin
 
@@ -311,12 +533,17 @@ class WorkQueue:
 
     # -- heartbeats + failure handling --------------------------------------
 
-    def register(self, node_id: str) -> bool:
+    def register(self, node_id: str, summary=None) -> bool:
         """Join ``node_id`` to the cluster after construction — the network-
         transport path where worker hosts dial in whenever they boot. A new
         node starts with an empty deque and picks up work from the backlog or
         by stealing. Re-registering an alive node just refreshes its
-        heartbeat; a reaped node id stays dead (rejoin under a fresh id)."""
+        heartbeat; a reaped node id stays dead (rejoin under a fresh id).
+
+        ``summary`` optionally carries the host cache's full digest summary
+        (``InputCache.summary_sync()`` wire), so a worker with a warm cache
+        from a previous run is placed locality-aware from its very first
+        grant. Old clients simply omit it — locality-blind, never rejected."""
         with self._lock:
             if node_id in self._dead:
                 return False
@@ -325,14 +552,33 @@ class WorkQueue:
                 self._spec_queues[node_id] = deque()
                 self.steals.setdefault(node_id, 0)
             self._heartbeats[node_id] = self._now()
+            if summary is not None:
+                self._apply_summary_wire(node_id, summary)
             return True
 
-    def heartbeat(self, node_id: str):
+    def put_summary(self, node_id: str, summary) -> bool:
+        """Replace ``node_id``'s cache digest summary (full-state push, the
+        ``InputCache.summary_sync()`` wire). Nodes call it at loop start and
+        whenever their delta cursor falls off the cache's op window. Unknown
+        or dead nodes, and wires this coordinator version cannot decode, are
+        dropped (counted in ``summary_rejected``) — locality degrades,
+        scheduling never breaks. Returns True iff the summary was applied."""
+        with self._lock:
+            return self._apply_summary_wire(node_id, summary)
+
+    def heartbeat(self, node_id: str, summary_delta=None):
+        """Node-level liveness refresh. ``summary_delta`` optionally
+        piggybacks the host cache's digest-summary delta since the node's
+        last push (``InputCache.summary_delta_since()`` wire: a handful of
+        added/dropped digests plus live cache counters) — the few-bytes
+        message that keeps coordinator-side placement scoring current."""
         with self._lock:
             # unknown ids are dropped (not auto-registered): a reap must never
             # see a heartbeat for a node that has no deque to clean up
             if node_id not in self._dead and node_id in self._queues:
                 self._heartbeats[node_id] = self._now()
+                if summary_delta is not None:
+                    self._apply_summary_wire(node_id, summary_delta)
 
     def mark_dead(self, node_id: str):
         """Explicit fail-fast path (e.g. a node's thread crashed)."""
@@ -375,12 +621,16 @@ class WorkQueue:
                     if pend is not None:
                         self._retire_meta(idx, pend)
         self._spec_queues[node_id].clear()
+        self._summaries.pop(node_id, None)   # dead cache scores nothing
         # unleased entries still sitting in its deque
         orphans.extend(i for i in self._queues[node_id] if i not in self._done)
         self._queues[node_id].clear()
         if alive:
             for idx in orphans:
-                target = min(alive, key=lambda n: len(self._queues[n]))
+                # affinity-aware requeue: a survivor that already holds the
+                # orphan's bytes re-runs it off local disk; with no summary
+                # coverage this degrades to least-loaded, as before
+                target = self._best_node(idx, alive)
                 # front of the queue: requeued work is the oldest work
                 self._queues[target].appendleft(idx)
         else:
@@ -434,11 +684,30 @@ class WorkQueue:
 
     def stats_snapshot(self) -> Dict[str, object]:
         """Control-plane counters in one JSON-safe call (the transport client
-        mirrors these as properties): steals, requeues, renew rejections."""
+        mirrors these as properties): steals, requeues, renew rejections,
+        plus the data-movement view operators previously had to grep
+        provenance for — per-node cache counters (as last piggybacked on
+        heartbeats: hits/misses/evictions/bytes_from_cache/bytes_from_storage)
+        with a cluster-wide ``cache_totals`` roll-up, and the placement
+        counters (``locality``: scored vs blind grants, granted local bytes,
+        steal affinity stats, rejected summary wires)."""
         with self._lock:
+            totals: Dict[str, int] = {}
+            for st in self._cache_stats.values():
+                for k, v in st.items():
+                    if isinstance(v, (int, float)):
+                        totals[k] = totals.get(k, 0) + v
+            hits = totals.get("hits", 0)
+            lookups = hits + totals.get("misses", 0)
             return {"steals": dict(self.steals),
                     "requeues": list(self.requeues),
-                    "renew_rejections": self.renew_rejections}
+                    "renew_rejections": self.renew_rejections,
+                    "locality": dict(self.locality_stats),
+                    "summary_nodes": sorted(self._summaries),
+                    "cache": {n: dict(st)
+                              for n, st in self._cache_stats.items()},
+                    "cache_totals": totals,
+                    "cache_hit_rate": (hits / lookups) if lookups else 0.0}
 
     def active_leases(self) -> Dict[str, str]:
         """``job_id -> node_id`` for every in-flight lease (primary + twin) —

@@ -57,7 +57,7 @@ _METHODS = frozenset({
     "next_unit", "complete", "mark_started", "heartbeat", "mark_dead",
     "reap", "speculate", "renew", "register", "running", "finished",
     "pending", "alive_nodes", "done_status", "queue_depths", "active_leases",
-    "results_snapshot", "stats_snapshot", "primary_log",
+    "results_snapshot", "stats_snapshot", "primary_log", "put_summary",
 })
 
 
@@ -228,6 +228,11 @@ class QueueClient:
         self._lock = threading.Lock()
         self._id = 0
         self._poisoned = False
+        # locality version-skew fail-soft: a server that predates cache
+        # digest summaries rejects the extra params with a TypeError; after
+        # the first such rejection this client stops sending summaries and
+        # the run proceeds locality-blind (the pre-summary behaviour)
+        self._summaries_ok = True
         self._sock = socket.create_connection(addr, timeout=timeout_s)
         self._file = self._sock.makefile("rb")
 
@@ -284,6 +289,15 @@ class QueueClient:
         except OSError:
             pass
 
+    def _downgrade_on_type_error(self, exc: RuntimeError) -> bool:
+        """An old server reports our new summary params as a ``TypeError:
+        ... unexpected keyword ...`` RPC error. Flag the downgrade (so later
+        calls skip summaries entirely) and tell the caller to retry bare."""
+        if "TypeError" in str(exc):
+            self._summaries_ok = False
+            return True
+        return False
+
     # -- the WorkQueue surface, verbatim ------------------------------------
 
     def next_unit(self, node_id: str):
@@ -298,7 +312,15 @@ class QueueClient:
     def mark_started(self, idx: int):
         self._call("mark_started", idx=idx)
 
-    def heartbeat(self, node_id: str):
+    def heartbeat(self, node_id: str, summary_delta=None):
+        if summary_delta is not None and self._summaries_ok:
+            try:
+                self._call("heartbeat", node_id=node_id,
+                           summary_delta=summary_delta)
+                return
+            except RuntimeError as e:
+                if not self._downgrade_on_type_error(e):
+                    raise
         self._call("heartbeat", node_id=node_id)
 
     def mark_dead(self, node_id: str):
@@ -307,14 +329,41 @@ class QueueClient:
     def reap(self):
         return self._call("reap")
 
-    def speculate(self, idx: int, node_id: str):
+    def speculate(self, idx: int, node_id: Optional[str] = None):
         return self._call("speculate", idx=idx, node_id=node_id)
 
-    def renew(self, idx: int, node_id: str, epoch: int) -> bool:
+    def renew(self, idx: int, node_id: str, epoch: int,
+              summary_delta=None) -> bool:
+        if summary_delta is not None and self._summaries_ok:
+            try:
+                return self._call("renew", idx=idx, node_id=node_id,
+                                  epoch=epoch, summary_delta=summary_delta)
+            except RuntimeError as e:
+                if not self._downgrade_on_type_error(e):
+                    raise
         return self._call("renew", idx=idx, node_id=node_id, epoch=epoch)
 
-    def register(self, node_id: str) -> bool:
+    def register(self, node_id: str, summary=None) -> bool:
+        if summary is not None and self._summaries_ok:
+            try:
+                return self._call("register", node_id=node_id, summary=summary)
+            except RuntimeError as e:
+                if not self._downgrade_on_type_error(e):
+                    raise
         return self._call("register", node_id=node_id)
+
+    def put_summary(self, node_id: str, summary) -> bool:
+        """Push a full cache digest summary; False (never an error) against
+        a coordinator that predates locality-aware placement."""
+        if not self._summaries_ok:
+            return False
+        try:
+            return self._call("put_summary", node_id=node_id, summary=summary)
+        except RuntimeError as e:
+            if "unknown method" in str(e) or "TypeError" in str(e):
+                self._summaries_ok = False
+                return False
+            raise
 
     def running(self):
         return [tuple(r) for r in self._call("running")]

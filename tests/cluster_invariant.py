@@ -15,7 +15,8 @@ import numpy as np
 def check_cluster_invariant(n_subjects: int, sessions: int, nodes: int,
                             flaky: bool, die: int, *,
                             transport: str = "local", cache: bool = False,
-                            harass_renew: bool = False):
+                            harass_renew: bool = False,
+                            harass_locality: bool = False):
     """For the given unit list / node count / injected failures: every unit
     must end with exactly one committed ok provenance, and a concurrent
     reader must never observe a partial output file or torn provenance.
@@ -24,7 +25,12 @@ def check_cluster_invariant(n_subjects: int, sessions: int, nodes: int,
     ``cache=True`` serves inputs through a host :class:`InputCache`;
     ``harass_renew=True`` floods the queue with renewals carrying cycling
     (mostly stale) epochs while the run is live — a renewal racing a reap or
-    a re-grant must be rejected without ever disturbing retirement."""
+    a re-grant must be rejected without ever disturbing retirement.
+    ``harass_locality=True`` runs locality-aware placement over per-node
+    caches while a thread floods the queue with hostile digest summaries —
+    wrong versions, garbage wires, random digests, ghost and dead node ids.
+    Summaries only ever shape placement *scores*, so no summary content may
+    break retirement, ok-counts, or commit atomicity."""
     from repro.core import (Provenance, builtin_pipelines,
                             query_available_work, synthesize_dataset)
     from repro.dist import ClusterRunner
@@ -62,11 +68,14 @@ def check_cluster_invariant(n_subjects: int, sessions: int, nodes: int,
         die_after = {f"node-{die % nodes}": 1} if nodes > 1 else {}
         w = threading.Thread(target=watcher, daemon=True)
         w.start()
+        use_cache = cache or harass_locality
         runner = ClusterRunner(
             pipe, ds.root, nodes=nodes, fault_hook=fault, die_after=die_after,
             lease_ttl_s=0.4, hb_interval_s=0.1, straggler_factor=100.0,
             poll_s=0.02, transport=transport,
-            cache_dir=(Path(td) / "host-cache") if cache else None)
+            cache_dir=(Path(td) / "host-cache") if use_cache else None,
+            cache_per_node=harass_locality,
+            partition="backlog" if harass_locality else "round_robin")
 
         wrongly_renewed = []
 
@@ -85,17 +94,57 @@ def check_cluster_invariant(n_subjects: int, sessions: int, nodes: int,
                                1000 + (i % 3)):
                         wrongly_renewed.append((i % len(units), 1000 + (i % 3)))
 
-        h = None
+        def locality_harasser():
+            # hostile summary traffic: future wire versions, garbage, random
+            # digests claimed for real / ghost / soon-dead nodes, and empty
+            # deltas — placement scoring may be fooled, retirement must not
+            wires = [
+                {"v": 999, "full": {"m": 8, "k": 2, "n": 1, "nz": [[0, 1]]}},
+                "garbage", {"v": 1}, {"v": 1, "full": "nope"},
+                {"v": 1, "add": None, "drop": None},
+            ]
+            for i in itertools.count():
+                if stop.is_set():
+                    return
+                q = runner.queue
+                if q is None:
+                    continue
+                node = f"node-{i % (nodes + 2)}"     # includes ghost ids
+                if i % 3 == 0:
+                    # put_summary never refreshes liveness: safe to name
+                    # real nodes (including ones about to be reaped)
+                    q.put_summary(node, wires[i % len(wires)])
+                elif i % 3 == 1:
+                    # heartbeat DOES refresh liveness, so only ghost ids —
+                    # a harasser impersonating a crashed node's heartbeat
+                    # would defeat the reaper by design (fail-stop model:
+                    # silence is the one crash signal)
+                    q.heartbeat(f"ghost-{i % 5}", summary_delta={
+                        "v": 1, "add": [f"bogus-{i % 7}"],
+                        "drop": [f"bogus-{(i + 3) % 7}"],
+                        "stats": {"hits": i, "misses": -i}})
+                else:
+                    # stale epochs are rejected before any state is touched,
+                    # so real node ids are fair game here
+                    q.renew(i % max(1, len(units)), node, 1_000_000,
+                            summary_delta={"v": 1, "add": [f"x{i % 5}"],
+                                           "drop": []})
+
+        threads = []
         if harass_renew:
-            h = threading.Thread(target=harasser, daemon=True)
-            h.start()
+            threads.append(threading.Thread(target=harasser, daemon=True))
+        if harass_locality:
+            threads.append(threading.Thread(target=locality_harasser,
+                                            daemon=True))
+        for t in threads:
+            t.start()
         try:
             results = runner.run(units)
         finally:
             stop.set()
             w.join(timeout=5)
-            if h is not None:
-                h.join(timeout=5)
+            for t in threads:
+                t.join(timeout=5)
         assert wrongly_renewed == []
 
         assert violations == []

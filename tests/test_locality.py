@@ -1,0 +1,451 @@
+"""Locality-aware scheduling: digest summaries, affinity-scored grants /
+backlog fills / steals / speculation / dead-node requeues, the placement
+counters in ``stats_snapshot``, version-skew fail-soft, and the
+``InputCache`` compaction-crash recovery — the placement-policy layer of
+``docs/cluster.md`` under test."""
+import json
+import shutil
+import time
+from collections import deque
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import (Provenance, builtin_pipelines, query_available_work,
+                        synthesize_dataset)
+from repro.core.workflow import load_unit_inputs
+from repro.dist import ClusterRunner, DigestSummary, InputCache, WorkQueue
+from repro.dist.cache import SUMMARY_WIRE_VERSION
+
+
+@pytest.fixture()
+def dataset(tmp_path):
+    return synthesize_dataset(tmp_path / "ds", "locds", n_subjects=8,
+                              sessions_per_subject=2, shape=(10, 10, 10))
+
+
+def _work(dataset):
+    pipe = builtin_pipelines()["bias_correct"]
+    units, _ = query_available_work(dataset, pipe)
+    return pipe, units
+
+
+def _summary_for(units):
+    """A node summary wire claiming exactly these units' input digests."""
+    s = DigestSummary()
+    for u in units:
+        for d in u.input_digests.values():
+            s.add(d)
+    return {"v": SUMMARY_WIRE_VERSION, "full": s.to_wire()}
+
+
+# ---------------------------------------------------------------------------
+# DigestSummary
+# ---------------------------------------------------------------------------
+
+def test_digest_summary_membership_discard_and_len():
+    s = DigestSummary()
+    digs = [f"digest-{i}" for i in range(50)]
+    for d in digs:
+        s.add(d)
+    assert len(s) == 50
+    assert all(d in s for d in digs)             # never a false negative
+    s.discard(digs[0])
+    assert digs[0] not in s
+    assert all(d in s for d in digs[1:])
+    s.discard("never-added")                     # no-op, not a corruption
+    assert all(d in s for d in digs[1:])
+
+
+def test_digest_summary_wire_roundtrip_is_sparse_and_small():
+    s = DigestSummary()
+    for i in range(200):
+        s.add(f"blob-{i}")
+    wire = s.to_wire()
+    assert len(json.dumps(wire)) < 20_000        # "a few KB", not O(blobs)
+    back = DigestSummary.from_wire(wire)
+    assert back is not None and len(back) == 200
+    assert all(f"blob-{i}" in back for i in range(200))
+
+
+def test_digest_summary_unknown_version_rejected():
+    s = DigestSummary()
+    wire = s.to_wire()
+    wire["v"] = SUMMARY_WIRE_VERSION + 1
+    assert DigestSummary.from_wire(wire) is None
+    assert DigestSummary.from_wire("garbage") is None
+    assert DigestSummary.from_wire({"v": SUMMARY_WIRE_VERSION}) is None
+
+
+# ---------------------------------------------------------------------------
+# WorkUnit data-plane shape
+# ---------------------------------------------------------------------------
+
+def test_workunit_carries_manifest_digests_and_bytes(dataset):
+    pipe, units = _work(dataset)
+    by_path = {r.path: r for r in dataset.images}
+    for u in units:
+        assert set(u.input_digests) == set(u.inputs)
+        for suffix, rel in u.inputs.items():
+            assert u.input_digests[suffix] == by_path[rel].sha256
+            assert u.input_bytes[suffix] == by_path[rel].size_bytes
+        assert u.total_input_bytes == sum(u.input_bytes.values())
+
+
+def test_workunit_backward_compat_without_digest_fields(dataset):
+    """Old units JSON (pre-locality) still loads and schedules — blind."""
+    import dataclasses
+    pipe, units = _work(dataset)
+    old = dataclasses.asdict(units[0])
+    del old["input_digests"], old["input_bytes"]
+    from repro.core.query import WorkUnit
+    u = WorkUnit(**old)
+    assert u.input_digests == {} and u.total_input_bytes == 0
+    q = WorkQueue([u], ["a"])
+    q.put_summary("a", _summary_for(units))      # summary can't match: blind
+    unit, lease = q.next_unit("a")
+    assert lease.local_bytes == 0
+
+
+# ---------------------------------------------------------------------------
+# affinity-scored grants / fills / steals / speculation / requeues
+# ---------------------------------------------------------------------------
+
+def test_grant_prefers_warm_unit_within_scan_window(dataset):
+    pipe, units = _work(dataset)
+    q = WorkQueue(units, ["a"])                  # all 16 units on one deque
+    warm = units[5]                              # not the deque head
+    assert q.put_summary("a", _summary_for([warm])) is True
+    unit, lease = q.next_unit("a")
+    assert unit.job_id == warm.job_id
+    assert lease.local_bytes == warm.total_input_bytes
+    # with the warm unit gone, grants degrade to FIFO order
+    unit2, lease2 = q.next_unit("a")
+    assert unit2.job_id == units[0].job_id and lease2.local_bytes == 0
+
+
+def test_grant_without_summary_is_fifo(dataset):
+    pipe, units = _work(dataset)
+    q = WorkQueue(units, ["a"])
+    granted = [q.next_unit("a")[0].job_id for _ in range(4)]
+    assert granted == [u.job_id for u in units[:4]]
+    assert q.stats_snapshot()["locality"]["scored_grants"] == 0
+
+
+def test_backlog_fill_takes_warmest_units_first(dataset):
+    pipe, units = _work(dataset)
+    q = WorkQueue(units)                         # zero nodes: all backlogged
+    assert q.register("w0")
+    warm = [units[7], units[12], units[3]]
+    q.put_summary("w0", _summary_for(warm))
+    got = [q.next_unit("w0")[0].job_id for _ in range(3)]
+    assert set(got) == {u.job_id for u in warm}  # top-k by affinity
+    # a second, summary-less registrant fills FIFO from the remainder
+    assert q.register("w1")
+    unit, lease = q.next_unit("w1")
+    assert unit.job_id not in got and lease.local_bytes == 0
+
+
+def test_steal_takes_victim_cold_thief_warm_units(dataset):
+    pipe, units = _work(dataset)
+    q = WorkQueue(units, ["victim", "thief"])
+    victim_units = [units[i] for i in q._queues["victim"]]
+    # victim is warm for its first half, thief for the victim's second half
+    q.put_summary("victim", _summary_for(victim_units[:4]))
+    q.put_summary("thief", _summary_for(victim_units[4:]))
+    for _ in range(len(q._queues["thief"])):     # drain thief's own deque
+        q.next_unit("thief")
+    unit, lease = q.next_unit("thief")           # forces the steal
+    assert q.steals["thief"] == 1
+    stolen_ids = {unit.job_id} | {units[i].job_id
+                                  for i in q._queues["thief"]}
+    cold_ids = {u.job_id for u in victim_units[4:]}
+    assert stolen_ids == cold_ids                # victim kept its warm half
+    assert lease.local_bytes > 0                 # and the thief got warm work
+    st = q.stats_snapshot()["locality"]
+    assert st["steals_scored"] == 1 and st["stolen_local_bytes"] > 0
+
+
+def test_steal_tie_break_round_robins_among_equal_victims(dataset):
+    """Regression (ISSUE 4 satellite): ``max()`` on ``(len, node_id)``
+    tuples broke ties by node-id string order, so every steal from
+    equal-depth victims hit the lexicographically-last node. Ties must
+    round-robin: successive steals alternate over the tied victims."""
+    pipe, units = _work(dataset)
+    q = WorkQueue(units, ["thief", "va", "vb"])
+    hit = []
+    for _ in range(4):
+        q._queues["thief"].clear()               # force the next steal
+        q._queues["va"] = deque([0, 1, 2])
+        q._queues["vb"] = deque([3, 4, 5])
+        q._steal_into("thief")
+        va, vb = len(q._queues["va"]), len(q._queues["vb"])
+        hit.append("va" if va < 3 else "vb")
+    assert set(hit) == {"va", "vb"}              # both victims get hit
+    assert hit[0] != hit[1]                      # strict alternation
+
+
+def test_speculate_auto_places_twin_on_warmest_node(dataset):
+    pipe, units = _work(dataset)
+    q = WorkQueue(units, ["a", "b", "c"])
+    unit, lease = q.next_unit("a")
+    q.mark_started(lease.unit_idx)
+    q.put_summary("c", _summary_for([unit]))
+    twin = q.speculate(lease.unit_idx)           # queue picks the target
+    assert twin is not None and twin.node_id == "c"
+    assert twin.local_bytes == unit.total_input_bytes
+    # blind fallback: no summary anywhere -> a valid non-holder target
+    q2 = WorkQueue(units, ["a", "b"])
+    u3, l3 = q2.next_unit("a")
+    q2.mark_started(l3.unit_idx)
+    twin2 = q2.speculate(l3.unit_idx)
+    assert twin2 is not None and twin2.node_id == "b"
+
+
+def test_dead_node_orphans_requeue_to_warm_survivor(dataset):
+    pipe, units = _work(dataset)
+    q = WorkQueue(units, ["dying", "cold", "warm"])
+    orphan_units = [units[i] for i in q._queues["dying"]]
+    q.put_summary("warm", _summary_for(orphan_units))
+    q.mark_dead("dying")
+    warm_depth = q.queue_depths()["warm"]
+    # every orphan went to the node already holding its bytes, despite it
+    # being no shallower than the cold one
+    assert warm_depth >= len(orphan_units) + 1
+
+
+def test_summary_version_skew_fails_soft_and_is_counted(dataset):
+    pipe, units = _work(dataset)
+    q = WorkQueue(units, ["a"])
+    assert q.put_summary("a", {"v": 99, "full": {}}) is False
+    assert q.put_summary("a", "garbage") is False
+    assert q.put_summary("ghost", _summary_for(units)) is False   # unknown
+    st = q.stats_snapshot()
+    assert st["locality"]["summary_rejected"] == 2
+    assert st["summary_nodes"] == []
+    unit, lease = q.next_unit("a")               # still schedulable, blind
+    assert unit is not None and lease.local_bytes == 0
+
+
+def test_locality_disabled_ignores_summaries(dataset):
+    pipe, units = _work(dataset)
+    q = WorkQueue(units, ["a"], locality=False)
+    q.put_summary("a", _summary_for([units[5]]))
+    unit, lease = q.next_unit("a")
+    assert unit.job_id == units[0].job_id        # FIFO, summary ignored
+    assert lease.local_bytes == 0
+
+
+# ---------------------------------------------------------------------------
+# summary deltas + stats plumbing (cache -> heartbeat -> stats_snapshot)
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_delta_tracks_cache_churn(dataset, tmp_path):
+    pipe, units = _work(dataset)
+    cache = InputCache(tmp_path / "c", max_bytes=1 << 30)
+    load_unit_inputs(units[0], dataset.root, cache=cache)
+    cursor, full = cache.summary_sync()
+    q = WorkQueue(units, ["a"])
+    assert q.put_summary("a", full) is True
+    assert q._local_bytes(0, "a") == units[0].total_input_bytes
+    # new insert travels as a heartbeat delta
+    load_unit_inputs(units[1], dataset.root, cache=cache)
+    cursor, delta = cache.summary_delta_since(cursor)
+    assert units[1].input_digests["T1w"] in delta["add"]
+    q.heartbeat("a", summary_delta=delta)
+    assert q._local_bytes(1, "a") == units[1].total_input_bytes
+    # the piggybacked stats surface in stats_snapshot
+    st = q.stats_snapshot()
+    assert st["cache"]["a"]["misses"] == 2
+    assert st["cache_totals"]["bytes_from_storage"] > 0
+    assert st["cache_hit_rate"] == 0.0
+
+
+def test_delta_cursor_off_window_degrades_to_full_resync(tmp_path):
+    from repro.dist.cache import SUMMARY_OPS_RETAINED
+    cache = InputCache(tmp_path / "c", max_bytes=1 << 30)
+    np.save(tmp_path / "x.npy", np.zeros(4, dtype=np.float32))
+    cache.fetch_array(tmp_path / "x.npy")
+    # push the op window far past a cursor of 0
+    cache._seq = SUMMARY_OPS_RETAINED + 10
+    cache._ops.clear()
+    cache._ops.append((cache._seq, "add", "recent"))
+    _, wire = cache.summary_delta_since(0)
+    assert "full" in wire                        # resync, not a partial delta
+
+
+def test_eviction_travels_as_drop_delta(dataset, tmp_path):
+    pipe, units = _work(dataset)
+    one = (Path(dataset.root) / units[0].inputs["T1w"]).stat().st_size
+    cache = InputCache(tmp_path / "c", max_bytes=int(one * 1.5))
+    load_unit_inputs(units[0], dataset.root, cache=cache)
+    cursor, _ = cache.summary_sync()
+    load_unit_inputs(units[1], dataset.root, cache=cache)    # evicts unit 0
+    _, delta = cache.summary_delta_since(cursor)
+    assert units[0].input_digests["T1w"] in delta["drop"]
+    assert units[1].input_digests["T1w"] in delta["add"]
+    assert units[0].input_digests["T1w"] not in cache.summary
+
+
+def test_renew_piggybacks_summary_delta(dataset):
+    pipe, units = _work(dataset)
+    q = WorkQueue(units, ["a", "b"])
+    unit, lease = q.next_unit("a")
+    delta = {"v": SUMMARY_WIRE_VERSION,
+             "add": list(unit.input_digests.values()), "drop": []}
+    assert q.renew(lease.unit_idx, "a", lease.epoch, summary_delta=delta)
+    assert q._local_bytes(lease.unit_idx, "a") == unit.total_input_bytes
+
+
+def test_cache_stats_track_bytes_moved(dataset, tmp_path):
+    pipe, units = _work(dataset)
+    cache = InputCache(tmp_path / "c", max_bytes=1 << 30)
+    load_unit_inputs(units[0], dataset.root, cache=cache)
+    load_unit_inputs(units[0], dataset.root, cache=cache)
+    st = cache.stats()
+    size = (Path(dataset.root) / units[0].inputs["T1w"]).stat().st_size
+    assert st["bytes_from_storage"] == size      # one miss
+    assert st["bytes_from_cache"] == size        # one hit
+    _, _, _, hit_bytes = load_unit_inputs(units[0], dataset.root, cache=cache)
+    assert hit_bytes == size
+
+
+# ---------------------------------------------------------------------------
+# rpc transport: summaries over the wire + downgrade fail-soft
+# ---------------------------------------------------------------------------
+
+def test_put_summary_and_scored_grant_over_rpc(dataset):
+    from repro.dist import QueueClient, QueueServer
+    pipe, units = _work(dataset)
+    q = WorkQueue(units, ["a"])
+    with QueueServer(q) as srv:
+        c = QueueClient(srv.address)
+        assert c.put_summary("a", _summary_for([units[5]])) is True
+        unit, lease = c.next_unit("a")
+        assert unit.job_id == units[5].job_id
+        assert lease.local_bytes == units[5].total_input_bytes
+        assert c.stats_snapshot()["locality"]["scored_grants"] == 1
+        c.close()
+
+
+def test_client_downgrades_against_pre_summary_server(dataset, monkeypatch):
+    """Version skew: a coordinator without locality support rejects the new
+    params; the client downgrades to the blind protocol instead of dying."""
+    from repro.dist import QueueClient, QueueServer
+    from repro.dist import rpc as rpc_mod
+    pipe, units = _work(dataset)
+    monkeypatch.setattr(rpc_mod, "_METHODS",
+                        rpc_mod._METHODS - {"put_summary"})
+    q = WorkQueue(units, ["a"])
+    with QueueServer(q) as srv:
+        c = QueueClient(srv.address)
+        assert c.put_summary("a", _summary_for(units)) is False
+        assert c._summaries_ok is False
+        # later piggybacks silently drop the summary payload
+        c.heartbeat("a", summary_delta={"v": 1, "add": [], "drop": []})
+        assert c.register("w", summary=_summary_for(units)) is True
+        assert c.next_unit("a") is not None      # scheduling unaffected
+        c.close()
+
+
+# ---------------------------------------------------------------------------
+# InputCache._compact_index crash-mid-compaction recovery (ISSUE satellite)
+# ---------------------------------------------------------------------------
+
+def test_compact_index_crash_recovers_consistent_state(dataset, tmp_path):
+    """A crash mid-compaction can leave a torn index.jsonl tail and an
+    orphaned atomic-write tmp. A restarted cache must come up consistent —
+    torn lines skipped, every served hit still digest-verified — possibly
+    smaller, never corrupt."""
+    pipe, units = _work(dataset)
+    cdir = tmp_path / "c"
+    cache = InputCache(cdir, max_bytes=1 << 30)
+    for u in units[:4]:
+        load_unit_inputs(u, dataset.root, cache=cache)
+    index = cdir / "index.jsonl"
+    lines = index.read_text().splitlines(keepends=True)
+    assert len(lines) == 4
+    # crash mid-rewrite: half of the last line, plus a leftover dot-tmp from
+    # the interrupted atomic_write_bytes
+    index.write_text("".join(lines[:2]) + lines[2][:len(lines[2]) // 2])
+    (cdir / ".index.jsonl.tmp-dead").write_bytes(b'{"k": "torn')
+    (cache.blob_dir / ".blob.tmp-dead").write_bytes(b"torn blob bytes")
+    c2 = InputCache(cdir, max_bytes=1 << 30)
+    # intact entries hit; the torn one degrades to a (correct) miss
+    assert load_unit_inputs(units[0], dataset.root, cache=c2)[2] is True
+    assert load_unit_inputs(units[1], dataset.root, cache=c2)[2] is True
+    loaded = load_unit_inputs(units[2], dataset.root, cache=c2)
+    assert loaded[2] is False
+    # and the re-fetched digest matches a fresh from-storage read
+    ref = load_unit_inputs(units[2], dataset.root)
+    assert loaded[1] == ref[1]
+    # summary reflects exactly the adopted blobs (all four survived on disk)
+    assert all(d in c2.summary for u in units[:4]
+               for d in u.input_digests.values())
+    # the cache keeps working: inserts, eviction-triggered compaction included
+    for u in units:
+        load_unit_inputs(u, dataset.root, cache=c2)
+    assert load_unit_inputs(units[-1], dataset.root, cache=c2)[2] is True
+
+
+def test_compact_index_crash_mid_eviction_keeps_blob_truth(dataset, tmp_path):
+    """Compaction interrupted *between* in-memory eviction and the index
+    rewrite: the stale index may reference evicted blobs, but a restarted
+    cache only adopts entries whose blob file still exists — hits stay
+    verified, state shrinks instead of corrupting."""
+    pipe, units = _work(dataset)
+    cdir = tmp_path / "c"
+    cache = InputCache(cdir, max_bytes=1 << 30)
+    for u in units[:3]:
+        load_unit_inputs(u, dataset.root, cache=cache)
+    # simulate: eviction unlinked a blob but crashed before compaction
+    victim_digest = units[0].input_digests["T1w"]
+    (cache.blob_dir / victim_digest).unlink()
+    c2 = InputCache(cdir, max_bytes=1 << 30)
+    assert victim_digest not in c2.summary       # gone blob, gone summary bit
+    assert load_unit_inputs(units[0], dataset.root, cache=c2)[2] is False
+    assert load_unit_inputs(units[1], dataset.root, cache=c2)[2] is True
+    assert victim_digest in c2.summary           # the miss re-inserted it
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: warm per-node caches turn into placement + provenance stamps
+# ---------------------------------------------------------------------------
+
+def test_cluster_locality_end_to_end_stamps_provenance(dataset, tmp_path):
+    pipe, units = _work(dataset)
+    kw = dict(nodes=3, poll_s=0.02, cache_dir=tmp_path / "hosts",
+              cache_per_node=True, straggler_factor=100.0)
+    warm = ClusterRunner(pipe, dataset.root, **kw)
+    results = warm.run(units)
+    assert sum(r.status == "ok" for r in results) == len(units)
+    shutil.rmtree(Path(dataset.root) / "derivatives")
+    units2, _ = query_available_work(dataset, pipe)
+    runner = ClusterRunner(pipe, dataset.root, partition="backlog", **kw)
+    results2 = runner.run(units2)
+    assert sum(r.status == "ok" for r in results2) == len(units2)
+    provs = [Provenance.load(Path(u.out_dir)) for u in units2]
+    hits = [p for p in provs if p.cache_hit]
+    assert hits, "warm per-node caches produced no cache-hit commits"
+    # the scheduler predicted locality for the hits it engineered
+    scored = [p for p in provs if p.locality_score > 0.0]
+    assert scored, "no grant was scored against a digest summary"
+    assert any(p.bytes_from_cache > 0 for p in provs)
+    assert runner.stats.locality["scored_grants"] > 0
+    assert runner.stats.cache_by_node is not None
+    total_hits = sum(st["hits"] for st in runner.stats.cache_by_node.values())
+    assert total_hits >= len(hits)
+    # results_snapshot meta carries the same stamps for remote folding
+    snap = runner.queue.results_snapshot()
+    assert any(m.get("bytes_from_cache", 0) > 0
+               for m in snap["primaries"].values())
+
+
+def test_provenance_roundtrips_locality_stamps(tmp_path):
+    from repro.core.provenance import make_provenance
+    p = make_provenance("pipe", "digest", {}, {}, time.time(),
+                        locality_score=0.75, bytes_from_cache=4096)
+    p.save(tmp_path)
+    back = Provenance.load(tmp_path)
+    assert back.locality_score == 0.75 and back.bytes_from_cache == 4096

@@ -41,8 +41,8 @@ def _work(dataset):
 def test_cache_hit_returns_identical_digest_and_bytes(dataset, tmp_path):
     pipe, units = _work(dataset)
     cache = InputCache(tmp_path / "cache", max_bytes=1 << 30)
-    i1, sums1, hit1 = load_unit_inputs(units[0], dataset.root, cache=cache)
-    i2, sums2, hit2 = load_unit_inputs(units[0], dataset.root, cache=cache)
+    i1, sums1, hit1, hb1 = load_unit_inputs(units[0], dataset.root, cache=cache)
+    i2, sums2, hit2, hb2 = load_unit_inputs(units[0], dataset.root, cache=cache)
     assert (hit1, hit2) == (False, True)
     assert sums1 == sums2                       # provenance-identical digests
     for k in i1:
@@ -62,8 +62,8 @@ def test_cache_eviction_under_size_pressure(dataset, tmp_path):
     assert st["bytes"] <= int(one_input * 2.5)
     assert cache.blob_count() <= 2
     # evicted entries re-fetch (miss), survivors still hit
-    _, _, hit_last = load_unit_inputs(units[-1], dataset.root, cache=cache)
-    _, _, hit_first = load_unit_inputs(units[0], dataset.root, cache=cache)
+    _, _, hit_last, _ = load_unit_inputs(units[-1], dataset.root, cache=cache)
+    _, _, hit_first, _ = load_unit_inputs(units[0], dataset.root, cache=cache)
     assert hit_last is True                     # most recent blob survived
     assert hit_first is False                   # LRU victim re-fetched
 
@@ -90,7 +90,7 @@ def test_cache_oversize_input_passes_through_without_wiping(dataset, tmp_path):
     load_unit_inputs(units[0], dataset.root, cache=cache)   # warm blob
     big = tmp_path / "big.npy"
     np.save(big, np.zeros(one, dtype=np.float64))           # > max_bytes
-    arr, digest, hit = cache.fetch_array(big)
+    arr, digest, hit, nbytes = cache.fetch_array(big)
     assert hit is False and arr.nbytes > cache.max_bytes
     st = cache.stats()
     assert st["evictions"] == 0 and st["blobs"] == 1        # warm blob intact
@@ -100,10 +100,10 @@ def test_cache_oversize_input_passes_through_without_wiping(dataset, tmp_path):
 def test_cache_corrupt_blob_degrades_to_miss(dataset, tmp_path):
     pipe, units = _work(dataset)
     cache = InputCache(tmp_path / "cache")
-    _, sums, _ = load_unit_inputs(units[0], dataset.root, cache=cache)
+    _, sums, _, _ = load_unit_inputs(units[0], dataset.root, cache=cache)
     digest = next(iter(sums.values()))
     (cache.blob_dir / digest).write_bytes(b"garbage")
-    arr, sums2, hit = load_unit_inputs(units[0], dataset.root, cache=cache)
+    arr, sums2, hit, _ = load_unit_inputs(units[0], dataset.root, cache=cache)
     assert hit is False                          # verified hit failed -> miss
     assert sums2 == sums                         # refetched, digest intact
 
@@ -113,7 +113,7 @@ def test_cache_persists_across_instances(dataset, tmp_path):
     c1 = InputCache(tmp_path / "cache")
     load_unit_inputs(units[0], dataset.root, cache=c1)
     c2 = InputCache(tmp_path / "cache")          # restarted worker
-    _, _, hit = load_unit_inputs(units[0], dataset.root, cache=c2)
+    _, _, hit, _ = load_unit_inputs(units[0], dataset.root, cache=c2)
     assert hit is True
 
 
@@ -121,11 +121,11 @@ def test_cache_source_change_is_not_served_stale(dataset, tmp_path):
     pipe, units = _work(dataset)
     cache = InputCache(tmp_path / "cache")
     src = Path(dataset.root) / units[0].inputs["T1w"]
-    _, sums1, _ = load_unit_inputs(units[0], dataset.root, cache=cache)
+    _, sums1, _, _ = load_unit_inputs(units[0], dataset.root, cache=cache)
     arr = np.load(src) + 1.0
     np.save(src, arr)                            # source mutated in place
     os.utime(src, ns=(1, 1))                     # force a new mtime key too
-    _, sums2, hit = load_unit_inputs(units[0], dataset.root, cache=cache)
+    _, sums2, hit, _ = load_unit_inputs(units[0], dataset.root, cache=cache)
     assert hit is False
     assert sums1 != sums2                        # new content, new digest
 
@@ -307,15 +307,18 @@ def test_cluster_rpc_transport_completes_and_caches(dataset, tmp_path):
 # invariant under transport / cache / renewal harassment
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("transport,cache,harass", [
-    ("rpc", False, False),
-    ("rpc", True, False),
-    ("local", True, True),
+@pytest.mark.parametrize("transport,cache,harass,locality", [
+    ("rpc", False, False, False),
+    ("rpc", True, False, False),
+    ("local", True, True, False),
+    ("local", False, False, True),      # locality harassment mode
+    ("rpc", False, True, True),         # both harassers over the socket
 ])
-def test_cluster_invariant_over_transport(transport, cache, harass):
+def test_cluster_invariant_over_transport(transport, cache, harass, locality):
     from cluster_invariant import check_cluster_invariant
     check_cluster_invariant(2, 2, 3, True, 1, transport=transport,
-                            cache=cache, harass_renew=harass)
+                            cache=cache, harass_renew=harass,
+                            harass_locality=locality)
 
 
 # ---------------------------------------------------------------------------
