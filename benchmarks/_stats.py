@@ -1,0 +1,20 @@
+"""Shared cache-stat aggregation for the placement benchmarks
+(``locality_throughput``, ``campaign_plan``): both gate on the same
+hit-rate / bytes-from-storage accounting, so the aggregation lives once —
+a change to ``ClusterRunner.stats.cache_by_node`` lands in both gates or
+in neither."""
+from __future__ import annotations
+
+
+def cache_totals(runner) -> dict:
+    """Sum the per-node cache counters of a finished ``ClusterRunner``."""
+    totals: dict = {}
+    for st in (runner.stats.cache_by_node or {}).values():
+        for k, v in st.items():
+            totals[k] = totals.get(k, 0) + v
+    return totals
+
+
+def hit_rate(totals: dict) -> float:
+    lookups = totals.get("hits", 0) + totals.get("misses", 0)
+    return totals.get("hits", 0) / lookups if lookups else 0.0

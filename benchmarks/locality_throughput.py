@@ -39,6 +39,7 @@ import time
 from pathlib import Path
 
 from ._pin import run_pinned
+from ._stats import cache_totals as _cache_totals, hit_rate as _hit_rate
 
 N_SUBJECTS = 32
 SESSIONS = 2                        # 64 units
@@ -49,20 +50,6 @@ PAPER_REFERENCE_GBPS = {"lab_network": 0.60, "cloud_storage": 0.33}
 
 _INPROC_FLAG = "REPRO_LOCALITY_BENCH_INPROC"
 _JSON_OUT = Path(__file__).resolve().parent / "out" / "locality_throughput.json"
-
-
-def _cache_totals(runner) -> dict:
-    totals: dict = {}
-    for st in (runner.stats.cache_by_node or {}).values():
-        for k, v in st.items():
-            totals[k] = totals.get(k, 0) + v
-    return totals
-
-
-def _hit_rate(totals: dict) -> float:
-    lookups = totals.get("hits", 0) + totals.get("misses", 0)
-    return totals.get("hits", 0) / lookups if lookups else 0.0
-
 
 def _run_inproc():
     from repro.core import (builtin_pipelines, query_available_work,

@@ -7,7 +7,8 @@ from .integrity import (IntegrityError, fletcher64, fletcher64_file,
 from .manifest import DatasetManifest, ImageRecord, synthesize_dataset
 from .pipelines import Pipeline, PipelineSpec, builtin_pipelines
 from .provenance import Provenance, make_provenance, is_complete
-from .query import WorkUnit, Exclusion, query_available_work, write_exclusion_csv
+from .query import (WorkUnit, Exclusion, dump_units, load_units,
+                    query_available_work, write_exclusion_csv)
 from .storage import TieredStore, TIERS
 from .workflow import (JobPlan, LocalRunner, StragglerDetector, UnitResult,
                        dedupe_results, generate_jobs, load_unit_inputs,
@@ -29,4 +30,22 @@ __all__ = [
     "PAPER_ENVS", "TPU_ENVS", "job_cost", "paper_table1",
     "cost_ratio_cloud_vs_hpc", "training_run_cost",
     "IngestRule", "ingest_directory", "write_raw_dump",
+    "dump_units", "load_units",
+    "CampaignPlan", "Cohort", "Shard", "admission_throttle",
+    "cohort_from_query", "plan_campaign", "summaries_from_queue",
 ]
+
+_CAMPAIGN_NAMES = ("CampaignPlan", "Cohort", "Shard", "admission_throttle",
+                   "cohort_from_query", "plan_campaign",
+                   "summaries_from_queue")
+
+
+def __getattr__(name):
+    # campaign is loaded lazily: it imports repro.dist (for the shared
+    # placement scorer + digest summaries), and repro.dist.cache imports
+    # repro.core.integrity — an eager import here would cycle whenever
+    # repro.dist is imported first
+    if name in _CAMPAIGN_NAMES:
+        from . import campaign
+        return getattr(campaign, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -6,6 +6,7 @@ from __future__ import annotations
 
 import csv
 import dataclasses
+import json
 from pathlib import Path
 from typing import Dict, List, Mapping, Optional, Tuple
 
@@ -90,6 +91,25 @@ def query_available_work(manifest: DatasetManifest, pipeline: Pipeline, *,
             continue
         work.append(wu)
     return work, excluded
+
+
+def dump_units(units: List[WorkUnit], path: Path) -> Path:
+    """Serialize a unit list to the units-JSON artifact every execution path
+    shares (SLURM array tasks, ``repro.dist.rpc serve``, campaign shards).
+    Full-fidelity: the data-plane fields (``input_digests``/``input_bytes``)
+    travel too, so a queue built from the file schedules locality-aware."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps([dataclasses.asdict(u) for u in units],
+                               indent=1))
+    return path
+
+
+def load_units(path: Path) -> List[WorkUnit]:
+    """Reload a :func:`dump_units` artifact into :class:`WorkUnit` objects
+    identical to the originals (missing digest fields — pre-locality files —
+    default empty: locality-blind, never broken)."""
+    return [WorkUnit(**u) for u in json.loads(Path(path).read_text())]
 
 
 def write_exclusion_csv(excluded: List[Exclusion], path: Path):

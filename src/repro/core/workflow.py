@@ -29,7 +29,6 @@ prefetch still overlapping I/O and compute.
 from __future__ import annotations
 
 import dataclasses
-import json
 import os
 import threading
 import time
@@ -45,7 +44,8 @@ from .integrity import sha256_load_array, sha256_save_array
 from .manifest import DatasetManifest
 from .pipelines import Pipeline
 from .provenance import make_provenance, is_complete
-from .query import WorkUnit, query_available_work, write_exclusion_csv
+from .query import (WorkUnit, dump_units, load_units, query_available_work,
+                    write_exclusion_csv)
 
 
 # ---------------------------------------------------------------------------
@@ -75,32 +75,107 @@ class JobPlan:
     slurm_script: Optional[str] = None
     units_file: Optional[str] = None
     exclusion_csv: Optional[str] = None
+    manifest_file: Optional[str] = None
+    # campaign mode (admission-time locality, repro.core.campaign): the
+    # deterministic plan artifact plus one script + units file per shard
+    campaign_file: Optional[str] = None
+    shard_scripts: List[str] = dataclasses.field(default_factory=list)
+    shard_units_files: List[str] = dataclasses.field(default_factory=list)
 
 
 def generate_jobs(manifest: DatasetManifest, pipeline: Pipeline, out_dir: Path,
                   *, cpus: int = 4, mem_gb: int = 16, walltime: str = "24:00:00",
-                  throttle: int = 100) -> JobPlan:
-    """The paper's single-line script generation: query + job array + CSV."""
+                  throttle: int = 100, campaign=None, summaries=None) -> JobPlan:
+    """The paper's single-line script generation: query + job array + CSV.
+
+    Blind mode (default) emits one untargeted array script over the whole
+    unit list. Campaign mode — ``summaries=`` (per-node digest-summary
+    wires, a summaries-file path, or live :class:`DigestSummary` objects) or
+    a pre-built ``campaign=`` :class:`~repro.core.campaign.CampaignPlan` —
+    shards the array by data placement instead: one SLURM script per shard,
+    warm shards pinned to the host holding their bytes, plus a
+    deterministic ``campaign.json`` stamped with the planner-inputs hash so
+    the submitted campaign is replayable and auditable. Either way the
+    manifest and units JSON land next to the scripts, so every path the
+    generated scripts reference exists at submit time."""
     out_dir = Path(out_dir)
     out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / "logs").mkdir(exist_ok=True)      # SBATCH --output target
     units, excluded = query_available_work(manifest, pipeline)
     excl_csv = out_dir / f"{manifest.name}_{pipeline.name}_excluded.csv"
     write_exclusion_csv(excluded, excl_csv)
-    units_file = out_dir / f"{manifest.name}_{pipeline.name}_units.json"
-    units_file.write_text(json.dumps([dataclasses.asdict(u) for u in units], indent=1))
+    units_file = dump_units(
+        units, out_dir / f"{manifest.name}_{pipeline.name}_units.json")
+    manifest_file = out_dir / "manifest.json"
+    manifest.save(manifest_file)                 # referenced by every script
     plan = JobPlan(units=units, units_file=str(units_file),
-                   exclusion_csv=str(excl_csv))
-    if units:
-        script = SLURM_TEMPLATE.format(
-            name=f"{manifest.name}_{pipeline.name}",
-            last_idx=len(units) - 1, throttle=throttle, cpus=cpus,
-            mem_gb=mem_gb, walltime=walltime,
-            log_dir=str(out_dir / "logs"),
-            manifest_json=str(out_dir / "manifest.json"),
-            units_json=str(units_file), data_root=manifest.root)
-        sp = out_dir / f"{manifest.name}_{pipeline.name}.slurm"
-        sp.write_text(script)
-        plan.slurm_script = str(sp)
+                   exclusion_csv=str(excl_csv),
+                   manifest_file=str(manifest_file))
+    if not units:
+        return plan
+
+    if campaign is None and summaries is not None:
+        from .campaign import Cohort, plan_campaign
+        cohort = Cohort(manifest.name, pipeline.name, pipeline.digest(),
+                        units, excluded)
+        campaign = plan_campaign([cohort], summaries, throttle=throttle,
+                                 status=resource_status(out_dir))
+    if campaign is not None:
+        from .campaign import as_plan
+        from ..launch.slurm import write_shard_script
+        campaign = as_plan(campaign)
+        plan.campaign_file = str(campaign.save(out_dir / "campaign.json"))
+        by_job = {u.job_id: u for u in units}
+        # resolve every shard to THIS cohort's units first (a multi-cohort
+        # plan names other cohorts' units too), then catch the admitted
+        # units the plan never covered — sessions that appeared after
+        # planning, replayed stale plans — in one untargeted shard, so a
+        # submitted campaign always schedules the whole work list (the same
+        # fail-soft contract as WorkQueue plan seeding: degrade to blind,
+        # never lose work)
+        arrays: List[Tuple[str, Optional[str], List[WorkUnit]]] = []
+        covered: set = set()
+        for shard in campaign.shards:
+            shard_units = [by_job[j] for j in shard.unit_ids if j in by_job]
+            if not shard_units:
+                continue
+            covered.update(u.job_id for u in shard_units)
+            arrays.append((shard.shard_id, shard.node_id, shard_units))
+        uncovered = [u for u in units if u.job_id not in covered]
+        if uncovered:
+            arrays.append(("shard-uncovered", None, uncovered))
+        # the resource-derived throttle budgets the *campaign's* concurrent
+        # scratch footprint; split it across the emitted arrays so N
+        # simultaneously-submitted shards cannot multiply it back up
+        # (conservative when warm shards are pinned to distinct hosts).
+        # Residual: SLURM cannot express a cross-array throttle, so with
+        # more arrays than budget the floor of one task per array can still
+        # exceed it — the runbook tells resource-tight operators to submit
+        # shards in waves in that regime (docs/operating.md)
+        per_shard = max(1, campaign.throttle // max(1, len(arrays)))
+        for shard_id, node_id, shard_units in arrays:
+            name = f"{manifest.name}_{pipeline.name}_{shard_id}"
+            sf = dump_units(shard_units, out_dir / f"{name}_units.json")
+            sp = write_shard_script(
+                out_dir, name=name, n_units=len(shard_units),
+                units_json=str(sf), manifest_json=str(manifest_file),
+                data_root=manifest.root, node_id=node_id,
+                throttle=per_shard, cpus=cpus, mem_gb=mem_gb,
+                walltime=walltime)
+            plan.shard_units_files.append(str(sf))
+            plan.shard_scripts.append(str(sp))
+        return plan
+
+    script = SLURM_TEMPLATE.format(
+        name=f"{manifest.name}_{pipeline.name}",
+        last_idx=len(units) - 1, throttle=throttle, cpus=cpus,
+        mem_gb=mem_gb, walltime=walltime,
+        log_dir=str(out_dir / "logs"),
+        manifest_json=str(manifest_file),
+        units_json=str(units_file), data_root=manifest.root)
+    sp = out_dir / f"{manifest.name}_{pipeline.name}.slurm"
+    sp.write_text(script)
+    plan.slurm_script = str(sp)
     return plan
 
 
@@ -497,7 +572,7 @@ def _main():
     ap.add_argument("--scratch", default="/tmp")
     args = ap.parse_args()
     src = args.units_json or args.unit_from
-    units = [WorkUnit(**u) for u in json.loads(Path(src).read_text())]
+    units = load_units(Path(src))
     unit = units[args.index]
     if args.unit_from:
         print(unit.job_id)

@@ -1,9 +1,13 @@
 """Distribution layer: logical-axis sharding rules, compressed collectives,
 the multi-node work-stealing executor (``cluster`` + ``queue``), its socket
-transport (``rpc``), and the per-host content-addressed input cache
-(``cache``)."""
-from .cache import DigestSummary, InputCache, cache_from_env
+transport (``rpc``), the per-host content-addressed input cache (``cache``),
+and the shared placement scorer (``placement``) both the queue and the
+campaign planner rank candidates with."""
+from .cache import (DigestSummary, InputCache, cache_from_env,
+                    harvest_summary, load_summary_file, save_summary_file,
+                    summaries_from_cache_dirs)
 from .cluster import ClusterRunner, ClusterStats, Node, run_worker
+from .placement import best_node, unit_local_bytes
 from .queue import Lease, WorkQueue
 from .sharding import (Rules, attn_shard_choice, constrain, constrain_residual,
                        constrain_params_gathered, current_rules, param_spec_for,
@@ -12,7 +16,9 @@ from .sharding import (Rules, attn_shard_choice, constrain, constrain_residual,
 __all__ = [
     "ClusterRunner", "ClusterStats", "Node", "Lease", "WorkQueue",
     "DigestSummary", "InputCache", "cache_from_env", "QueueClient",
-    "QueueServer", "run_worker",
+    "QueueServer", "run_worker", "best_node", "unit_local_bytes",
+    "harvest_summary", "load_summary_file", "save_summary_file",
+    "summaries_from_cache_dirs",
     "Rules", "attn_shard_choice", "constrain", "constrain_residual",
     "constrain_params_gathered", "current_rules", "param_spec_for",
     "param_specs", "shardings_for", "tp_size", "use_rules",

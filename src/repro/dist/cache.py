@@ -53,6 +53,7 @@ import hashlib
 import io
 import json
 import os
+import secrets
 import threading
 from collections import OrderedDict, deque
 from pathlib import Path
@@ -210,7 +211,12 @@ class InputCache:
         # the window triggers a full re-sync instead)
         self.summary = DigestSummary()
         self._ops: Deque[Tuple[int, str, str]] = deque()   # (seq, op, digest)
-        self._seq = 0
+        # op seqs start at a per-life random base: a consumer's cursor from
+        # a previous cache life (wiped dir, counter reset) can then never
+        # alias into this life's seq range, so a cross-life delta request
+        # degrades to a full resync instead of silently serving a partial
+        # delta that leaves the consumer's summary drifted forever
+        self._seq = secrets.randbits(48)
         self._load_persisted()
 
     # -- persistence ---------------------------------------------------------
@@ -396,7 +402,14 @@ class InputCache:
         summary, so a long-asleep node resyncs instead of drifting."""
         with self._lock:
             stats = self._stats_locked()
-            if self._ops and cursor < self._ops[0][0] - 1:
+            # a delta is complete only for a cursor contiguous with the
+            # retained window: within [oldest_seq - 1, seq] (with no ops
+            # retained, exactly seq). Anything else — fell off the window,
+            # ahead of the counter, or a cursor from a previous cache life
+            # (the random per-life seq base makes those land outside the
+            # range) — degrades to a full resync, never a partial delta
+            oldest = self._ops[0][0] if self._ops else self._seq + 1
+            if cursor > self._seq or cursor < oldest - 1:
                 return self._seq, {"v": SUMMARY_WIRE_VERSION,
                                    "full": self.summary.to_wire(),
                                    "stats": stats}
@@ -418,3 +431,63 @@ class InputCache:
     def stats(self) -> Dict[str, int]:
         with self._lock:
             return self._stats_locked()
+
+
+# ---------------------------------------------------------------------------
+# serialized summaries: the offline half of campaign planning
+# ---------------------------------------------------------------------------
+# A live coordinator serves per-node summaries over rpc
+# (``WorkQueue.summaries_snapshot``); on an HPC login node there is no live
+# coordinator, only last night's cache directories on each host. These
+# helpers make summaries a file-shaped artifact: harvest them from cache
+# dirs, ship one JSON to wherever ``repro.core.campaign`` plans the next
+# job array, and load them back — same versioned wire either way, so the
+# planner cannot tell (and does not care) whether its view came off a
+# socket or a filesystem.
+
+def harvest_summary(cache_dir: Path) -> Optional[dict]:
+    """The full summary wire for one host's persisted cache directory, by
+    adopting its blobs exactly as a restarted worker would. ``None`` for a
+    path that is not a cache dir (no ``blobs/``) — callers skip, not crash."""
+    cache_dir = Path(cache_dir)
+    if not (cache_dir / "blobs").is_dir():
+        return None
+    _, wire = InputCache(cache_dir).summary_sync()
+    return wire
+
+
+def summaries_from_cache_dirs(root: Path) -> Dict[str, dict]:
+    """``{node_id: summary wire}`` for every ``<root>/<node_id>`` cache dir
+    — the per-node layout ``ClusterRunner(cache_per_node=True)`` writes and
+    a multi-host fleet mirrors one level up. Sorted for determinism."""
+    root = Path(root)
+    out: Dict[str, dict] = {}
+    if not root.is_dir():
+        return out
+    for child in sorted(p for p in root.iterdir() if p.is_dir()):
+        wire = harvest_summary(child)
+        if wire is not None:
+            out[child.name] = wire
+    return out
+
+
+def save_summary_file(path: Path, summaries: Dict[str, object]) -> Path:
+    """Serialize ``{node_id: DigestSummary | wire}`` to one deterministic
+    JSON file (the campaign planner's ``summaries=`` input)."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    wires = {n: ({"v": SUMMARY_WIRE_VERSION, "full": s.to_wire()}
+                 if isinstance(s, DigestSummary) else s)
+             for n, s in summaries.items()}
+    path.write_text(json.dumps(wires, sort_keys=True, indent=1) + "\n")
+    return path
+
+
+def load_summary_file(path: Path) -> Dict[str, dict]:
+    """Load a :func:`save_summary_file` artifact. Wire validation happens at
+    use (``DigestSummary.from_wire``) so version skew degrades to blind
+    planning for that node, consistent with the coordinator's fail-soft."""
+    raw = json.loads(Path(path).read_text())
+    if not isinstance(raw, dict):
+        raise ValueError(f"{path}: summaries file must be a JSON object")
+    return raw

@@ -332,7 +332,8 @@ class ClusterRunner:
                  cache_dir: Optional[Path] = None,
                  cache_bytes: Optional[int] = None,
                  cache_per_node: bool = False,
-                 locality: bool = True, partition: str = "round_robin"):
+                 locality: bool = True, partition: str = "round_robin",
+                 plan=None):
         if nodes < 1:
             raise ValueError("need at least one node")
         if transport not in ("local", "rpc"):
@@ -361,6 +362,11 @@ class ClusterRunner:
         self.cache_per_node = cache_per_node
         self.locality = locality
         self.partition = partition
+        # a CampaignPlan (repro.core.campaign) seeds the queue's per-node
+        # partitions from the admission-time shards: the cluster starts on
+        # the warm placement the planner computed instead of rediscovering
+        # it grant by grant (plan implies partition="plan" in WorkQueue)
+        self.plan = plan
         self.stats: Optional[ClusterStats] = None
         self.queue: Optional[WorkQueue] = None
         self.server = None                   # QueueServer once run() serves
@@ -382,7 +388,8 @@ class ClusterRunner:
             return []
         node_ids = self.node_ids()
         queue = WorkQueue(units, node_ids, lease_ttl_s=self.lease_ttl_s,
-                          locality=self.locality, partition=self.partition)
+                          locality=self.locality, partition=self.partition,
+                          plan=self.plan)
         self.queue = queue
         serving = self.transport == "rpc" or self.serve_addr is not None
         clients = []

@@ -1,0 +1,54 @@
+"""The one placement scorer: estimated cache-local bytes of a work unit
+against a host's digest summary.
+
+Two schedulers consume this module — and deliberately nothing else scores
+placement anywhere in the tree:
+
+* **Grant time** — :class:`repro.dist.queue.WorkQueue` scores every live
+  decision (grant / backlog fill / steal / speculation target / dead-node
+  requeue) for one running cluster.
+* **Admission time** — :mod:`repro.core.campaign` buckets whole job arrays
+  by the same score before anything is submitted, so a SLURM campaign lands
+  on the hosts that already hold its bytes.
+
+Keeping both on one function is a correctness property, not a style choice:
+if admission-time and grant-time scoring drift, the campaign planner seeds a
+queue with partitions the queue itself would immediately score differently
+and re-shuffle — locality paid for twice, delivered once. A test imports
+this function from both call sites and pins them to the same object.
+
+Scores are *estimates* (Bloom false positives, stale summaries) and only
+ever shape ordering; correctness is score-blind everywhere.
+
+``summary`` is duck-typed: anything supporting ``len(summary)`` and
+``digest in summary`` works (:class:`repro.dist.cache.DigestSummary` in
+production, plain sets in tests).
+"""
+from __future__ import annotations
+
+from typing import Mapping, Optional, Sequence
+
+
+def unit_local_bytes(unit, summary) -> int:
+    """Estimated bytes of ``unit``'s inputs already present in ``summary``
+    (``Σ input_bytes[s]`` over input digests the summary holds). 0 without a
+    usable summary or without manifest digests on the unit — the
+    locality-blind fallback, never an error."""
+    if summary is None or not len(summary):
+        return 0
+    digests = getattr(unit, "input_digests", None)
+    if not digests:
+        return 0
+    sizes = unit.input_bytes
+    return sum(sizes.get(s, 0) for s, d in digests.items() if d in summary)
+
+
+def best_node(unit, candidates: Sequence[str], summaries: Mapping[str, object],
+              load: Optional[Mapping[str, int]] = None) -> str:
+    """The candidate holding the most of ``unit``'s input bytes; ties go to
+    the lightest ``load`` (deque depth at grant time, assigned bytes at
+    admission time), then lexicographic node id for determinism."""
+    load = load or {}
+    return min(candidates,
+               key=lambda n: (-unit_local_bytes(unit, summaries.get(n)),
+                              load.get(n, 0), n))

@@ -56,10 +56,12 @@ import dataclasses
 import threading
 import time
 from collections import deque
+from pathlib import PurePath
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 from ..core.query import WorkUnit
-from .cache import DigestSummary
+from .cache import SUMMARY_WIRE_VERSION, DigestSummary
+from .placement import best_node, unit_local_bytes
 
 # grant-time scoring looks this deep into a node's own deque for a
 # higher-affinity unit; bounded so next_unit stays O(window · inputs) even
@@ -100,9 +102,14 @@ class WorkQueue:
     def __init__(self, units: Sequence[WorkUnit],
                  node_ids: Sequence[str] = (), *,
                  lease_ttl_s: float = 2.0, now=time.time,
-                 locality: bool = True, partition: str = "round_robin"):
-        if partition not in ("round_robin", "backlog"):
+                 locality: bool = True, partition: str = "round_robin",
+                 plan=None):
+        if plan is not None:
+            partition = "plan"
+        if partition not in ("round_robin", "backlog", "plan"):
             raise ValueError(f"unknown partition {partition!r}")
+        if partition == "plan" and plan is None:
+            raise ValueError('partition="plan" needs a plan')
         self.units = list(units)
         self.lease_ttl_s = float(lease_ttl_s)
         self.locality = bool(locality)
@@ -113,9 +120,14 @@ class WorkQueue:
         # units wait in a backlog; otherwise round-robin partition as before.
         # partition="backlog" keeps even a node-listed queue unpartitioned so
         # the (locality-scored) backlog fill decides initial placement once
-        # nodes have pushed their cache summaries.
+        # nodes have pushed their cache summaries. A ``plan``
+        # (:class:`repro.core.campaign.CampaignPlan`, or its loaded-JSON
+        # shape) seeds each node's deque from its admission-time shard, so
+        # the queue starts already warm instead of rediscovering locality.
         self._backlog: Deque[int] = deque()
-        if node_ids and partition == "round_robin":
+        if plan is not None:
+            self._seed_from_plan(plan)
+        elif node_ids and partition == "round_robin":
             for i in range(len(self.units)):
                 self._queues[node_ids[i % len(node_ids)]].append(i)
         else:
@@ -157,6 +169,42 @@ class WorkQueue:
         self._pending_meta: Dict[int, dict] = {}     # deferred primary failure
         self._dup_meta: List[dict] = []
 
+    def _seed_from_plan(self, plan):
+        """Deal units into per-node deques per an admission-time campaign
+        plan. Duck-typed: ``plan.shards`` (or ``plan["shards"]``) of
+        ``{node_id, unit_ids}`` records, so both a live
+        :class:`~repro.core.campaign.CampaignPlan` and its parsed
+        ``campaign.json`` work. Fail-soft by construction: shard entries
+        naming unknown units are ignored, shards targeting unknown/absent
+        nodes fall to the backlog (the locality-scored fill re-places them),
+        and units the plan never mentions are backlogged too — a stale or
+        partial plan degrades to PR 3 behaviour, never to lost work."""
+        if isinstance(plan, (str, PurePath)):
+            # a campaign.json path is explicit intent, not a stale artifact:
+            # load it (version-checked) rather than duck-typing it to an
+            # attribute-less string and silently backlogging everything
+            from ..core.campaign import CampaignPlan
+            plan = CampaignPlan.load(plan)
+        shards = plan.get("shards", []) if isinstance(plan, dict) \
+            else getattr(plan, "shards", [])
+        by_job = {u.job_id: i for i, u in enumerate(self.units)}
+        seeded: set = set()
+        for shard in shards:
+            if isinstance(shard, dict):
+                node_id, unit_ids = shard.get("node_id"), shard.get("unit_ids")
+            else:
+                node_id = getattr(shard, "node_id", None)
+                unit_ids = getattr(shard, "unit_ids", None)
+            target = self._queues.get(node_id) if node_id else None
+            for jid in unit_ids or []:
+                i = by_job.get(jid)
+                if i is None or i in seeded:
+                    continue
+                seeded.add(i)
+                (self._backlog if target is None else target).append(i)
+        self._backlog.extend(i for i in range(len(self.units))
+                             if i not in seeded)
+
     def _retire_meta(self, idx: int, entry: dict):
         """Record the completion that retired ``idx``: keyed for the final
         fold, appended to the ordered log for incremental polling. Each unit
@@ -172,15 +220,13 @@ class WorkQueue:
     def _local_bytes(self, idx: int, node_id: str) -> int:
         """Estimated bytes of unit ``idx``'s inputs already in ``node_id``'s
         host cache, per its last pushed digest summary. 0 without a summary
-        (old client, no cache, version skew) — the locality-blind fallback."""
-        summary = self._summaries.get(node_id)
-        if not self.locality or not summary or not len(summary):
+        (old client, no cache, version skew) — the locality-blind fallback.
+        The score itself is the shared admission/grant scorer
+        (:func:`repro.dist.placement.unit_local_bytes`), so campaign plans
+        and live grants can never rank the same unit differently."""
+        if not self.locality:
             return 0
-        unit = self.units[idx]
-        if not unit.input_digests:
-            return 0
-        return sum(unit.input_bytes.get(s, 0)
-                   for s, d in unit.input_digests.items() if d in summary)
+        return unit_local_bytes(self.units[idx], self._summaries.get(node_id))
 
     def _node_scores(self, node_id: str) -> bool:
         """Whether scoring can distinguish anything for this node."""
@@ -190,9 +236,9 @@ class WorkQueue:
     def _best_node(self, idx: int, candidates: List[str]) -> str:
         """The candidate holding the most of ``idx``'s input bytes; ties go
         to the shallowest deque, then lexicographic for determinism."""
-        return min(candidates,
-                   key=lambda n: (-self._local_bytes(idx, n),
-                                  len(self._queues[n]), n))
+        return best_node(self.units[idx], candidates,
+                         self._summaries if self.locality else {},
+                         {n: len(q) for n, q in self._queues.items()})
 
     def _apply_summary_wire(self, node_id: str, wire) -> bool:
         """Fold a summary push (full or delta) into the per-node state.
@@ -708,6 +754,17 @@ class WorkQueue:
                               for n, st in self._cache_stats.items()},
                     "cache_totals": totals,
                     "cache_hit_rate": (hits / lookups) if lookups else 0.0}
+
+    def summaries_snapshot(self) -> Dict[str, dict]:
+        """Per-alive-node cache digest summaries as versioned full wires
+        (``{node_id: {"v": 1, "full": ...}}``) — what the campaign planner
+        (:mod:`repro.core.campaign`) pulls from a live coordinator to shard
+        the *next* cohort's job array by where bytes already sit. Served
+        over rpc like the rest of the surface; empty when no node has
+        pushed a summary (the planner then degrades to blind admission)."""
+        with self._lock:
+            return {n: {"v": SUMMARY_WIRE_VERSION, "full": s.to_wire()}
+                    for n, s in self._summaries.items() if n not in self._dead}
 
     def active_leases(self) -> Dict[str, str]:
         """``job_id -> node_id`` for every in-flight lease (primary + twin) —

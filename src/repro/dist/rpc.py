@@ -58,6 +58,7 @@ _METHODS = frozenset({
     "reap", "speculate", "renew", "register", "running", "finished",
     "pending", "alive_nodes", "done_status", "queue_depths", "active_leases",
     "results_snapshot", "stats_snapshot", "primary_log", "put_summary",
+    "summaries_snapshot",
 })
 
 
@@ -398,6 +399,16 @@ class QueueClient:
     def stats_snapshot(self):
         return self._call("stats_snapshot")
 
+    def summaries_snapshot(self):
+        """Per-node summary wires for admission-time campaign planning;
+        ``{}`` (never an error) against a coordinator that predates it."""
+        try:
+            return self._call("summaries_snapshot")
+        except RuntimeError as e:
+            if "unknown method" in str(e):
+                return {}
+            raise
+
     # the in-process queue exposes these as attributes; mirror them so
     # observability code works against either implementation
     @property
@@ -444,8 +455,8 @@ def _main():
     args = ap.parse_args()
 
     if args.cmd == "serve":
-        units = [WorkUnit(**u)
-                 for u in json.loads(Path(args.units).read_text())]
+        from ..core.query import load_units
+        units = load_units(Path(args.units))
         queue = WorkQueue(units, (), lease_ttl_s=args.lease_ttl)
         host, port = parse_addr(args.addr)
         server = QueueServer(queue, host, port).start()

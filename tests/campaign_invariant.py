@@ -1,0 +1,53 @@
+"""Shared body of the campaign-planner invariant, used by the hypothesis
+property (``test_property.py``: random cohorts/summaries) and a
+deterministic grid in ``test_campaign.py`` — the same split as
+``cluster_invariant.py``, so the invariant still runs where hypothesis is
+absent."""
+import tempfile
+from pathlib import Path
+
+
+def reference_admitted(cohorts):
+    """Independent model of admission: first cohort to admit a job_id wins;
+    a session its own cohort excluded is never admitted by that cohort."""
+    admitted, seen = [], set()
+    for c in cohorts:
+        excl = {(e.subject, e.session) for e in c.excluded}
+        for u in c.units:
+            if (u.subject, u.session) in excl or u.job_id in seen:
+                continue
+            seen.add(u.job_id)
+            admitted.append(u.job_id)
+    return admitted
+
+
+def check_campaign_invariant(cohorts, summaries, throttle=100, status=None,
+                             max_shard_units=None):
+    """For the given cohorts and summary state: every admitted unit is
+    assigned to exactly one shard, no excluded unit is ever assigned, the
+    plan is structurally sound (no empty shards, submittable throttle, warm
+    shards only name summary-backed nodes), and replanning — in memory and
+    through a serialized ``campaign.json`` — is byte-identical."""
+    from repro.core.campaign import CampaignPlan, plan_campaign
+
+    plan = plan_campaign(cohorts, summaries, throttle=throttle,
+                         status=status, max_shard_units=max_shard_units)
+    assigned = plan.assigned_unit_ids()
+    # exactly once, and exactly the reference admission set
+    assert len(assigned) == len(set(assigned))
+    assert sorted(assigned) == sorted(reference_admitted(cohorts))
+    # structural sanity
+    assert all(s.unit_ids for s in plan.shards)
+    assert plan.throttle >= 1
+    assert all(s.node_id is None or s.node_id in plan.nodes
+               for s in plan.shards)
+    if max_shard_units:
+        assert all(len(s.unit_ids) <= max_shard_units for s in plan.shards)
+    # determinism + byte-identical replay through disk
+    again = plan_campaign(cohorts, summaries, throttle=throttle,
+                          status=status, max_shard_units=max_shard_units)
+    assert again.to_json() == plan.to_json()
+    with tempfile.TemporaryDirectory() as td:
+        p = plan.save(Path(td) / "campaign.json")
+        assert CampaignPlan.load(p).to_json() == plan.to_json()
+    return plan

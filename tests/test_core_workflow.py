@@ -3,6 +3,7 @@ job generation -> execution -> provenance -> idempotent re-query. Plus fault
 injection (retry), straggler duplication, and the exclusion CSV."""
 import csv
 import json
+import re
 from pathlib import Path
 
 import numpy as np
@@ -10,8 +11,8 @@ import pytest
 
 from repro.core import (DatasetManifest, IntegrityError, LocalRunner,
                         builtin_pipelines, generate_jobs, is_complete,
-                        query_available_work, resource_status, run_unit,
-                        synthesize_dataset)
+                        load_units, query_available_work, resource_status,
+                        run_unit, synthesize_dataset)
 
 
 @pytest.fixture()
@@ -75,6 +76,50 @@ def test_digest_change_triggers_reprocessing(dataset, tmp_path):
     pipe2 = type(pipe)(dataclasses.replace(pipe.spec, version="2.0"), pipe.fn)
     work, _ = query_available_work(dataset, pipe2)
     assert len(work) == 6
+
+
+def test_generate_jobs_writes_manifest_and_every_referenced_path(dataset, tmp_path):
+    """Regression: the SLURM template interpolated ``{out_dir}/manifest.json``
+    (and a logs dir for ``#SBATCH --output``) that generate_jobs never
+    created — an array submitted from the generated script referenced paths
+    that did not exist. Every absolute path the script names must exist at
+    submit time."""
+    pipe = builtin_pipelines()["bias_correct"]
+    plan = generate_jobs(dataset, pipe, tmp_path / "jobs")
+    assert plan.manifest_file and Path(plan.manifest_file).exists()
+    # the manifest next to the script reloads to the scanned dataset
+    loaded = DatasetManifest.load(plan.manifest_file)
+    assert len(loaded.images) == len(dataset.images)
+    assert loaded.images[0].sha256 == dataset.images[0].sha256
+    script = Path(plan.slurm_script).read_text()
+    assert str(plan.manifest_file) in script
+    referenced = re.findall(r"(/[^\s\\$]+)", script)
+    assert referenced, "no paths found in the generated script?"
+    for raw in referenced:
+        # SLURM patterns (%x_%a.out) resolve at runtime; their dir must exist
+        target = Path(raw.split("%")[0].rstrip("/"))
+        assert target.exists(), f"script references missing {target}"
+
+
+def test_units_json_roundtrip_reconstructs_identical_units(dataset, tmp_path):
+    """The units JSON is the hand-off artifact to SLURM array tasks and
+    ``repro.dist.rpc serve``: reloading it must reconstruct WorkUnits equal
+    to the originals *including* the data-plane fields (input_digests /
+    input_bytes) — silently dropping those would leave every downstream
+    queue locality-blind."""
+    pipe = builtin_pipelines()["bias_correct"]
+    plan = generate_jobs(dataset, pipe, tmp_path / "jobs")
+    reloaded = load_units(plan.units_file)
+    assert reloaded == plan.units                # dataclass eq: every field
+    for orig, back in zip(plan.units, reloaded):
+        assert back.input_digests == orig.input_digests != {}
+        assert back.input_bytes == orig.input_bytes != {}
+        assert back.total_input_bytes == orig.total_input_bytes > 0
+    # and a second round-trip is byte-stable
+    from repro.core import dump_units
+    again = tmp_path / "again.json"
+    dump_units(reloaded, again)
+    assert again.read_text() == Path(plan.units_file).read_text()
 
 
 def test_retry_on_injected_failure(dataset):

@@ -275,6 +275,82 @@ def test_delta_cursor_off_window_degrades_to_full_resync(tmp_path):
     assert "full" in wire                        # resync, not a partial delta
 
 
+def test_delta_cursor_exactly_at_window_boundary(tmp_path):
+    """Off-by-one guard: a consumer whose cursor sits exactly at the oldest
+    retained op's predecessor is still *inside* the window — it must get a
+    delta carrying every retained op, not a full resync; one op older and
+    it has genuinely fallen off. Cursors are relative to the cache's
+    per-life seq base, so the test reads the base first."""
+    cache = InputCache(tmp_path / "c", max_bytes=1 << 30)
+    base = cache._seq
+    for i in range(3):
+        np.save(tmp_path / f"{i}.npy", np.full(4, i, dtype=np.float32))
+        cache.fetch_array(tmp_path / f"{i}.npy")     # ops seq base+1..base+3
+    cache._ops.popleft()                             # window slid: base+2..+3
+    _, wire = cache.summary_delta_since(base + 1)    # boundary: still a delta
+    assert "full" not in wire and len(wire["add"]) == 2
+    _, wire = cache.summary_delta_since(base)        # one older: off-window
+    assert "full" in wire
+    # no ops retained: only a cursor exactly at the counter gets a delta
+    cache._ops.clear()
+    _, wire = cache.summary_delta_since(cache._seq)
+    assert "full" not in wire and wire["add"] == [] and wire["drop"] == []
+    _, wire = cache.summary_delta_since(cache._seq - 1)
+    assert "full" in wire                            # ops lost: must resync
+
+
+def test_delta_after_producer_restart_resyncs_empty_summary(dataset, tmp_path):
+    """A producer that restarts with an empty cache resets its op counter;
+    a consumer still holding the previous life's cursor must get a full
+    (now empty) summary — a bare empty delta would leave the coordinator
+    scoring against blobs that no longer exist, forever."""
+    pipe, units = _work(dataset)
+    cdir = tmp_path / "c"
+    cache = InputCache(cdir, max_bytes=1 << 30)
+    load_unit_inputs(units[0], dataset.root, cache=cache)
+    cursor, full = cache.summary_sync()
+    assert cursor > 0
+    q = WorkQueue(units, ["a"])
+    assert q.put_summary("a", full) is True
+    assert q._local_bytes(0, "a") == units[0].total_input_bytes
+    # crash + wipe: the node comes back with a fresh, empty cache
+    shutil.rmtree(cdir)
+    fresh = InputCache(cdir, max_bytes=1 << 30)
+    new_cursor, wire = fresh.summary_delta_since(cursor)
+    assert "full" in wire                # cross-life cursor: full resync
+    q.heartbeat("a", summary_delta=wire)
+    assert q._local_bytes(0, "a") == 0   # stale membership corrected
+    # and the consumer's new cursor tracks the fresh life contiguously
+    assert new_cursor == fresh._seq
+    load_unit_inputs(units[1], dataset.root, cache=fresh)
+    _, delta = fresh.summary_delta_since(new_cursor)
+    assert units[1].input_digests["T1w"] in delta["add"]
+
+
+def test_delta_after_restart_never_aliases_even_with_new_ops(dataset, tmp_path):
+    """Regression: with a counter restarting at 0, a new life that performed
+    >= cursor ops before the consumer's next request made the stale cursor
+    look in-window, and the partial delta kept the previous life's phantom
+    blobs in the consumer's summary forever. The per-life random seq base
+    must push any cross-life cursor outside the window -> full resync."""
+    pipe, units = _work(dataset)
+    cdir = tmp_path / "c"
+    cache = InputCache(cdir, max_bytes=1 << 30)
+    load_unit_inputs(units[0], dataset.root, cache=cache)
+    cursor, _ = cache.summary_sync()
+    # wipe + restart, then the new life does MORE ops than the old cursor
+    # ever counted before the consumer asks again
+    shutil.rmtree(cdir)
+    fresh = InputCache(cdir, max_bytes=1 << 30)
+    for u in units[1:5]:
+        load_unit_inputs(u, dataset.root, cache=fresh)
+    _, wire = fresh.summary_delta_since(cursor)
+    assert "full" in wire                # not a partial delta of the new life
+    back = DigestSummary.from_wire(wire["full"])
+    assert units[0].input_digests["T1w"] not in back     # phantom gone
+    assert all(u.input_digests["T1w"] in back for u in units[1:5])
+
+
 def test_eviction_travels_as_drop_delta(dataset, tmp_path):
     pipe, units = _work(dataset)
     one = (Path(dataset.root) / units[0].inputs["T1w"]).stat().st_size

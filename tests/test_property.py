@@ -103,6 +103,66 @@ def test_cluster_exactly_one_ok_provenance_and_no_torn_files(
     check_cluster_invariant(n_subjects, sessions, nodes, flaky, die)
 
 
+_DIGEST_POOL = [f"d{i}" for i in range(12)]
+
+
+@st.composite
+def _cohorts_and_summaries(draw):
+    """Arbitrary campaign inputs: 1-3 cohorts of synthetic work units (0-2
+    input digests each, drawn from a small pool so summaries genuinely
+    overlap), exclusion lists that may name admitted sessions, an optional
+    re-submitted duplicate cohort, and 0-3 per-node digest summaries."""
+    import dataclasses
+    from repro.core.campaign import Cohort
+    from repro.core.query import Exclusion, WorkUnit
+    from repro.dist import DigestSummary
+    cohorts = []
+    for c in range(draw(st.integers(1, 3))):
+        units = []
+        for i in range(draw(st.integers(0, 8))):
+            digs = draw(st.lists(st.sampled_from(_DIGEST_POOL),
+                                 max_size=2, unique=True))
+            size = draw(st.integers(0, 1 << 16))
+            units.append(WorkUnit(
+                dataset=f"ds{c}", subject=f"s{i:02d}", session="01",
+                pipeline="p", pipeline_digest="pd",
+                inputs={f"in{k}": f"{i}-{k}.npy" for k in range(len(digs))},
+                out_dir=f"/out/ds{c}/{i}",
+                input_digests={f"in{k}": d for k, d in enumerate(digs)},
+                input_bytes={f"in{k}": size for k in range(len(digs))}))
+        excluded = [Exclusion(f"s{draw(st.integers(0, 9)):02d}", "01", "x")
+                    for _ in range(draw(st.integers(0, 3)))]
+        cohorts.append(Cohort(f"ds{c}", "p", "pd", units, excluded))
+    if draw(st.booleans()):                      # overlapping re-submission
+        cohorts.append(dataclasses.replace(cohorts[0]))
+    summaries = {}
+    for n in range(draw(st.integers(0, 3))):
+        s = DigestSummary(m=512, k=3)
+        for d in draw(st.lists(st.sampled_from(_DIGEST_POOL),
+                               max_size=6, unique=True)):
+            s.add(d)
+        summaries[f"n{n}"] = s
+    throttle = draw(st.integers(1, 64))
+    status = {"disk_free_gb": draw(st.floats(0.0, 64.0, allow_nan=False))}
+    max_shard = draw(st.one_of(st.none(), st.integers(1, 4)))
+    return cohorts, summaries, throttle, status, max_shard
+
+
+@given(_cohorts_and_summaries())
+@settings(max_examples=40, deadline=None)
+def test_campaign_plan_exactly_once_no_excluded_byte_replayable(case):
+    """Campaign-planner invariant: for arbitrary cohorts and summary states,
+    every admitted unit is assigned to exactly one shard, a unit its cohort
+    excluded is never assigned, and replanning — in memory and through the
+    serialized campaign.json — is byte-identical (the admission-time twin of
+    the executor invariant below; body shared with the deterministic grid in
+    test_campaign.py)."""
+    from campaign_invariant import check_campaign_invariant
+    cohorts, summaries, throttle, status, max_shard = case
+    check_campaign_invariant(cohorts, summaries, throttle=throttle,
+                             status=status, max_shard_units=max_shard)
+
+
 @given(st.integers(2, 16), st.integers(2, 8), st.integers(2, 8))
 @settings(max_examples=10, deadline=None)
 def test_moe_dispatch_conservation(S, E, C):
