@@ -11,7 +11,8 @@ def cache_totals(runner) -> dict:
     totals: dict = {}
     for st in (runner.stats.cache_by_node or {}).values():
         for k, v in st.items():
-            totals[k] = totals.get(k, 0) + v
+            if isinstance(v, (int, float)):    # skip per-addr byte maps
+                totals[k] = totals.get(k, 0) + v
     return totals
 
 

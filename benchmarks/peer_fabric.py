@@ -1,0 +1,233 @@
+"""Peer blob fabric vs storage-only fetching on a warm 4-node chaos run.
+
+The paper's transfer ceiling is the shared-storage link: 0.60 Gb/s over the
+lab network, 0.33 Gb/s from cloud storage. The peer fabric
+(``repro.dist.blobserve``) routes a node's cache misses to whichever sibling
+already holds the blob, so after a warm-up pass the storage link only
+carries bytes no live peer has. This bench measures exactly that delta on
+the 32-unit chaos schedule:
+
+1. **Warm-up** — a locality-blind round-robin run over 4 nodes with one
+   cache each (``cache_per_node``): every node ends up holding roughly its
+   partition's input bytes. Cache dirs are snapshotted.
+2. **Measured arms** — derivatives wiped, caches restored, and the same 32
+   units re-run from a *rotated* placement (locality off, round-robin: most
+   units land on a node that does NOT hold their bytes) with mid-run chaos
+   (node-1 dies after 4 units — a serving peer going away mid-run): once
+   with ``peer_fabric=False`` (every non-local fetch crosses storage, the
+   PR 5 baseline) and once with ``peer_fabric=True`` (non-local fetches
+   stream from the warm sibling, storage is the fallback).
+
+To keep the comparison honest on one machine — where "storage" and "peer"
+are the same local disk — the storage path is throttled through the
+``InputCache._read_storage`` seam to the paper's 0.60 Gb/s in BOTH arms.
+The peer path is measured as-is: that asymmetry is the point (peer traffic
+rides the node-to-node link, not the storage choke point).
+
+Acceptance gates (checked here and in CI; a regression fails loud):
+
+* both arms complete all units ok;
+* fabric-on records peer hits, and its **measured peer-link Gb/s strictly
+  beats the measured storage-link Gb/s** (and the paper's 0.60 reference);
+* fabric-on moves **strictly fewer bytes from storage** than the
+  fabric-off baseline;
+* every peer-path failure fell back (ok-count again) with the fallback
+  counters visible in the stats.
+
+Writes ``benchmarks/out/peer_fabric.json`` (CI artifact; override with
+``REPRO_BENCH_JSON``). Runs thread-pinned in a subprocess (see ``_pin``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+from ._pin import run_pinned
+from ._stats import cache_totals as _cache_totals, hit_rate as _hit_rate
+
+N_SUBJECTS = 16
+SESSIONS = 2                        # 32 units
+SHAPE = (64, 64, 64)                # 1 MiB float32 input per unit: large
+                                    # enough that link speed, not per-fetch
+                                    # overhead, decides the peer-vs-storage
+                                    # comparison (the paper's inputs are MBs)
+PIPELINE = "bias_correct"
+NODES = 4
+PAPER_REFERENCE_GBPS = {"lab_network": 0.60, "cloud_storage": 0.33}
+MODEL_STORAGE_GBPS = PAPER_REFERENCE_GBPS["lab_network"]
+
+_INPROC_FLAG = "REPRO_PEER_FABRIC_BENCH_INPROC"
+_JSON_OUT = Path(__file__).resolve().parent / "out" / "peer_fabric.json"
+
+
+def _link_gbps(nbytes: int, seconds: float) -> float:
+    return nbytes * 8 / seconds / 1e9 if seconds > 0 else 0.0
+
+
+def _run_inproc():
+    from repro.core import (builtin_pipelines, query_available_work,
+                            synthesize_dataset)
+    from repro.dist import ClusterRunner, InputCache
+    rows = []
+    with tempfile.TemporaryDirectory() as td:
+        td = Path(td)
+        ds = synthesize_dataset(td / "ds", "fabbench", n_subjects=N_SUBJECTS,
+                                sessions_per_subject=SESSIONS, shape=SHAPE)
+        pipe = builtin_pipelines()[PIPELINE]
+        units, _ = query_available_work(ds, pipe)
+        assert len(units) == N_SUBJECTS * SESSIONS
+        deriv = Path(ds.root) / "derivatives"
+        caches = td / "hosts"
+        snapshot = td / "hosts-warm"
+
+        # -- warm-up: populate per-node caches (unthrottled) -----------------
+        warm = ClusterRunner(pipe, ds.root, nodes=NODES, locality=False,
+                             cache_dir=caches, cache_per_node=True,
+                             straggler_factor=100.0, poll_s=0.02)
+        results = warm.run(units)
+        ok = sum(r.status == "ok" for r in results)
+        if ok != len(units):
+            raise RuntimeError(f"warm-up incomplete: {ok}/{len(units)} ok")
+        shutil.copytree(caches, snapshot)
+        shutil.rmtree(deriv, ignore_errors=True)
+
+        # rotate the per-node cache dirs by one: node-i now holds node-(i+1)'s
+        # warm bytes, so under round-robin re-partition nearly every unit
+        # lands on a node whose *sibling* (not itself) holds its inputs —
+        # the shape where only the fabric can keep bytes off the storage link
+        def restore_rotated():
+            shutil.rmtree(caches, ignore_errors=True)
+            caches.mkdir(parents=True)
+            for i in range(NODES):
+                shutil.copytree(snapshot / f"node-{(i + 1) % NODES}",
+                                caches / f"node-{i}")
+
+        # model the paper's storage link in both measured arms: every byte
+        # crossing the shared-storage seam pays 0.60 Gb/s. The peer path is
+        # deliberately NOT throttled — peer traffic rides the node-to-node
+        # link, which is exactly the asymmetry the fabric exists to exploit.
+        real_read = InputCache._read_storage
+
+        def throttled_read(src):
+            data = real_read(src)
+            time.sleep(len(data) * 8 / (MODEL_STORAGE_GBPS * 1e9))
+            return data
+
+        def measure(peer_fabric: bool) -> dict:
+            restore_rotated()
+            units_now, _ = query_available_work(ds, pipe)
+            runner = ClusterRunner(
+                pipe, ds.root, nodes=NODES, locality=False,
+                cache_dir=caches, cache_per_node=True,
+                peer_fabric=peer_fabric,
+                die_after={"node-1": 4}, lease_ttl_s=0.6, hb_interval_s=0.1,
+                straggler_factor=100.0, poll_s=0.02)
+            InputCache._read_storage = staticmethod(throttled_read)
+            t0 = time.time()
+            try:
+                results = runner.run(units_now)
+            finally:
+                InputCache._read_storage = staticmethod(real_read)
+            dt = time.time() - t0
+            ok = sum(r.status == "ok" for r in results)
+            if ok != len(units_now):
+                raise RuntimeError(
+                    f"peer_fabric={peer_fabric}: {ok}/{len(units_now)} ok")
+            totals = _cache_totals(runner)
+            shutil.rmtree(deriv, ignore_errors=True)
+            return {
+                "seconds": round(dt, 3), "ok": ok,
+                "hit_rate": round(_hit_rate(totals), 4),
+                "peer_hits": totals.get("peer_hits", 0),
+                "bytes_from_cache": totals.get("bytes_from_cache", 0),
+                "bytes_from_peer": totals.get("bytes_from_peer", 0),
+                "bytes_from_storage": totals.get("bytes_from_storage", 0),
+                "peer_gbps": round(_link_gbps(
+                    totals.get("bytes_from_peer", 0),
+                    totals.get("peer_seconds", 0.0)), 3),
+                "storage_gbps": round(_link_gbps(
+                    totals.get("bytes_from_storage", 0),
+                    totals.get("storage_seconds", 0.0)), 3),
+                "effective_gbps": round(
+                    sum(u.total_input_bytes for u in units_now)
+                    * 8 / dt / 1e9, 3),
+                "fallbacks": {k: totals.get(k, 0) for k in (
+                    "peer_false_positives", "peer_dead",
+                    "peer_digest_mismatches", "peer_locate_failures")},
+                "fabric": runner.stats.fabric,
+                "peer_links": runner.stats.peer_links,
+                "requeued": len(runner.stats.requeued),
+            }
+
+        off = measure(False)
+        on = measure(True)
+
+        for phase, m in (("off", off), ("on", on)):
+            rows.append((f"peer_fabric_storage_bytes_{phase}",
+                         m["bytes_from_storage"],
+                         f"input bytes over the (0.60 Gb/s-modelled) storage "
+                         f"link, fabric {phase}"))
+            rows.append((f"peer_fabric_effective_gbps_{phase}",
+                         m["effective_gbps"],
+                         f"input bits consumed / wall-clock, fabric {phase}; "
+                         f"paper reference "
+                         f"{PAPER_REFERENCE_GBPS['lab_network']} (lab) vs "
+                         f"{PAPER_REFERENCE_GBPS['cloud_storage']} (cloud)"))
+        rows.append(("peer_fabric_peer_gbps", on["peer_gbps"],
+                     f"measured node-to-node link Gb/s "
+                     f"({on['bytes_from_peer']} B over "
+                     f"{on['peer_hits']} peer hits)"))
+        rows.append(("peer_fabric_storage_gbps", on["storage_gbps"],
+                     "measured storage-link Gb/s under the 0.60 model "
+                     "(fallback + unlocatable bytes)"))
+        rows.append(("peer_fabric_storage_bytes_saved",
+                     off["bytes_from_storage"] - on["bytes_from_storage"],
+                     "bytes the fabric kept off the storage link on the "
+                     "same warm rotated 32-unit chaos schedule"))
+
+        # acceptance gates — a fabric that doesn't beat the storage path, or
+        # that loses units when peers misbehave, must fail CI loudly
+        if on["peer_hits"] <= 0:
+            raise RuntimeError("fabric-on run recorded no peer hits")
+        if on["bytes_from_storage"] >= off["bytes_from_storage"]:
+            raise RuntimeError(
+                f"fabric-on moved {on['bytes_from_storage']} bytes from "
+                f"storage, not strictly below fabric-off "
+                f"{off['bytes_from_storage']} — fabric regression")
+        floor = max(on["storage_gbps"],
+                    PAPER_REFERENCE_GBPS["lab_network"])
+        if on["peer_gbps"] <= floor:
+            raise RuntimeError(
+                f"peer link {on['peer_gbps']} Gb/s does not beat the "
+                f"storage path ({on['storage_gbps']} measured, "
+                f"{PAPER_REFERENCE_GBPS['lab_network']} paper reference)")
+
+    out = Path(os.environ.get("REPRO_BENCH_JSON", _JSON_OUT))
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps({
+        "units": N_SUBJECTS * SESSIONS, "shape": list(SHAPE), "nodes": NODES,
+        "chaos": {"die_after": {"node-1": 4}, "cache_rotation": 1},
+        "model_storage_gbps": MODEL_STORAGE_GBPS,
+        "paper_reference_gbps": PAPER_REFERENCE_GBPS,
+        "fabric_off": off, "fabric_on": on,
+        "gate": {"peer_hits_positive": True,
+                 "storage_bytes_strictly_lower": True,
+                 "peer_gbps_beats_storage": True},
+        "rows": [[n, v, d] for n, v, d in rows],
+    }, indent=1))
+    return rows
+
+
+def run():
+    """Benchmark entry (benchmarks.run): re-exec pinned — see ``_pin``."""
+    return run_pinned("benchmarks.peer_fabric", "peer_fabric_",
+                      _INPROC_FLAG, _run_inproc, timeout=1800)
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(",".join(str(c) for c in row))

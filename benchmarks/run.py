@@ -7,13 +7,15 @@ import traceback
 
 def main() -> None:
     from . import (campaign_plan, cluster_throughput, executor_throughput,
-                   kernel_bench, locality_throughput, pipeline_throughput,
-                   rpc_throughput, table1_cost, train_step_bench)
+                   kernel_bench, locality_throughput, peer_fabric,
+                   pipeline_throughput, rpc_throughput, table1_cost,
+                   train_step_bench)
     mods = [("table1_cost", table1_cost), ("pipeline_throughput", pipeline_throughput),
             ("executor_throughput", executor_throughput),
             ("cluster_throughput", cluster_throughput),
             ("rpc_throughput", rpc_throughput),
             ("locality_throughput", locality_throughput),
+            ("peer_fabric", peer_fabric),
             ("campaign_plan", campaign_plan),
             ("train_step", train_step_bench), ("kernels", kernel_bench)]
     print("name,value,derived")

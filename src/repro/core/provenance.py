@@ -47,6 +47,14 @@ class Provenance:
     # bytes_from_cache means a stale summary or Bloom false positive.
     locality_score: float = 0.0
     bytes_from_cache: int = 0
+    # Peer-fabric provenance (repro.dist.blobserve): True iff at least one
+    # input blob was streamed from another host's cache instead of shared
+    # storage, and how many bytes came over peer links. Peer bytes are
+    # sha256-re-verified on arrival against the manifest digest, so the
+    # recorded input checksums are identical across cache/peer/storage
+    # origins — like cache_hit, this is pure data-plane provenance.
+    peer_fetch: bool = False
+    bytes_from_peer: int = 0
 
     def save(self, out_dir: Path):
         """Atomic write (tmp + rename): a concurrent reader — or a racing
@@ -73,7 +81,8 @@ def make_provenance(pipeline: str, digest: str, inputs: Dict[str, str],
                     error: Optional[str] = None, attempt: int = 1,
                     node_id: str = "", lease_epoch: int = 0,
                     cache_hit: bool = False, locality_score: float = 0.0,
-                    bytes_from_cache: int = 0) -> Provenance:
+                    bytes_from_cache: int = 0, peer_fetch: bool = False,
+                    bytes_from_peer: int = 0) -> Provenance:
     return Provenance(
         pipeline=pipeline, pipeline_digest=digest,
         user=getpass.getuser(), host=platform.node(),
@@ -81,7 +90,8 @@ def make_provenance(pipeline: str, digest: str, inputs: Dict[str, str],
         inputs=inputs, outputs=outputs, status=status, error=error,
         attempt=attempt, node_id=node_id, lease_epoch=lease_epoch,
         cache_hit=cache_hit, locality_score=locality_score,
-        bytes_from_cache=bytes_from_cache)
+        bytes_from_cache=bytes_from_cache, peer_fetch=peer_fetch,
+        bytes_from_peer=bytes_from_peer)
 
 
 def is_complete(out_dir: Path, digest: Optional[str] = None) -> bool:

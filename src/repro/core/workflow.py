@@ -191,9 +191,11 @@ class UnitResult:
     attempts: int
     error: Optional[str] = None
     # data-movement accounting (mirrors the provenance stamps): input bytes
-    # served from the host cache on the committing run, and the scheduler's
-    # grant-time estimate of the locally-available input fraction
+    # served from the host cache on the committing run, input bytes streamed
+    # from warm peers over the blob fabric, and the scheduler's grant-time
+    # estimate of the locally-available input fraction
     bytes_from_cache: int = 0
+    bytes_from_peer: int = 0
     locality_score: float = 0.0
 
 
@@ -231,8 +233,9 @@ def _commit_lock(out_dir: Path) -> _DirLock:
 
 
 # (inputs by suffix, rel-path -> sha256, every input served from host cache,
-#  input bytes that came off node-local disk rather than shared storage)
-LoadedInputs = Tuple[Dict[str, np.ndarray], Dict[str, str], bool, int]
+#  input bytes off node-local disk rather than shared storage, input bytes
+#  streamed from warm peers over the blob fabric)
+LoadedInputs = Tuple[Dict[str, np.ndarray], Dict[str, str], bool, int, int]
 
 
 def load_unit_inputs(unit: WorkUnit, data_root: Path,
@@ -243,26 +246,40 @@ def load_unit_inputs(unit: WorkUnit, data_root: Path,
 
     ``cache`` (a :class:`repro.dist.cache.InputCache`) serves inputs whose
     bytes are already on the host's local disk instead of re-reading shared
-    storage; the returned digests are identical either way. The third element
-    of the result is True iff *every* input came from the cache — stamped
-    into provenance as ``cache_hit`` — and the fourth counts the input bytes
-    the cache kept off the storage link (``bytes_from_cache``)."""
+    storage; the returned digests are identical either way. With a peer
+    fabric attached to the cache (``InputCache.attach_fabric``), a local
+    miss whose manifest digest is known first streams from a warm peer —
+    the unit's ``input_digests``/``input_bytes`` manifest hints are what
+    make the fetch content-addressed. The third element of the result is
+    True iff *every* input came from the local cache — stamped into
+    provenance as ``cache_hit`` — the fourth counts the input bytes the
+    cache kept off the storage link (``bytes_from_cache``), and the fifth
+    the bytes that arrived over peer links (``bytes_from_peer``)."""
     data_root = Path(data_root)
     inputs: Dict[str, np.ndarray] = {}
     in_sums: Dict[str, str] = {}
+    digests = unit.input_digests or {}
+    sizes = unit.input_bytes or {}
     hits = 0
     hit_bytes = 0
+    peer_bytes = 0
     for suffix, rel in unit.inputs.items():
         if cache is not None:
-            arr, digest, hit, nbytes = cache.fetch_array(data_root / rel)
-            hits += bool(hit)
-            hit_bytes += nbytes if hit else 0
+            arr, digest, origin, nbytes = cache.fetch_array(
+                data_root / rel, digest_hint=digests.get(suffix),
+                size_hint=sizes.get(suffix))
+            if origin == "cache":
+                hits += 1
+                hit_bytes += nbytes
+            elif origin == "peer":
+                peer_bytes += nbytes
         else:
             arr, digest = sha256_load_array(data_root / rel)
         in_sums[rel] = digest
         inputs[suffix] = arr
     return (inputs, in_sums,
-            bool(unit.inputs) and hits == len(unit.inputs), hit_bytes)
+            bool(unit.inputs) and hits == len(unit.inputs), hit_bytes,
+            peer_bytes)
 
 
 def safe_load_unit_inputs(unit: WorkUnit, data_root: Path,
@@ -304,10 +321,10 @@ def run_unit(unit: WorkUnit, pipeline: Pipeline, data_root: Path,
         if fault_hook is not None:
             fault_hook(unit, attempt)       # test hook: injected node failures
         if preloaded is not None:
-            inputs, in_sums, cache_hit, hit_bytes = preloaded
+            inputs, in_sums, cache_hit, hit_bytes, peer_bytes = preloaded
         else:
-            inputs, in_sums, cache_hit, hit_bytes = load_unit_inputs(
-                unit, data_root, cache=cache)
+            inputs, in_sums, cache_hit, hit_bytes, peer_bytes = \
+                load_unit_inputs(unit, data_root, cache=cache)
         outputs = pipeline.run(inputs)
         out_sums = {}
         out_dir.mkdir(parents=True, exist_ok=True)
@@ -322,9 +339,12 @@ def run_unit(unit: WorkUnit, pipeline: Pipeline, data_root: Path,
                             out_sums, t0, attempt=attempt, node_id=node_id,
                             lease_epoch=lease_epoch, cache_hit=cache_hit,
                             locality_score=locality_score,
-                            bytes_from_cache=hit_bytes).save(out_dir)
+                            bytes_from_cache=hit_bytes,
+                            peer_fetch=peer_bytes > 0,
+                            bytes_from_peer=peer_bytes).save(out_dir)
         return UnitResult(unit, "ok", time.time() - t0, attempt,
                           bytes_from_cache=hit_bytes,
+                          bytes_from_peer=peer_bytes,
                           locality_score=locality_score)
     except Exception as e:  # noqa: BLE001 — recorded, retried by the runner
         holder = _commit_lock(out_dir)

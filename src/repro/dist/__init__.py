@@ -1,13 +1,15 @@
 """Distribution layer: logical-axis sharding rules, compressed collectives,
 the multi-node work-stealing executor (``cluster`` + ``queue``), its socket
 transport (``rpc``), the per-host content-addressed input cache (``cache``),
-and the shared placement scorer (``placement``) both the queue and the
-campaign planner rank candidates with."""
+the peer-to-peer blob fabric that serves those caches between hosts
+(``blobserve``), and the shared placement scorer (``placement``) both the
+queue and the campaign planner rank candidates with."""
+from .blobserve import BlobServer, PeerFabric, fetch_blob
 from .cache import (DigestSummary, InputCache, cache_from_env,
                     harvest_summary, load_summary_file, save_summary_file,
                     summaries_from_cache_dirs)
 from .cluster import ClusterRunner, ClusterStats, Node, run_worker
-from .placement import best_node, unit_local_bytes
+from .placement import best_node, best_peers, unit_local_bytes
 from .queue import Lease, WorkQueue
 from .sharding import (Rules, attn_shard_choice, constrain, constrain_residual,
                        constrain_params_gathered, current_rules, param_spec_for,
@@ -16,7 +18,8 @@ from .sharding import (Rules, attn_shard_choice, constrain, constrain_residual,
 __all__ = [
     "ClusterRunner", "ClusterStats", "Node", "Lease", "WorkQueue",
     "DigestSummary", "InputCache", "cache_from_env", "QueueClient",
-    "QueueServer", "run_worker", "best_node", "unit_local_bytes",
+    "QueueServer", "BlobServer", "PeerFabric", "fetch_blob", "run_worker",
+    "best_node", "best_peers", "unit_local_bytes",
     "harvest_summary", "load_summary_file", "save_summary_file",
     "summaries_from_cache_dirs",
     "Rules", "attn_shard_choice", "constrain", "constrain_residual",

@@ -32,6 +32,18 @@ Design:
   persists as an append-only JSON-lines journal (O(1) per insert; compacted
   atomically on eviction, torn tail lines skipped on load) so a restarted
   worker re-uses the host's warm cache.
+* **Peer fabric.** With a :class:`~repro.dist.blobserve.PeerFabric`
+  attached, a local miss whose content digest is known from the manifest
+  first asks the coordinator which warm peer already holds that blob and
+  streams it over the node-to-node link instead of the shared-storage choke
+  point — the paper's 0.60 Gb/s storage link becomes a last resort, not the
+  only path. Peer bytes are sha256-re-verified on arrival and every failure
+  (dead peer, timeout, Bloom false positive, digest mismatch) falls back to
+  the storage read, so correctness is never routed through the fabric.
+* **Pinned reads.** Blob reads — local hits and peer serves alike — hold a
+  refcount pin for the duration of the read, and ``_evict_to_budget`` skips
+  pinned blobs (temporarily overshooting the byte budget rather than
+  unlinking a file a concurrent reader has open).
 * **Digest summary.** The cache maintains a :class:`DigestSummary` — a
   counting Bloom filter over the blob sha256s, updated on every insert and
   evict — that serializes to a few KB no matter how many blobs the host
@@ -55,7 +67,9 @@ import json
 import os
 import secrets
 import threading
+import time
 from collections import OrderedDict, deque
+from contextlib import contextmanager
 from pathlib import Path
 from typing import Deque, Dict, List, Optional, Tuple
 
@@ -204,6 +218,17 @@ class InputCache:
         self.evictions = 0
         self.bytes_from_cache = 0     # blob bytes served locally (hits)
         self.bytes_from_storage = 0   # bytes that crossed the storage link
+        self.bytes_from_peer = 0      # bytes that crossed a node-to-node link
+        self.peer_hits = 0            # misses satisfied by a warm peer
+        self.peer_serves = 0          # blob reads served TO peers (blobserve)
+        self.bytes_to_peers = 0
+        self.storage_seconds = 0.0    # wall time on the storage link (misses)
+        self.peer_seconds = 0.0       # wall time on peer links (fetch side)
+        self._peer_bytes_by_addr: Dict[str, int] = {}   # per-link byte meter
+        self._pins: Dict[str, int] = {}     # digest -> open-reader refcount
+        # optional PeerFabric (repro.dist.blobserve): when attached, misses
+        # with a manifest digest hint try warm peers before shared storage
+        self.fabric = None
         # digest summary + op log for locality-aware placement: every blob
         # insert/evict lands in the summary and in a bounded op window that
         # nodes drain as heartbeat-piggybacked deltas (multiple nodes sharing
@@ -288,78 +313,107 @@ class InputCache:
     def _evict_to_budget(self, evicted_out: List[str]) -> bool:
         """Caller holds the lock. Drops LRU entries from the in-memory state
         and appends their digests to ``evicted_out`` — the caller unlinks the
-        files *after* releasing the lock (disk I/O never blocks peers)."""
+        files *after* releasing the lock (disk I/O never blocks peers).
+        Pinned blobs (a concurrent local read or peer serve in flight) are
+        never victims: the cache overshoots its byte budget until the pin is
+        released rather than unlink a file a reader has open."""
         evicted = False
-        while self._blobs and self._total > self.max_bytes:
-            digest, size = self._blobs.popitem(last=False)    # LRU
+        while self._total > self.max_bytes:
+            victim = next((d for d in self._blobs if d not in self._pins),
+                          None)
+            if victim is None:
+                break                # every resident blob is mid-read
+            size = self._blobs.pop(victim)
             self._total -= size
-            evicted_out.append(digest)
+            evicted_out.append(victim)
             self.evictions += 1
-            self._record_op("drop", digest)
+            self._record_op("drop", victim)
             evicted = True
         if evicted:
             live = set(self._blobs)
             self._index = {k: d for k, d in self._index.items() if d in live}
         return evicted
 
-    def fetch_array(self, src: Path) -> Tuple[np.ndarray, str, bool, int]:
-        """Load the .npy at ``src``, serving from the host cache when its
-        bytes are already local. Returns ``(array, sha256, cache_hit,
-        nbytes)`` — the digest is of the file content either way, so
-        provenance input checksums are identical on hit and miss, and
-        ``nbytes`` is the file size the hit kept off (or the miss moved over)
-        the storage link. A miss reads shared storage once and inserts the
-        bytes (then evicts down to ``max_bytes``)."""
-        src = Path(src)
-        key = self._source_key(src)
+    # -- pinned blob reads (local hits and the peer-serving path) ------------
+
+    def pin(self, digest: str) -> bool:
+        """Take a refcount hold on ``digest`` so eviction cannot unlink its
+        file while a read is in flight. ``False`` (no pin taken) when the
+        blob is not resident."""
         with self._lock:
-            digest = self._index.get(key) if key else None
-            blob = self._blob_path(digest) if digest else None
-        if digest is not None:
-            try:
-                data = blob.read_bytes()
-            except OSError:
-                data = None
-            if data is not None and hashlib.sha256(data).hexdigest() == digest:
-                with self._lock:
-                    if digest in self._blobs:
-                        self._blobs.move_to_end(digest)       # LRU touch
-                    self.hits += 1
-                    self.bytes_from_cache += len(data)
-                return (np.load(io.BytesIO(data), allow_pickle=False),
-                        digest, True, len(data))
-            with self._lock:                # corrupt or vanished blob: drop it
-                size = self._blobs.pop(digest, None)
-                if size is not None:
-                    self._total -= size
-                    self._record_op("drop", digest)
-                self._blob_path(digest).unlink(missing_ok=True)
-                self._index = {k: d for k, d in self._index.items()
-                               if d != digest}
-        # miss: one read of shared storage, hash the same bytes, then insert
-        data = src.read_bytes()
-        digest = hashlib.sha256(data).hexdigest()
-        arr = np.load(io.BytesIO(data), allow_pickle=False)
-        if len(data) > self.max_bytes:
-            # an input bigger than the whole budget can never be served
-            # later; inserting it would wipe every warm blob on the host
-            # (and re-wipe on each fetch) for nothing — pass it through
-            with self._lock:
-                self.misses += 1
-                self.bytes_from_storage += len(data)
-            return arr, digest, False, len(data)
+            if digest not in self._blobs:
+                return False
+            self._pins[digest] = self._pins.get(digest, 0) + 1
+            return True
+
+    def unpin(self, digest: str):
+        with self._lock:
+            n = self._pins.get(digest, 0) - 1
+            if n > 0:
+                self._pins[digest] = n
+            else:
+                self._pins.pop(digest, None)
+
+    @contextmanager
+    def hold(self, digest: str):
+        """Context-managed :meth:`pin`; yields whether the hold was taken."""
+        ok = self.pin(digest)
+        try:
+            yield ok
+        finally:
+            if ok:
+                self.unpin(digest)
+
+    def read_blob(self, digest: str) -> Optional[bytes]:
+        """Raw blob bytes for the peer-serving path
+        (:class:`repro.dist.blobserve.BlobServer`), pinned for the duration
+        of the read so :meth:`_evict_to_budget` cannot unlink the file
+        mid-serve. ``None`` when the blob is not resident — the requester's
+        Bloom summary gave a false positive (or the summary is stale) and it
+        falls back to shared storage. The *receiving* side re-verifies the
+        sha256, so this path serves bytes without re-hashing them."""
+        if not self.pin(digest):
+            return None
+        try:
+            data = self._blob_path(digest).read_bytes()
+        except OSError:
+            return None
+        finally:
+            self.unpin(digest)
+        with self._lock:
+            if digest in self._blobs:
+                self._blobs.move_to_end(digest)      # a served blob is warm
+            self.peer_serves += 1
+            self.bytes_to_peers += len(data)
+        return data
+
+    def attach_fabric(self, fabric):
+        """Attach a :class:`repro.dist.blobserve.PeerFabric`; subsequent
+        misses with a manifest digest hint try warm peers before storage.
+        The fabric rides the cache handle, so every call site that already
+        passes ``cache=`` (workflow, cluster, retries that distrust the
+        cache after attempt 1) inherits the peer path with no new plumbing."""
+        self.fabric = fabric
+
+    @staticmethod
+    def _read_storage(src: Path) -> bytes:
+        """The one seam every shared-storage read crosses. Benchmarks
+        monkeypatch this to model the paper's 0.60 Gb/s storage link without
+        faking the peer path; production never overrides it."""
+        return Path(src).read_bytes()
+
+    def _insert_blob(self, digest: str, data: bytes, key: Optional[str]):
+        """Commit ``data`` as blob ``digest``, map ``key`` to it (when
+        given), then evict down to budget. The multi-MB blob write happens
+        OUTSIDE the lock — it must not serialize the other prefetch threads'
+        fetches. Content addressing + atomic rename make a racing duplicate
+        writer idempotent (same bytes, last rename wins)."""
         with self._lock:
             known = digest in self._blobs
         if not known:
-            # the multi-MB blob write happens OUTSIDE the lock — it must not
-            # serialize the other prefetch threads' fetches. Content
-            # addressing + atomic rename make a racing duplicate writer
-            # idempotent (same bytes, last rename wins).
             atomic_write_bytes(self._blob_path(digest), data, fsync=False)
         evict: List[str] = []
         with self._lock:
-            self.misses += 1
-            self.bytes_from_storage += len(data)
             if digest not in self._blobs:
                 self._total += len(data)
                 self._record_op("add", digest)
@@ -373,16 +427,138 @@ class InputCache:
                 self._append_index(key, digest)
         for d in evict:                          # unlinks, after the lock
             self._blob_path(d).unlink(missing_ok=True)
-        return arr, digest, False, len(data)
+
+    def fetch_array(self, src: Path, *, digest_hint: Optional[str] = None,
+                    size_hint: Optional[int] = None,
+                    ) -> Tuple[np.ndarray, str, str, int]:
+        """Load the .npy at ``src``, serving from the host cache when its
+        bytes are already local. Returns ``(array, sha256, origin, nbytes)``
+        where ``origin`` is ``"cache"`` (local blob hit), ``"peer"`` (blob
+        streamed from a warm peer over the fabric) or ``"storage"`` (shared
+        storage read) — the digest is of the file content in every case, so
+        provenance input checksums are identical across origins, and
+        ``nbytes`` is the file size that moved over (or stayed off) each
+        link. On a local miss, a manifest ``digest_hint`` plus an attached
+        fabric tries the warmest peer first; any peer failure falls back to
+        one storage read, after which the bytes are inserted locally (then
+        evicted down to ``max_bytes``). ``size_hint`` (the manifest's byte
+        count) guards the peer path against a source file rewritten since
+        the manifest scan: on size disagreement the fetch goes straight to
+        storage so it observes the current bytes."""
+        src = Path(src)
+        key = self._source_key(src)
+        with self._lock:
+            digest = self._index.get(key) if key else None
+            pinned = False
+            if digest is not None and digest in self._blobs:
+                # pin under the same lock that resolved the index entry, so
+                # eviction cannot unlink the file before read_bytes opens it
+                self._pins[digest] = self._pins.get(digest, 0) + 1
+                pinned = True
+        if digest is not None:
+            try:
+                data = self._blob_path(digest).read_bytes()
+            except OSError:
+                data = None
+            finally:
+                if pinned:
+                    self.unpin(digest)
+            if data is not None and hashlib.sha256(data).hexdigest() == digest:
+                with self._lock:
+                    if digest in self._blobs:
+                        self._blobs.move_to_end(digest)       # LRU touch
+                    self.hits += 1
+                    self.bytes_from_cache += len(data)
+                return (np.load(io.BytesIO(data), allow_pickle=False),
+                        digest, "cache", len(data))
+            with self._lock:                # corrupt or vanished blob: drop it
+                size = self._blobs.pop(digest, None)
+                if size is not None:
+                    self._total -= size
+                    self._record_op("drop", digest)
+                self._blob_path(digest).unlink(missing_ok=True)
+                self._index = {k: d for k, d in self._index.items()
+                               if d != digest}
+        # local miss: try the peer fabric before touching the storage link.
+        # The fabric re-verifies sha256(data) == digest_hint before handing
+        # bytes back, so a lying or corrupted peer degrades to the storage
+        # read below, never to wrong data.
+        st_size: Optional[int] = None
+        try:
+            st_size = os.stat(src).st_size
+        except OSError:
+            pass                 # storage blip: the peer path may still save us
+        fabric = self.fabric
+        if (fabric is not None and digest_hint
+                and (size_hint is None or st_size is None
+                     or st_size == size_hint)):
+            t0 = time.perf_counter()
+            got = fabric.fetch(digest_hint)
+            dt = time.perf_counter() - t0
+            arr = None
+            if got is not None:
+                data, addr = got
+                try:
+                    arr = np.load(io.BytesIO(data), allow_pickle=False)
+                except Exception:        # manifest digest of a non-npy: fall back
+                    arr = None
+            with self._lock:
+                self.peer_seconds += dt
+                if arr is not None:
+                    self.misses += 1     # still a *local* miss
+                    self.peer_hits += 1
+                    self.bytes_from_peer += len(data)
+                    self._peer_bytes_by_addr[addr] = (
+                        self._peer_bytes_by_addr.get(addr, 0) + len(data))
+            if arr is not None:
+                if len(data) <= self.max_bytes:
+                    # map the source key only when the file on storage still
+                    # matches the fetched size — a stale manifest must not
+                    # alias a rewritten source onto old content
+                    self._insert_blob(digest_hint, data,
+                                      key if st_size == len(data) else None)
+                return arr, digest_hint, "peer", len(data)
+        # storage: one read of the shared link, hash the same bytes, insert
+        t0 = time.perf_counter()
+        data = self._read_storage(src)
+        dt = time.perf_counter() - t0
+        digest = hashlib.sha256(data).hexdigest()
+        arr = np.load(io.BytesIO(data), allow_pickle=False)
+        with self._lock:
+            self.misses += 1
+            self.bytes_from_storage += len(data)
+            self.storage_seconds += dt
+        if len(data) > self.max_bytes:
+            # an input bigger than the whole budget can never be served
+            # later; inserting it would wipe every warm blob on the host
+            # (and re-wipe on each fetch) for nothing — pass it through
+            return arr, digest, "storage", len(data)
+        self._insert_blob(digest, data, key)
+        return arr, digest, "storage", len(data)
 
     # -- digest-summary sync (locality-aware placement) ----------------------
 
-    def _stats_locked(self) -> Dict[str, int]:
-        return {"hits": self.hits, "misses": self.misses,
-                "evictions": self.evictions,
-                "bytes": self._total, "blobs": len(self._blobs),
-                "bytes_from_cache": self.bytes_from_cache,
-                "bytes_from_storage": self.bytes_from_storage}
+    def _stats_locked(self) -> Dict[str, object]:
+        st: Dict[str, object] = {
+            "hits": self.hits, "misses": self.misses,
+            "evictions": self.evictions,
+            "bytes": self._total, "blobs": len(self._blobs),
+            "bytes_from_cache": self.bytes_from_cache,
+            "bytes_from_storage": self.bytes_from_storage,
+            "bytes_from_peer": self.bytes_from_peer,
+            "peer_hits": self.peer_hits,
+            "peer_serves": self.peer_serves,
+            "bytes_to_peers": self.bytes_to_peers,
+            "storage_seconds": self.storage_seconds,
+            "peer_seconds": self.peer_seconds,
+            "peer_false_positives": 0,
+            # per-link byte meter: {peer addr -> bytes fetched from it};
+            # travels with the stats so WorkQueue.stats_snapshot can expose
+            # cluster-wide link utilisation (numeric roll-ups skip it)
+            "peer_bytes_by_addr": dict(self._peer_bytes_by_addr)}
+        if self.fabric is not None:
+            st.update(self.fabric.counters())
+        return st
 
     def summary_sync(self) -> Tuple[int, dict]:
         """Full summary push: ``(cursor, wire)`` where the wire carries the
@@ -428,7 +604,7 @@ class InputCache:
         with self._lock:
             return len(self._blobs)
 
-    def stats(self) -> Dict[str, int]:
+    def stats(self) -> Dict[str, object]:
         with self._lock:
             return self._stats_locked()
 

@@ -71,6 +71,7 @@ def result_meta(res: UnitResult) -> dict:
     quality without anyone grepping provenance files."""
     return {"seconds": res.seconds, "attempts": res.attempts,
             "error": res.error, "bytes_from_cache": res.bytes_from_cache,
+            "bytes_from_peer": res.bytes_from_peer,
             "locality_score": res.locality_score}
 
 
@@ -78,6 +79,7 @@ def _meta_result(unit: WorkUnit, m: dict) -> UnitResult:
     return UnitResult(unit, m["status"], m.get("seconds", 0.0),
                       m.get("attempts", 1), m.get("error"),
                       bytes_from_cache=m.get("bytes_from_cache", 0),
+                      bytes_from_peer=m.get("bytes_from_peer", 0),
                       locality_score=m.get("locality_score", 0.0))
 
 
@@ -101,7 +103,8 @@ class Node:
                  hb_interval_s: float = 0.25, poll_s: float = 0.02,
                  die_after: Optional[int] = None,
                  cache: Optional[InputCache] = None, renew: bool = True,
-                 summary_cursor: Optional[int] = None):
+                 summary_cursor: Optional[int] = None,
+                 blob_server=None):
         self.node_id = node_id
         self.queue = queue
         self.pipeline = pipeline
@@ -116,6 +119,12 @@ class Node:
         self.die_after = die_after
         self.cache = cache
         self.renew = renew
+        # the host's BlobServer (peer fabric), when this node owns one: its
+        # lifecycle is tied to the node — kill() stops it, so a simulated
+        # node crash takes the host's serving down with it, exactly like a
+        # real host dying mid-transfer (peers see a connection error and
+        # fall back to shared storage)
+        self.blob_server = blob_server
         # cache op-log position last pushed; a caller that already announced
         # the full summary (run_worker piggybacks it on register) hands the
         # sync cursor in, so the loop doesn't re-send an identical full push
@@ -141,8 +150,20 @@ class Node:
         self._hb.start()
 
     def kill(self):
-        """Crash the node: heartbeat and compute stop, leases go down with it."""
+        """Crash the node: heartbeat and compute stop, leases go down with
+        it — and so does the host's blob server, mid-transfer included."""
         self.killed.set()
+        if self.blob_server is not None:
+            try:
+                self.blob_server.stop()
+            except Exception:  # noqa: BLE001 — a dying node stays dead
+                pass
+        fabric = getattr(self.cache, "fabric", None)
+        if fabric is not None:
+            try:
+                fabric.close()           # pooled peer connections
+            except Exception:  # noqa: BLE001
+                pass
 
     def join(self, timeout: Optional[float] = None):
         self._worker.join(timeout)
@@ -167,6 +188,20 @@ class Node:
                 self._summary_pushed = True
         except RuntimeError:
             pass                           # pre-summary coordinator: blind
+
+    def _announce_fabric(self):
+        """Advertise this host's blob server to the coordinator (a register
+        refresh carrying ``blob_addr``), so locate_blobs can route peers
+        here. Best-effort with the same downgrade discipline as summaries:
+        an old coordinator (TypeError on the param) leaves this host
+        fabric-invisible — it still fetches from peers, never serves."""
+        if self.blob_server is None:
+            return
+        try:
+            self.queue.register(self.node_id,
+                                blob_addr=self.blob_server.advertise)
+        except (TypeError, RuntimeError, ConnectionError):
+            pass                       # pre-fabric coordinator: unadvertised
 
     def _summary_delta(self):
         """Delta wire for the heartbeat piggyback (None when the transport
@@ -219,8 +254,10 @@ class Node:
         inhand: deque = deque()            # [(unit, lease, load_future|None)]
         try:
             # announce this host's warm bytes before asking for work: the
-            # very first grant can then already be locality-aware
+            # very first grant can then already be locality-aware — and its
+            # blob server, so peers can start pulling from it just as early
             self._push_summary()
+            self._announce_fabric()
             while not self.killed.is_set():
                 # top up the leased in-hand window; prefetch primary inputs
                 # (a speculative twin skips prefetch — it must start *now*)
@@ -299,6 +336,9 @@ class ClusterStats:
                                               # (summed over per-node caches)
     locality: Optional[Dict[str, int]] = None  # queue placement counters
     cache_by_node: Optional[Dict[str, Dict[str, int]]] = None
+    fabric: Optional[Dict[str, int]] = None    # locate_blobs routing counters
+    peer_links: Optional[Dict[str, Dict[str, int]]] = None
+    # ^ {fetcher node: {peer addr: bytes}} — who pulled how much from whom
 
 
 class ClusterRunner:
@@ -331,13 +371,17 @@ class ClusterRunner:
                  transport: str = "local", serve_addr: Optional[str] = None,
                  cache_dir: Optional[Path] = None,
                  cache_bytes: Optional[int] = None,
-                 cache_per_node: bool = False,
+                 cache_per_node: bool = False, peer_fabric: bool = False,
                  locality: bool = True, partition: str = "round_robin",
                  plan=None):
         if nodes < 1:
             raise ValueError("need at least one node")
         if transport not in ("local", "rpc"):
             raise ValueError(f"unknown transport {transport!r}")
+        if peer_fabric and not (cache_dir and cache_per_node):
+            # the fabric is a between-hosts construct: it needs one cache
+            # per simulated host to have distinct peers to route between
+            raise ValueError("peer_fabric needs cache_dir + cache_per_node")
         self.pipeline = pipeline
         self.data_root = Path(data_root)
         self.n_nodes = int(nodes)
@@ -360,6 +404,11 @@ class ClusterRunner:
         # simulated in one process, which is what makes locality-aware
         # placement testable and benchmarkable without a real cluster
         self.cache_per_node = cache_per_node
+        # peer_fabric starts one BlobServer per node cache (loopback,
+        # ephemeral ports) and attaches a PeerFabric to each cache, so a
+        # node's local miss streams from whichever sibling already holds
+        # the blob — the multi-host content-delivery tier in one process
+        self.peer_fabric = peer_fabric
         self.locality = locality
         self.partition = partition
         # a CampaignPlan (repro.core.campaign) seeds the queue's per-node
@@ -433,14 +482,29 @@ class ClusterRunner:
         caches = {nid: (self._make_cache(nid) if self.cache_per_node
                         else None) for nid in node_ids}
         shared_cache = None if self.cache_per_node else self._make_cache()
-        nodes = [Node(nid, node_queue(), self.pipeline, self.data_root,
-                      record, prefetch=self.prefetch,
-                      max_retries=self.max_retries, backoff_s=self.backoff_s,
-                      fault_hook=self.fault_hook,
-                      hb_interval_s=self.hb_interval_s, poll_s=self.poll_s,
-                      die_after=self.die_after.get(nid),
-                      cache=caches[nid] or shared_cache)
-                 for nid in node_ids]
+        nodes = []
+        for nid in node_ids:
+            nq = node_queue()
+            cache = caches[nid] or shared_cache
+            blob_server = None
+            if self.peer_fabric:
+                from .blobserve import BlobServer, PeerFabric
+                blob_server = BlobServer(cache).start()
+
+                def locate(digests, _q=nq, _nid=nid):
+                    loc = getattr(_q, "locate_blobs", None)
+                    return loc(digests, node_id=_nid) if loc else {}
+
+                cache.attach_fabric(PeerFabric(
+                    locate, self_addr=blob_server.advertise))
+            nodes.append(Node(
+                nid, nq, self.pipeline, self.data_root,
+                record, prefetch=self.prefetch,
+                max_retries=self.max_retries, backoff_s=self.backoff_s,
+                fault_hook=self.fault_hook,
+                hb_interval_s=self.hb_interval_s, poll_s=self.poll_s,
+                die_after=self.die_after.get(nid),
+                cache=cache, blob_server=blob_server))
         local_ids = set(node_ids)
         speculated: set = set()
         log_cursor = 0
@@ -504,7 +568,8 @@ class ClusterRunner:
             cache_stats: Dict[str, int] = {}
             for st in node_caches.values():
                 for k, v in st.items():
-                    cache_stats[k] = cache_stats.get(k, 0) + v
+                    if isinstance(v, (int, float)):   # skip per-addr maps
+                        cache_stats[k] = cache_stats.get(k, 0) + v
         else:
             cache_stats = None
         qstats = queue.stats_snapshot()
@@ -518,7 +583,11 @@ class ClusterRunner:
             renew_rejections=queue.renew_rejections,
             cache=cache_stats,
             locality=dict(qstats["locality"]),
-            cache_by_node=(node_caches if self.cache_per_node else None))
+            cache_by_node=(node_caches if self.cache_per_node else None),
+            fabric=dict(qstats.get("fabric") or {}) or None,
+            peer_links={nid: dict(st["peer_bytes_by_addr"])
+                        for nid, st in node_caches.items()
+                        if st.get("peer_bytes_by_addr")} or None)
         # fold: exactly one committed-status result per unit; a unit whose
         # only finisher was a twin (primary died mid-flight) promotes it
         pending_extras: List[Tuple[int, UnitResult]] = []
@@ -552,13 +621,23 @@ def run_worker(addr, pipeline, data_root: Path, node_id: str, *,
     coordinator's threads run — against the socket-backed queue, with inputs
     served through this host's content-addressed cache
     (default: built from ``$REPRO_CACHE_DIR`` / ``$REPRO_CACHE_MAX_MB``).
+
+    Peer fabric: with a cache configured, the worker joins the blob fabric
+    as a *fetcher* automatically (local misses try warm peers before shared
+    storage; disable with ``$REPRO_PEER_FETCH=0``), and as a *server* when
+    ``$REPRO_BLOB_ADDR`` names a ``host:port`` to serve cached blobs on —
+    the advertised address rides ``register``, and a coordinator that
+    predates the fabric degrades both halves to plain storage reads.
     Results travel back as ``complete(meta=...)`` payloads; outputs and
     provenance are committed to shared storage exactly as in-process nodes
     commit them, so the coordinator's exactly-one-ok arbitration spans
     processes for free. Returns the number of units this worker recorded.
     A lost coordinator (connection drop) ends the worker quietly: its
     silence is the crash signal the reaper is built around."""
+    import os as _os
     from ..core.pipelines import builtin_pipelines
+    from .blobserve import (BLOB_ADDR_ENV, PEER_FETCH_ENV, BlobServer,
+                            PeerFabric, parse_blob_addr)
     from .rpc import QueueClient
     if isinstance(pipeline, str):
         pipeline = builtin_pipelines()[pipeline]
@@ -566,27 +645,46 @@ def run_worker(addr, pipeline, data_root: Path, node_id: str, *,
         cache = cache_from_env()
     client = QueueClient(addr)
     cursor = summary = None
+    blob_server = None
     if cache is not None:
         cursor, summary = cache.summary_sync()
-    if not client.register(node_id, summary=summary):
-        raise RuntimeError(f"queue at {addr} rejected node id {node_id!r} "
-                           "(reaped earlier? rejoin under a fresh id)")
-
-    def record(idx: int, res: UnitResult, lease: Lease):
-        client.complete(idx, lease.node_id, res.status,
-                        speculative=lease.speculative, meta=result_meta(res))
-
-    node = Node(node_id, client, pipeline, Path(data_root), record,
-                prefetch=prefetch, max_retries=max_retries,
-                backoff_s=backoff_s, hb_interval_s=hb_interval_s,
-                poll_s=poll_s, cache=cache, summary_cursor=cursor)
-    node.start()
+        raw = _os.environ.get(BLOB_ADDR_ENV)
+        if raw:
+            blob_server = BlobServer(cache, *parse_blob_addr(raw)).start()
+        if _os.environ.get(PEER_FETCH_ENV, "1") != "0":
+            cache.attach_fabric(PeerFabric(
+                lambda digests: client.locate_blobs(digests, node_id=node_id),
+                self_addr=blob_server.advertise if blob_server else None))
     try:
-        while node.is_alive():
-            node.join(timeout=poll_s * 4)
-    except KeyboardInterrupt:
-        node.kill()
-        node.join(timeout=5.0)
+        if not client.register(node_id, summary=summary,
+                               blob_addr=(blob_server.advertise
+                                          if blob_server else None)):
+            raise RuntimeError(
+                f"queue at {addr} rejected node id {node_id!r} "
+                "(reaped earlier? rejoin under a fresh id)")
+
+        def record(idx: int, res: UnitResult, lease: Lease):
+            client.complete(idx, lease.node_id, res.status,
+                            speculative=lease.speculative,
+                            meta=result_meta(res))
+
+        node = Node(node_id, client, pipeline, Path(data_root), record,
+                    prefetch=prefetch, max_retries=max_retries,
+                    backoff_s=backoff_s, hb_interval_s=hb_interval_s,
+                    poll_s=poll_s, cache=cache, summary_cursor=cursor,
+                    blob_server=blob_server)
+        blob_server = None               # the node owns its shutdown now
+        node.start()
+        try:
+            while node.is_alive():
+                node.join(timeout=poll_s * 4)
+        except KeyboardInterrupt:
+            node.kill()
+            node.join(timeout=5.0)
+        finally:
+            node.kill()                  # stops the blob server too
+            client.close()
+        return node.processed
     finally:
-        client.close()
-    return node.processed
+        if blob_server is not None:      # register failed before handoff
+            blob_server.stop()

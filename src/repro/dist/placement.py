@@ -26,7 +26,7 @@ production, plain sets in tests).
 """
 from __future__ import annotations
 
-from typing import Mapping, Optional, Sequence
+from typing import List, Mapping, Optional, Sequence
 
 
 def unit_local_bytes(unit, summary) -> int:
@@ -52,3 +52,22 @@ def best_node(unit, candidates: Sequence[str], summaries: Mapping[str, object],
     return min(candidates,
                key=lambda n: (-unit_local_bytes(unit, summaries.get(n)),
                               load.get(n, 0), n))
+
+
+def best_peers(digest: str, candidates: Sequence[str],
+               summaries: Mapping[str, object],
+               load: Optional[Mapping[str, int]] = None,
+               limit: Optional[int] = None) -> List[str]:
+    """Candidates whose summary (probably) holds blob ``digest``, ranked
+    warmest-first for the peer fabric: lightest ``load`` first (a busy
+    node's disk and NIC are the straggler's), then lexicographic node id
+    for determinism. Bloom membership is a *probably* — the fabric treats a
+    peer 404 as a false positive and moves on — so ranking only ever shapes
+    the order in which peers are tried, never correctness. Same scoring
+    household as :func:`best_node`: the queue consumes both, and nothing
+    else in the tree ranks placement."""
+    load = load or {}
+    holders = [n for n in candidates
+               if (s := summaries.get(n)) is not None and len(s) and digest in s]
+    holders.sort(key=lambda n: (load.get(n, 0), n))
+    return holders[:limit] if limit is not None else holders

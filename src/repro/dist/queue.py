@@ -61,7 +61,7 @@ from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 from ..core.query import WorkUnit
 from .cache import SUMMARY_WIRE_VERSION, DigestSummary
-from .placement import best_node, unit_local_bytes
+from .placement import best_node, best_peers, unit_local_bytes
 
 # grant-time scoring looks this deep into a node's own deque for a
 # higher-affinity unit; bounded so next_unit stays O(window · inputs) even
@@ -74,6 +74,13 @@ LOCALITY_SCAN_WINDOW = 16
 # stall heartbeats/renewals long enough for short TTLs to reap live nodes —
 # at that scale, per-unit placement nuance is worth less than lock latency.
 LOCALITY_BULK_SCAN_CAP = 512
+
+# locate_blobs answers at most this many digests per call and ranks at most
+# this many peers per digest — both bound lock time against a hostile or
+# confused client, and three candidates already cover dead-peer + false-
+# positive retry without fanning a thundering herd at one warm host
+LOCATE_DIGEST_CAP = 256
+LOCATE_PEERS_PER_DIGEST = 3
 
 
 @dataclasses.dataclass(frozen=True)
@@ -149,6 +156,15 @@ class WorkQueue:
         # placement counters operators read from stats_snapshot()
         self._summaries: Dict[str, DigestSummary] = {}
         self._cache_stats: Dict[str, Dict[str, int]] = {}
+        # peer-fabric state: blob-server addresses nodes advertised on
+        # register/heartbeat (absence = "don't route peers at me"), plus
+        # routing counters for stats_snapshot()
+        self._blob_addrs: Dict[str, str] = {}
+        self.fabric_stats: Dict[str, int] = {
+            "locates": 0,             # locate_blobs calls answered
+            "located_digests": 0,     # digests answered with >=1 peer
+            "unlocated_digests": 0,   # digests no live peer (probably) holds
+        }
         self._steal_rr = 0                           # round-robin tie cursor
         self.locality_stats: Dict[str, int] = {
             "scored_grants": 0,       # grants where affinity picked the unit
@@ -579,7 +595,7 @@ class WorkQueue:
 
     # -- heartbeats + failure handling --------------------------------------
 
-    def register(self, node_id: str, summary=None) -> bool:
+    def register(self, node_id: str, summary=None, blob_addr=None) -> bool:
         """Join ``node_id`` to the cluster after construction — the network-
         transport path where worker hosts dial in whenever they boot. A new
         node starts with an empty deque and picks up work from the backlog or
@@ -589,7 +605,11 @@ class WorkQueue:
         ``summary`` optionally carries the host cache's full digest summary
         (``InputCache.summary_sync()`` wire), so a worker with a warm cache
         from a previous run is placed locality-aware from its very first
-        grant. Old clients simply omit it — locality-blind, never rejected."""
+        grant. ``blob_addr`` optionally advertises the host's blob server
+        (``host:port``) for the peer fabric; a worker that runs no blob
+        server omits it and :meth:`locate_blobs` never routes peers at it.
+        Old clients simply omit both — locality-blind and fabric-invisible,
+        never rejected."""
         with self._lock:
             if node_id in self._dead:
                 return False
@@ -600,6 +620,8 @@ class WorkQueue:
             self._heartbeats[node_id] = self._now()
             if summary is not None:
                 self._apply_summary_wire(node_id, summary)
+            if blob_addr:
+                self._blob_addrs[node_id] = str(blob_addr)
             return True
 
     def put_summary(self, node_id: str, summary) -> bool:
@@ -612,12 +634,15 @@ class WorkQueue:
         with self._lock:
             return self._apply_summary_wire(node_id, summary)
 
-    def heartbeat(self, node_id: str, summary_delta=None):
+    def heartbeat(self, node_id: str, summary_delta=None, blob_addr=None):
         """Node-level liveness refresh. ``summary_delta`` optionally
         piggybacks the host cache's digest-summary delta since the node's
         last push (``InputCache.summary_delta_since()`` wire: a handful of
         added/dropped digests plus live cache counters) — the few-bytes
-        message that keeps coordinator-side placement scoring current."""
+        message that keeps coordinator-side placement scoring current.
+        ``blob_addr`` re-advertises the host's blob server, so a worker
+        whose register predates the coordinator restart still becomes
+        routable within one heartbeat."""
         with self._lock:
             # unknown ids are dropped (not auto-registered): a reap must never
             # see a heartbeat for a node that has no deque to clean up
@@ -625,6 +650,8 @@ class WorkQueue:
                 self._heartbeats[node_id] = self._now()
                 if summary_delta is not None:
                     self._apply_summary_wire(node_id, summary_delta)
+                if blob_addr:
+                    self._blob_addrs[node_id] = str(blob_addr)
 
     def mark_dead(self, node_id: str):
         """Explicit fail-fast path (e.g. a node's thread crashed)."""
@@ -668,6 +695,7 @@ class WorkQueue:
                         self._retire_meta(idx, pend)
         self._spec_queues[node_id].clear()
         self._summaries.pop(node_id, None)   # dead cache scores nothing
+        self._blob_addrs.pop(node_id, None)  # and serves no peers
         # unleased entries still sitting in its deque
         orphans.extend(i for i in self._queues[node_id] if i not in self._done)
         self._queues[node_id].clear()
@@ -745,6 +773,12 @@ class WorkQueue:
                         totals[k] = totals.get(k, 0) + v
             hits = totals.get("hits", 0)
             lookups = hits + totals.get("misses", 0)
+            # per-link byte meter: {fetcher: {peer addr: bytes}} as last
+            # piggybacked on heartbeats — who pulled how much from whom
+            peer_links = {n: dict(st["peer_bytes_by_addr"])
+                          for n, st in self._cache_stats.items()
+                          if isinstance(st.get("peer_bytes_by_addr"), dict)
+                          and st["peer_bytes_by_addr"]}
             return {"steals": dict(self.steals),
                     "requeues": list(self.requeues),
                     "renew_rejections": self.renew_rejections,
@@ -753,7 +787,45 @@ class WorkQueue:
                     "cache": {n: dict(st)
                               for n, st in self._cache_stats.items()},
                     "cache_totals": totals,
-                    "cache_hit_rate": (hits / lookups) if lookups else 0.0}
+                    "cache_hit_rate": (hits / lookups) if lookups else 0.0,
+                    "fabric": dict(self.fabric_stats),
+                    "fabric_nodes": sorted(self._blob_addrs),
+                    "peer_links": peer_links}
+
+    def locate_blobs(self, digests: Sequence[str],
+                     node_id: Optional[str] = None) -> Dict[str, List[str]]:
+        """Peer candidates for content-addressed blobs: ``{digest: [blob
+        server addr, ...]}`` ranked warmest-first
+        (:func:`~repro.dist.placement.best_peers` over the digest summaries
+        this coordinator already holds). Only alive nodes that advertised a
+        blob server are candidates, and the requester (``node_id``) never
+        gets itself back. Membership is Bloom-probabilistic — a candidate
+        may 404, the fetcher falls back — and digests no live peer holds
+        are simply absent from the answer, so an empty dict is the honest
+        "go read shared storage". Bounded (``LOCATE_DIGEST_CAP`` digests,
+        ``LOCATE_PEERS_PER_DIGEST`` peers each) to keep lock time flat."""
+        with self._lock:
+            self.fabric_stats["locates"] += 1
+            out: Dict[str, List[str]] = {}
+            cand = [n for n in self._queues
+                    if n not in self._dead and n != node_id
+                    and n in self._blob_addrs]
+            if not cand:
+                self.fabric_stats["unlocated_digests"] += min(
+                    len(digests), LOCATE_DIGEST_CAP)
+                return out
+            load = {n: len(q) for n, q in self._queues.items()}
+            for digest in list(digests)[:LOCATE_DIGEST_CAP]:
+                if not isinstance(digest, str):
+                    continue
+                holders = best_peers(digest, cand, self._summaries, load,
+                                     limit=LOCATE_PEERS_PER_DIGEST)
+                if holders:
+                    out[digest] = [self._blob_addrs[n] for n in holders]
+                    self.fabric_stats["located_digests"] += 1
+                else:
+                    self.fabric_stats["unlocated_digests"] += 1
+            return out
 
     def summaries_snapshot(self) -> Dict[str, dict]:
         """Per-alive-node cache digest summaries as versioned full wires

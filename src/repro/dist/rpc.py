@@ -58,7 +58,7 @@ _METHODS = frozenset({
     "reap", "speculate", "renew", "register", "running", "finished",
     "pending", "alive_nodes", "done_status", "queue_depths", "active_leases",
     "results_snapshot", "stats_snapshot", "primary_log", "put_summary",
-    "summaries_snapshot",
+    "summaries_snapshot", "locate_blobs",
 })
 
 
@@ -234,6 +234,10 @@ class QueueClient:
         # the first such rejection this client stops sending summaries and
         # the run proceeds locality-blind (the pre-summary behaviour)
         self._summaries_ok = True
+        # same discipline for the peer fabric's blob_addr advertisement: an
+        # old coordinator rejects it once, then we stop advertising (the
+        # worker still serves blobs; nobody is told, nobody dials in)
+        self._fabric_ok = True
         self._sock = socket.create_connection(addr, timeout=timeout_s)
         self._file = self._sock.makefile("rb")
 
@@ -313,16 +317,28 @@ class QueueClient:
     def mark_started(self, idx: int):
         self._call("mark_started", idx=idx)
 
-    def heartbeat(self, node_id: str, summary_delta=None):
+    def heartbeat(self, node_id: str, summary_delta=None, blob_addr=None):
+        params: Dict[str, Any] = {"node_id": node_id}
         if summary_delta is not None and self._summaries_ok:
+            params["summary_delta"] = summary_delta
+        if blob_addr and self._fabric_ok:
+            params["blob_addr"] = blob_addr
+        while True:
             try:
-                self._call("heartbeat", node_id=node_id,
-                           summary_delta=summary_delta)
+                self._call("heartbeat", **params)
                 return
             except RuntimeError as e:
-                if not self._downgrade_on_type_error(e):
-                    raise
-        self._call("heartbeat", node_id=node_id)
+                # shed new-protocol params one generation at a time: a
+                # coordinator that rejects blob_addr may still speak
+                # summaries, so don't throw both away on one TypeError
+                if "blob_addr" in params and "TypeError" in str(e):
+                    self._fabric_ok = False
+                    params.pop("blob_addr")
+                    continue
+                if "summary_delta" in params and self._downgrade_on_type_error(e):
+                    params.pop("summary_delta")
+                    continue
+                raise
 
     def mark_dead(self, node_id: str):
         self._call("mark_dead", node_id=node_id)
@@ -344,14 +360,24 @@ class QueueClient:
                     raise
         return self._call("renew", idx=idx, node_id=node_id, epoch=epoch)
 
-    def register(self, node_id: str, summary=None) -> bool:
+    def register(self, node_id: str, summary=None, blob_addr=None) -> bool:
+        params: Dict[str, Any] = {"node_id": node_id}
         if summary is not None and self._summaries_ok:
+            params["summary"] = summary
+        if blob_addr and self._fabric_ok:
+            params["blob_addr"] = blob_addr
+        while True:
             try:
-                return self._call("register", node_id=node_id, summary=summary)
+                return self._call("register", **params)
             except RuntimeError as e:
-                if not self._downgrade_on_type_error(e):
-                    raise
-        return self._call("register", node_id=node_id)
+                if "blob_addr" in params and "TypeError" in str(e):
+                    self._fabric_ok = False
+                    params.pop("blob_addr")
+                    continue
+                if "summary" in params and self._downgrade_on_type_error(e):
+                    params.pop("summary")
+                    continue
+                raise
 
     def put_summary(self, node_id: str, summary) -> bool:
         """Push a full cache digest summary; False (never an error) against
@@ -409,6 +435,22 @@ class QueueClient:
                 return {}
             raise
 
+    def locate_blobs(self, digests, node_id=None):
+        """Peer candidates for content-addressed blobs (the fabric's routing
+        question); ``{}`` (never an error) against a coordinator that
+        predates the peer fabric — the fetcher then reads shared storage,
+        exactly the pre-fabric behaviour."""
+        if not self._fabric_ok:
+            return {}
+        try:
+            return self._call("locate_blobs", digests=list(digests),
+                              node_id=node_id)
+        except RuntimeError as e:
+            if "unknown method" in str(e):
+                self._fabric_ok = False
+                return {}
+            raise
+
     # the in-process queue exposes these as attributes; mirror them so
     # observability code works against either implementation
     @property
@@ -452,6 +494,9 @@ def _main():
                     help="host input cache (or $REPRO_CACHE_DIR)")
     wk.add_argument("--cache-mb", type=float, default=None,
                     help="cache budget in MiB (or $REPRO_CACHE_MAX_MB)")
+    wk.add_argument("--blob-addr", default=None,
+                    help="host:port to serve cached blobs to peers on "
+                         "(or $REPRO_BLOB_ADDR); needs --cache-dir")
     args = ap.parse_args()
 
     if args.cmd == "serve":
@@ -488,6 +533,8 @@ def _main():
         os.environ["REPRO_CACHE_DIR"] = args.cache_dir
     if args.cache_mb is not None:
         os.environ["REPRO_CACHE_MAX_MB"] = str(args.cache_mb)
+    if args.blob_addr:
+        os.environ["REPRO_BLOB_ADDR"] = args.blob_addr
     try:
         processed = run_worker(parse_addr(args.addr), args.pipeline,
                                Path(args.data_root), node_id,

@@ -16,7 +16,8 @@ def check_cluster_invariant(n_subjects: int, sessions: int, nodes: int,
                             flaky: bool, die: int, *,
                             transport: str = "local", cache: bool = False,
                             harass_renew: bool = False,
-                            harass_locality: bool = False):
+                            harass_locality: bool = False,
+                            harass_peers: bool = False):
     """For the given unit list / node count / injected failures: every unit
     must end with exactly one committed ok provenance, and a concurrent
     reader must never observe a partial output file or torn provenance.
@@ -30,7 +31,17 @@ def check_cluster_invariant(n_subjects: int, sessions: int, nodes: int,
     caches while a thread floods the queue with hostile digest summaries —
     wrong versions, garbage wires, random digests, ghost and dead node ids.
     Summaries only ever shape placement *scores*, so no summary content may
-    break retirement, ok-counts, or commit atomicity."""
+    break retirement, ok-counts, or commit atomicity.
+    ``harass_peers=True`` runs the peer blob fabric (per-node caches +
+    BlobServers) under hostile conditions: ghost nodes advertising dead
+    blob addresses with claim-everything summaries (guaranteed routing at
+    unreachable peers), blob bodies corrupted on disk mid-run (digest
+    mismatch on serve, verified-miss on local hit), summaries flooded with
+    false-positive digests (peer 404s), and — via ``die``+``nodes>1`` —
+    serving nodes killed mid-run. Every peer-path failure must fall back to
+    shared storage: exactly one ok provenance per unit, and the committed
+    input digests byte-identical to the manifest regardless of which link
+    the bytes crossed."""
     from repro.core import (Provenance, builtin_pipelines,
                             query_available_work, synthesize_dataset)
     from repro.dist import ClusterRunner
@@ -68,13 +79,15 @@ def check_cluster_invariant(n_subjects: int, sessions: int, nodes: int,
         die_after = {f"node-{die % nodes}": 1} if nodes > 1 else {}
         w = threading.Thread(target=watcher, daemon=True)
         w.start()
-        use_cache = cache or harass_locality
+        use_cache = cache or harass_locality or harass_peers
+        cache_root = Path(td) / "host-cache"
         runner = ClusterRunner(
             pipe, ds.root, nodes=nodes, fault_hook=fault, die_after=die_after,
             lease_ttl_s=0.4, hb_interval_s=0.1, straggler_factor=100.0,
             poll_s=0.02, transport=transport,
-            cache_dir=(Path(td) / "host-cache") if use_cache else None,
-            cache_per_node=harass_locality,
+            cache_dir=cache_root if use_cache else None,
+            cache_per_node=harass_locality or harass_peers,
+            peer_fabric=harass_peers,
             partition="backlog" if harass_locality else "round_robin")
 
         wrongly_renewed = []
@@ -130,11 +143,50 @@ def check_cluster_invariant(n_subjects: int, sessions: int, nodes: int,
                             summary_delta={"v": 1, "add": [f"x{i % 5}"],
                                            "drop": []})
 
+        def peer_harasser():
+            # hostile peer-fabric traffic, every flavour of lying peer:
+            # ghosts advertising unreachable blob addrs with a summary whose
+            # every Bloom cell is hot (claims ALL digests -> locate routes
+            # fetches at a dead address -> connection error -> storage
+            # fallback); real summaries flooded with bogus digests (404s /
+            # false positives); and blob bodies corrupted on disk mid-run
+            # (digest mismatch when served to a peer, verified-miss when hit
+            # locally). None of it may disturb retirement or output bytes.
+            claims_everything = {"v": 1, "full": {
+                "m": 8, "k": 2, "n": 4, "nz": [[i, 9] for i in range(8)]}}
+            for i in itertools.count():
+                if stop.is_set():
+                    return
+                q = runner.queue
+                if q is None:
+                    continue
+                if i % 3 == 0:
+                    # ghost peer at a port nothing listens on; it never
+                    # heartbeats again, so the reaper collects it in one ttl
+                    q.register(f"liar-{i % 4}", summary=claims_everything,
+                               blob_addr=f"127.0.0.1:{1 + i % 3}")
+                elif i % 3 == 1:
+                    q.put_summary(f"node-{i % nodes}", {
+                        "v": 1, "add": [f"bogus-{i % 11}"], "drop": [],
+                        "stats": {}})
+                else:
+                    for blob in (list(cache_root.rglob("blobs/*"))
+                                 if cache_root.exists() else [])[:2]:
+                        if blob.name.startswith("."):
+                            continue           # in-flight atomic-write tmps
+                        try:
+                            blob.write_bytes(b"corrupted mid-run")
+                        except OSError:
+                            pass               # evicted under us: fine
+
         threads = []
         if harass_renew:
             threads.append(threading.Thread(target=harasser, daemon=True))
         if harass_locality:
             threads.append(threading.Thread(target=locality_harasser,
+                                            daemon=True))
+        if harass_peers:
+            threads.append(threading.Thread(target=peer_harasser,
                                             daemon=True))
         for t in threads:
             t.start()
@@ -155,4 +207,17 @@ def check_cluster_invariant(n_subjects: int, sessions: int, nodes: int,
             prov = Provenance.load(Path(u.out_dir))
             assert prov is not None and prov.status == "ok"
             assert prov.pipeline_digest == pipe.digest()
+            if use_cache:
+                # committed input digests are byte-identical to the manifest
+                # no matter which link (cache / peer / storage) served them
+                for suffix, rel in u.inputs.items():
+                    want = (u.input_digests or {}).get(suffix)
+                    if want:
+                        assert prov.inputs[rel] == want
         assert not list(deriv.rglob("*.tmp-*"))      # all commits atomic
+        if harass_peers:
+            # fallbacks must be visible, not silent: the harasser guaranteed
+            # peer failures, yet every unit ended ok — so the storage path
+            # carried real bytes and the routing counters were exercised
+            assert runner.stats.fabric is not None
+            assert (runner.stats.cache or {}).get("bytes_from_storage", 0) > 0

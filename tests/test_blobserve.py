@@ -1,0 +1,419 @@
+"""Peer-to-peer blob fabric: server wire format, pinned serving, receiver
+re-verification, coordinator routing (locate_blobs/best_peers), every
+failure mode's fallback to shared storage, and the end-to-end ClusterRunner
+``peer_fabric`` path."""
+import hashlib
+import io
+import json
+import socket
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import builtin_pipelines, query_available_work, synthesize_dataset
+from repro.core.provenance import Provenance
+from repro.core.workflow import load_unit_inputs
+from repro.dist import (BlobServer, ClusterRunner, DigestSummary, InputCache,
+                        PeerFabric, WorkQueue, best_peers, fetch_blob)
+from repro.dist.blobserve import BlobNotFound, advertised_addr, parse_blob_addr
+
+
+@pytest.fixture(scope="module")
+def dataset(tmp_path_factory):
+    return synthesize_dataset(tmp_path_factory.mktemp("ds"), "blobfab",
+                              n_subjects=3, sessions_per_subject=2,
+                              shape=(6, 6, 6), seed=11)
+
+
+def _work(dataset):
+    pipe = builtin_pipelines()["bias_correct"]
+    units, _ = query_available_work(dataset, pipe)
+    return pipe, units
+
+
+def _npy_bytes(arr) -> bytes:
+    buf = io.BytesIO()
+    np.save(buf, arr)
+    return buf.getvalue()
+
+
+def _seed_blob(cache: InputCache, data: bytes) -> str:
+    digest = hashlib.sha256(data).hexdigest()
+    cache._insert_blob(digest, data, None)
+    return digest
+
+
+# ---------------------------------------------------------------------------
+# wire format + server basics
+# ---------------------------------------------------------------------------
+
+def test_blob_server_roundtrip_and_404(tmp_path):
+    cache = InputCache(tmp_path / "c")
+    data = _npy_bytes(np.arange(64, dtype=np.float32))
+    digest = _seed_blob(cache, data)
+    with BlobServer(cache) as srv:
+        assert fetch_blob(srv.addr_str, digest) == data
+        with pytest.raises(BlobNotFound):
+            fetch_blob(srv.addr_str, "0" * 64)     # Bloom false positive path
+    st = cache.stats()
+    assert st["peer_serves"] == 1
+    assert st["bytes_to_peers"] == len(data)
+
+
+def test_blob_wire_is_json_header_plus_raw_body(tmp_path):
+    """The framing contract docs/cluster.md documents: one JSON line, then
+    exactly ``size`` raw bytes — blob bodies never pass through json."""
+    cache = InputCache(tmp_path / "c")
+    data = _npy_bytes(np.ones(32, dtype=np.float64))
+    digest = _seed_blob(cache, data)
+    with BlobServer(cache) as srv:
+        with socket.create_connection(srv.address) as sock:
+            f = sock.makefile("rb")
+            sock.sendall(json.dumps({"id": 7, "method": "get",
+                                     "digest": digest}).encode() + b"\n")
+            head = json.loads(f.readline())
+            assert head == {"id": 7, "ok": True, "size": len(data)}
+            assert f.read(len(data)) == data
+            # connection stays usable: a second request on the same socket
+            sock.sendall(json.dumps({"id": 8, "method": "get",
+                                     "digest": "nope"}).encode() + b"\n")
+            head2 = json.loads(f.readline())
+            assert head2["ok"] is False and "not found" in head2["error"]
+
+
+def test_blob_server_rejects_unknown_method_and_garbage(tmp_path):
+    cache = InputCache(tmp_path / "c")
+    with BlobServer(cache) as srv:
+        with socket.create_connection(srv.address) as sock:
+            f = sock.makefile("rb")
+            sock.sendall(b'{"id": 1, "method": "evil"}\n')
+            assert json.loads(f.readline())["ok"] is False
+            sock.sendall(b"not json at all\n")
+            assert json.loads(f.readline())["ok"] is False
+
+
+def test_parse_and_advertised_addr():
+    assert parse_blob_addr("host:9") == ("host", 9)
+    assert parse_blob_addr(":9") == ("0.0.0.0", 9)
+    assert advertised_addr(("10.0.0.2", 7)) == "10.0.0.2:7"
+    host = advertised_addr(("0.0.0.0", 7))
+    assert host.endswith(":7") and not host.startswith("0.0.0.0")
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: pin/refcount vs eviction
+# ---------------------------------------------------------------------------
+
+def test_eviction_never_unlinks_pinned_blob(tmp_path):
+    """Regression: a blob held open by a slow reader (local fetch or peer
+    serve) must survive eviction pressure — the cache overshoots its budget
+    instead of unlinking a file mid-read."""
+    data = _npy_bytes(np.zeros(256, dtype=np.float64))
+    size = len(data)
+    cache = InputCache(tmp_path / "c", max_bytes=int(size * 1.5))
+    pinned = _seed_blob(cache, data)
+    with cache.hold(pinned) as ok:
+        assert ok
+        # churn: eviction drops the *unpinned* newcomers, never the pinned LRU
+        for i in range(4):
+            _seed_blob(cache, _npy_bytes(np.full(256, i + 1, np.float64)))
+            assert (cache.blob_dir / pinned).exists()
+            assert cache.total_bytes() <= cache.max_bytes
+        assert cache.read_blob(pinned) == data   # still byte-identical
+        # when every resident blob is pinned, eviction overshoots the byte
+        # budget instead of unlinking a file a reader has open
+        cache.max_bytes = size // 2
+        _seed_blob(cache, _npy_bytes(np.full(256, 77, np.float64)))
+        assert (cache.blob_dir / pinned).exists()
+        assert cache.total_bytes() > cache.max_bytes   # overshoot, by design
+    # pin released: the next insert finally evicts it back under budget
+    cache.max_bytes = int(size * 1.5)
+    _seed_blob(cache, _npy_bytes(np.full(256, 99, np.float64)))
+    assert cache.total_bytes() <= cache.max_bytes
+    assert not (cache.blob_dir / pinned).exists()
+
+
+def test_eviction_racing_slow_reader_thread(tmp_path):
+    """The concurrent shape of the regression: a reader thread that pins,
+    then dawdles mid-read while eviction churns, always gets whole bytes."""
+    data = _npy_bytes(np.arange(512, dtype=np.float64))
+    cache = InputCache(tmp_path / "c", max_bytes=int(len(data) * 1.5))
+    digest = _seed_blob(cache, data)
+    got, errors = [], []
+
+    def slow_reader():
+        try:
+            with cache.hold(digest) as ok:
+                assert ok
+                time.sleep(0.05)                 # dawdle while evictions run
+                got.append((cache.blob_dir / digest).read_bytes())
+        except Exception as e:  # noqa: BLE001 — collected, not asserted here
+            errors.append(repr(e))
+
+    t = threading.Thread(target=slow_reader)
+    t.start()
+    deadline = time.time() + 2.0
+    while t.is_alive() and time.time() < deadline:
+        _seed_blob(cache, _npy_bytes(np.random.default_rng(
+            int(time.time() * 1e6) % 2**32).normal(size=256)))
+    t.join(timeout=5)
+    assert errors == []
+    assert got == [data]
+
+
+def test_unpin_without_pin_is_harmless(tmp_path):
+    cache = InputCache(tmp_path / "c")
+    cache.unpin("never-pinned")
+    with cache.hold("absent-digest") as ok:
+        assert not ok
+
+
+# ---------------------------------------------------------------------------
+# placement.best_peers + WorkQueue.locate_blobs routing
+# ---------------------------------------------------------------------------
+
+def test_best_peers_ranks_holders_by_load_then_name():
+    summaries = {"a": {"d1"}, "b": {"d1", "d2"}, "c": {"d2"}}
+    assert best_peers("d1", ["a", "b", "c"], summaries) == ["a", "b"]
+    assert best_peers("d1", ["a", "b"], summaries, load={"a": 5}) == ["b", "a"]
+    assert best_peers("d1", ["a", "b"], summaries, limit=1) == ["a"]
+    assert best_peers("dX", ["a", "b", "c"], summaries) == []
+    assert best_peers("d1", ["a"], {"a": None}) == []
+
+
+def _mini_units(dataset):
+    _, units = _work(dataset)
+    return units
+
+
+def test_locate_blobs_routes_only_advertised_alive_non_self(dataset):
+    units = _mini_units(dataset)
+    q = WorkQueue(units, ["a", "b", "c"], lease_ttl_s=30.0)
+    s = DigestSummary()
+    s.add("deadbeef")
+    q.register("a", summary={"v": 1, "full": s.to_wire()}, blob_addr="ha:1")
+    q.register("b", summary={"v": 1, "full": s.to_wire()})   # no blob server
+    q.register("c", blob_addr="hc:3")                        # no summary
+    # only "a" both holds the digest and serves blobs
+    assert q.locate_blobs(["deadbeef"]) == {"deadbeef": ["ha:1"]}
+    # the requester never gets itself back
+    assert q.locate_blobs(["deadbeef"], node_id="a") == {}
+    # unknown digests are simply absent
+    assert q.locate_blobs(["deadbeef", "bogus"])["deadbeef"] == ["ha:1"]
+    st = q.stats_snapshot()
+    assert st["fabric_nodes"] == ["a", "c"]
+    assert st["fabric"]["locates"] == 3
+    assert st["fabric"]["unlocated_digests"] >= 2
+    # a dead node stops being a candidate immediately
+    q.mark_dead("a")
+    assert q.locate_blobs(["deadbeef"]) == {}
+    assert q.stats_snapshot()["fabric_nodes"] == ["c"]
+
+
+def test_locate_blobs_heartbeat_advertisement(dataset):
+    units = _mini_units(dataset)
+    q = WorkQueue(units, ["a", "b"], lease_ttl_s=30.0)
+    s = DigestSummary()
+    s.add("cafe")
+    q.put_summary("a", {"v": 1, "full": s.to_wire()})
+    assert q.locate_blobs(["cafe"], node_id="b") == {}       # not advertised
+    q.heartbeat("a", blob_addr="ha:9")                       # late advert
+    assert q.locate_blobs(["cafe"], node_id="b") == {"cafe": ["ha:9"]}
+
+
+# ---------------------------------------------------------------------------
+# PeerFabric: success + every failure mode falls back (returns None)
+# ---------------------------------------------------------------------------
+
+def test_fabric_fetch_verifies_and_falls_back(tmp_path):
+    cache = InputCache(tmp_path / "serve")
+    data = _npy_bytes(np.arange(16, dtype=np.float32))
+    digest = _seed_blob(cache, data)
+    with BlobServer(cache) as srv:
+        # success: ranked candidates, first is dead, second works
+        fab = PeerFabric(lambda ds: {digest: ["127.0.0.1:1", srv.addr_str]},
+                         timeout_s=2.0)
+        assert fab.fetch(digest) == (data, srv.addr_str)
+        assert fab.counters()["peer_dead"] == 1
+        # false positive: peer 404s
+        fab2 = PeerFabric(lambda ds: {d: [srv.addr_str] for d in ds})
+        assert fab2.fetch("f" * 64) is None
+        assert fab2.counters()["peer_false_positives"] == 1
+        # digest mismatch: peer serves bytes that hash to something else
+        # (blob stored under a name its content doesn't hash to — the shape
+        # a corrupted body or lying peer presents on the wire)
+        fab3 = PeerFabric(lambda ds: {d: [srv.addr_str] for d in ds},
+                          timeout_s=2.0)
+        wrong = hashlib.sha256(b"other").hexdigest()
+        cache._insert_blob(wrong, data, None)
+        assert fab3.fetch(wrong) is None
+        assert fab3.counters()["peer_digest_mismatches"] == 1
+        # self-exclusion: own addr is never dialed
+        fab4 = PeerFabric(lambda ds: {d: [srv.addr_str] for d in ds},
+                          self_addr=srv.addr_str)
+        assert fab4.fetch(digest) is None
+
+
+def test_fabric_disables_itself_on_unknown_method():
+    calls = []
+
+    def locate(ds):
+        calls.append(ds)
+        raise RuntimeError("queue rpc locate_blobs: unknown method")
+
+    fab = PeerFabric(locate)
+    assert fab.fetch("d1") is None
+    assert fab.fetch("d2") is None               # no second locate attempt
+    assert calls == [["d1"]]
+
+
+def test_fabric_counts_locate_failures():
+    def locate(ds):
+        raise ConnectionError("coordinator gone")
+
+    fab = PeerFabric(locate)
+    assert fab.fetch("d1") is None
+    assert fab.counters()["peer_locate_failures"] == 1
+
+
+# ---------------------------------------------------------------------------
+# cache + fabric integration: fetch_array origins, counters, freshness guard
+# ---------------------------------------------------------------------------
+
+def _two_caches_one_warm(tmp_path, src_arr):
+    warm = InputCache(tmp_path / "warm")
+    cold = InputCache(tmp_path / "cold")
+    src = tmp_path / "input.npy"
+    np.save(src, src_arr)
+    _, digest, origin, _ = warm.fetch_array(src)
+    assert origin == "storage"
+    return warm, cold, src, digest
+
+
+def test_fetch_array_peer_origin_and_counters(tmp_path):
+    arr = np.arange(128, dtype=np.float64)
+    warm, cold, src, digest = _two_caches_one_warm(tmp_path, arr)
+    with BlobServer(warm) as srv:
+        cold.attach_fabric(PeerFabric(
+            lambda ds: {d: [srv.addr_str] for d in ds}))
+        got, d2, origin, nbytes = cold.fetch_array(
+            src, digest_hint=digest, size_hint=src.stat().st_size)
+        assert origin == "peer" and d2 == digest
+        assert np.array_equal(got, arr)
+        st = cold.stats()
+        assert st["peer_hits"] == 1 and st["bytes_from_peer"] == nbytes
+        assert st["bytes_from_storage"] == 0
+        assert st["peer_bytes_by_addr"] == {srv.addr_str: nbytes}
+        assert warm.stats()["peer_serves"] == 1
+        # the peer-fetched blob is now local: next fetch is a plain hit
+        assert cold.fetch_array(src, digest_hint=digest)[2] == "cache"
+        # provenance digests identical across origins
+        assert warm.fetch_array(src)[1] == digest
+
+
+def test_fetch_array_falls_back_to_storage_on_dead_peer(tmp_path):
+    arr = np.arange(64, dtype=np.float32)
+    _, cold, src, digest = _two_caches_one_warm(tmp_path, arr)
+    cold.attach_fabric(PeerFabric(
+        lambda ds: {d: ["127.0.0.1:1"] for d in ds}, timeout_s=1.0))
+    got, d2, origin, _ = cold.fetch_array(src, digest_hint=digest)
+    assert origin == "storage" and d2 == digest
+    assert np.array_equal(got, arr)
+    st = cold.stats()
+    assert st["peer_dead"] == 1 and st["bytes_from_storage"] > 0
+
+
+def test_fetch_array_skips_peer_when_source_size_changed(tmp_path):
+    """A source rewritten since the manifest scan must be read from storage
+    (current bytes), not fetched content-addressed from a peer (old bytes)."""
+    arr = np.arange(32, dtype=np.float64)
+    warm, cold, src, digest = _two_caches_one_warm(tmp_path, arr)
+    stale_size = src.stat().st_size
+    np.save(src, np.arange(48, dtype=np.float64))     # rewritten: new size
+    with BlobServer(warm) as srv:
+        dialed = []
+
+        def locate(ds):
+            dialed.append(ds)
+            return {d: [srv.addr_str] for d in ds}
+
+        cold.attach_fabric(PeerFabric(locate))
+        got, d2, origin, _ = cold.fetch_array(src, digest_hint=digest,
+                                              size_hint=stale_size)
+        assert origin == "storage"
+        assert dialed == []                           # peer path never tried
+        assert d2 != digest                           # current content digest
+
+
+def test_load_unit_inputs_stamps_peer_bytes(dataset, tmp_path):
+    pipe, units = _work(dataset)
+    warm = InputCache(tmp_path / "warm")
+    load_unit_inputs(units[0], dataset.root, cache=warm)
+    cold = InputCache(tmp_path / "cold")
+    with BlobServer(warm) as srv:
+        cold.attach_fabric(PeerFabric(
+            lambda ds: {d: [srv.addr_str] for d in ds}))
+        inputs, sums, cache_hit, hit_bytes, peer_bytes = load_unit_inputs(
+            units[0], dataset.root, cache=cold)
+        assert cache_hit is False and hit_bytes == 0
+        assert peer_bytes > 0
+        assert cold.stats()["bytes_from_storage"] == 0
+        # digests identical to a cache-less verify-load
+        ref_inputs, ref_sums = {}, {}
+        _, ref_sums, *_ = load_unit_inputs(units[0], dataset.root)
+        assert sums == ref_sums
+
+
+# ---------------------------------------------------------------------------
+# end to end: ClusterRunner(peer_fabric=True)
+# ---------------------------------------------------------------------------
+
+def test_cluster_peer_fabric_end_to_end(dataset, tmp_path):
+    """Warm one node's cache, then rerun cold siblings with the fabric on:
+    units must complete ok with peer_fetch stamped in provenance, peer bytes
+    in the stats, and strictly fewer storage bytes than the cold total."""
+    pipe, units = _work(dataset)
+    cache_root = tmp_path / "hostcaches"
+    # pass 1: single node — everything lands in node-0's cache
+    r1 = ClusterRunner(pipe, dataset.root, nodes=1, lease_ttl_s=10.0,
+                       cache_dir=cache_root, cache_per_node=True,
+                       peer_fabric=True)
+    res1 = r1.run(units)
+    assert all(r.status == "ok" for r in res1)
+    cold_storage = r1.stats.cache["bytes_from_storage"]
+    assert cold_storage > 0
+    # wipe outputs so pass 2 recomputes (inputs stay put)
+    import shutil
+    shutil.rmtree(Path(dataset.root) / "derivatives")
+    # pass 2: 3 nodes; node-0 warm, node-1/2 cold but fabric-connected
+    r2 = ClusterRunner(pipe, dataset.root, nodes=3, lease_ttl_s=10.0,
+                       cache_dir=cache_root, cache_per_node=True,
+                       peer_fabric=True, partition="round_robin")
+    res2 = r2.run(units)
+    assert sum(r.status == "ok" for r in res2) == len(units)
+    totals = r2.stats.cache
+    assert totals["bytes_from_peer"] > 0
+    assert totals["peer_hits"] > 0
+    assert totals["bytes_from_storage"] < cold_storage
+    assert r2.stats.peer_links                       # per-link meter populated
+    assert r2.stats.fabric["locates"] > 0
+    # provenance: at least one committed record stamps peer_fetch, and every
+    # record's input digests match the manifest regardless of origin
+    peer_stamped = 0
+    for u in units:
+        prov = Provenance.load(Path(u.out_dir))
+        assert prov is not None and prov.status == "ok"
+        peer_stamped += bool(prov.peer_fetch)
+        if prov.peer_fetch:
+            assert prov.bytes_from_peer > 0
+    assert peer_stamped > 0
+    assert sum(r.bytes_from_peer for r in res2) > 0
+
+
+def test_cluster_peer_fabric_requires_per_node_caches(dataset):
+    pipe, _ = _work(dataset)
+    with pytest.raises(ValueError, match="peer_fabric"):
+        ClusterRunner(pipe, dataset.root, peer_fabric=True)

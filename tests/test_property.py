@@ -90,17 +90,21 @@ def test_split_computations_basic():
 
 @given(n_subjects=st.integers(1, 4), sessions=st.integers(1, 2),
        nodes=st.integers(1, 3), flaky=st.booleans(),
-       die=st.integers(0, 3))
+       die=st.integers(0, 3), harass_peers=st.booleans())
 @settings(max_examples=8, deadline=None)
 def test_cluster_exactly_one_ok_provenance_and_no_torn_files(
-        n_subjects, sessions, nodes, flaky, die):
+        n_subjects, sessions, nodes, flaky, die, harass_peers):
     """Distributed-executor invariant: for random unit lists, node counts and
     injected failures (transient faults + one node death), every unit ends
     with exactly one committed ok provenance, and a concurrent reader NEVER
     observes a partial output file or torn provenance (atomic tmp+rename).
+    ``harass_peers`` additionally runs the blob fabric under hostile peers
+    (dead addrs, corrupted bodies, Bloom false positives) — every peer
+    failure must fall back to storage without disturbing the invariant.
     Body shared with the deterministic sweep in test_cluster.py."""
     from cluster_invariant import check_cluster_invariant
-    check_cluster_invariant(n_subjects, sessions, nodes, flaky, die)
+    check_cluster_invariant(n_subjects, sessions, nodes, flaky, die,
+                            harass_peers=harass_peers)
 
 
 _DIGEST_POOL = [f"d{i}" for i in range(12)]

@@ -41,8 +41,10 @@ def _work(dataset):
 def test_cache_hit_returns_identical_digest_and_bytes(dataset, tmp_path):
     pipe, units = _work(dataset)
     cache = InputCache(tmp_path / "cache", max_bytes=1 << 30)
-    i1, sums1, hit1, hb1 = load_unit_inputs(units[0], dataset.root, cache=cache)
-    i2, sums2, hit2, hb2 = load_unit_inputs(units[0], dataset.root, cache=cache)
+    i1, sums1, hit1, hb1, _ = load_unit_inputs(units[0], dataset.root,
+                                               cache=cache)
+    i2, sums2, hit2, hb2, _ = load_unit_inputs(units[0], dataset.root,
+                                               cache=cache)
     assert (hit1, hit2) == (False, True)
     assert sums1 == sums2                       # provenance-identical digests
     for k in i1:
@@ -62,8 +64,8 @@ def test_cache_eviction_under_size_pressure(dataset, tmp_path):
     assert st["bytes"] <= int(one_input * 2.5)
     assert cache.blob_count() <= 2
     # evicted entries re-fetch (miss), survivors still hit
-    _, _, hit_last, _ = load_unit_inputs(units[-1], dataset.root, cache=cache)
-    _, _, hit_first, _ = load_unit_inputs(units[0], dataset.root, cache=cache)
+    _, _, hit_last, *_ = load_unit_inputs(units[-1], dataset.root, cache=cache)
+    _, _, hit_first, *_ = load_unit_inputs(units[0], dataset.root, cache=cache)
     assert hit_last is True                     # most recent blob survived
     assert hit_first is False                   # LRU victim re-fetched
 
@@ -90,8 +92,8 @@ def test_cache_oversize_input_passes_through_without_wiping(dataset, tmp_path):
     load_unit_inputs(units[0], dataset.root, cache=cache)   # warm blob
     big = tmp_path / "big.npy"
     np.save(big, np.zeros(one, dtype=np.float64))           # > max_bytes
-    arr, digest, hit, nbytes = cache.fetch_array(big)
-    assert hit is False and arr.nbytes > cache.max_bytes
+    arr, digest, origin, nbytes = cache.fetch_array(big)
+    assert origin == "storage" and arr.nbytes > cache.max_bytes
     st = cache.stats()
     assert st["evictions"] == 0 and st["blobs"] == 1        # warm blob intact
     assert load_unit_inputs(units[0], dataset.root, cache=cache)[2] is True
@@ -100,10 +102,10 @@ def test_cache_oversize_input_passes_through_without_wiping(dataset, tmp_path):
 def test_cache_corrupt_blob_degrades_to_miss(dataset, tmp_path):
     pipe, units = _work(dataset)
     cache = InputCache(tmp_path / "cache")
-    _, sums, _, _ = load_unit_inputs(units[0], dataset.root, cache=cache)
+    _, sums, *_ = load_unit_inputs(units[0], dataset.root, cache=cache)
     digest = next(iter(sums.values()))
     (cache.blob_dir / digest).write_bytes(b"garbage")
-    arr, sums2, hit, _ = load_unit_inputs(units[0], dataset.root, cache=cache)
+    arr, sums2, hit, *_ = load_unit_inputs(units[0], dataset.root, cache=cache)
     assert hit is False                          # verified hit failed -> miss
     assert sums2 == sums                         # refetched, digest intact
 
@@ -113,7 +115,7 @@ def test_cache_persists_across_instances(dataset, tmp_path):
     c1 = InputCache(tmp_path / "cache")
     load_unit_inputs(units[0], dataset.root, cache=c1)
     c2 = InputCache(tmp_path / "cache")          # restarted worker
-    _, _, hit, _ = load_unit_inputs(units[0], dataset.root, cache=c2)
+    _, _, hit, *_ = load_unit_inputs(units[0], dataset.root, cache=c2)
     assert hit is True
 
 
@@ -121,11 +123,11 @@ def test_cache_source_change_is_not_served_stale(dataset, tmp_path):
     pipe, units = _work(dataset)
     cache = InputCache(tmp_path / "cache")
     src = Path(dataset.root) / units[0].inputs["T1w"]
-    _, sums1, _, _ = load_unit_inputs(units[0], dataset.root, cache=cache)
+    _, sums1, *_ = load_unit_inputs(units[0], dataset.root, cache=cache)
     arr = np.load(src) + 1.0
     np.save(src, arr)                            # source mutated in place
     os.utime(src, ns=(1, 1))                     # force a new mtime key too
-    _, sums2, hit, _ = load_unit_inputs(units[0], dataset.root, cache=cache)
+    _, sums2, hit, *_ = load_unit_inputs(units[0], dataset.root, cache=cache)
     assert hit is False
     assert sums1 != sums2                        # new content, new digest
 
@@ -304,21 +306,112 @@ def test_cluster_rpc_transport_completes_and_caches(dataset, tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# peer-fabric version skew, both directions
+# ---------------------------------------------------------------------------
+
+def test_new_client_downgrades_blob_addr_against_pre_fabric_server(dataset):
+    """New worker vs old coordinator: a server whose queue predates
+    ``blob_addr`` rejects it with a TypeError; the client sheds that one
+    param and keeps its summary — fabric-invisible, still locality-aware."""
+    pipe, units = _work(dataset)
+
+    class _PreFabricQueue(WorkQueue):
+        def register(self, node_id, summary=None):
+            return super().register(node_id, summary=summary)
+
+        def heartbeat(self, node_id, summary_delta=None):
+            return super().heartbeat(node_id, summary_delta=summary_delta)
+
+    q = _PreFabricQueue(units, [])
+    with QueueServer(q) as srv:
+        c = QueueClient(srv.address)
+        wire = {"v": 1, "full": {"v": 1, "m": 8, "k": 2, "n": 1,
+                                 "nz": [[0, 1]]}}
+        assert c.register("w", summary=wire, blob_addr="wh:9") is True
+        assert c._fabric_ok is False
+        assert c._summaries_ok is True               # only one rung shed
+        assert "w" in q.stats_snapshot()["summary_nodes"]
+        c.heartbeat("w", blob_addr="wh:9")           # silently bare now
+        assert c.next_unit("w") is not None          # scheduling unaffected
+        c.close()
+
+
+def test_new_client_downgrades_stepwise_against_ancient_server(dataset):
+    """A coordinator that predates summaries AND the fabric: the client
+    sheds blob_addr first, then the summary, and still registers."""
+    pipe, units = _work(dataset)
+
+    class _AncientQueue(WorkQueue):
+        def register(self, node_id):
+            return super().register(node_id)
+
+    q = _AncientQueue(units, [])
+    with QueueServer(q) as srv:
+        c = QueueClient(srv.address)
+        wire = {"v": 1, "full": {"v": 1, "m": 8, "k": 2, "n": 1,
+                                 "nz": [[0, 1]]}}
+        assert c.register("w", summary=wire, blob_addr="wh:9") is True
+        assert c._fabric_ok is False and c._summaries_ok is False
+        assert c.next_unit("w") is not None
+        c.close()
+
+
+def test_locate_blobs_returns_empty_against_pre_fabric_server(
+        dataset, monkeypatch):
+    """New fetcher vs old coordinator: ``locate_blobs`` degrades to ``{}``
+    on the first "unknown method" (the pre-fabric behaviour: go read shared
+    storage) and never pays a doomed RPC again."""
+    from repro.dist import rpc as rpc_mod
+    pipe, units = _work(dataset)
+    monkeypatch.setattr(rpc_mod, "_METHODS",
+                        rpc_mod._METHODS - {"locate_blobs"})
+    q = WorkQueue(units, ["a"])
+    with QueueServer(q) as srv:
+        c = QueueClient(srv.address)
+        assert c.locate_blobs(["d" * 64], node_id="a") == {}
+        assert c._fabric_ok is False
+        assert c.locate_blobs(["d" * 64]) == {}      # no second wire call
+        # the downgrade also stops blob_addr advertisements cold
+        assert c.register("w", blob_addr="wh:1") is True
+        assert q.stats_snapshot()["fabric_nodes"] == []
+        c.close()
+
+
+def test_old_worker_is_fabric_invisible_on_new_coordinator(dataset):
+    """Old worker vs new coordinator: a client that never sends blob_addr
+    (the pre-fabric wire, byte for byte) is simply never routed to —
+    everything else it does is untouched."""
+    pipe, units = _work(dataset)
+    q = WorkQueue(units, [])
+    with QueueServer(q) as srv:
+        c = QueueClient(srv.address)
+        assert c._call("register", node_id="oldw") is True   # bare old wire
+        c._call("heartbeat", node_id="oldw")
+        assert q.stats_snapshot()["fabric_nodes"] == []
+        assert q.locate_blobs(["d" * 64]) == {}
+        assert c.next_unit("oldw") is not None
+        c.close()
+
+
+# ---------------------------------------------------------------------------
 # invariant under transport / cache / renewal harassment
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("transport,cache,harass,locality", [
-    ("rpc", False, False, False),
-    ("rpc", True, False, False),
-    ("local", True, True, False),
-    ("local", False, False, True),      # locality harassment mode
-    ("rpc", False, True, True),         # both harassers over the socket
+@pytest.mark.parametrize("transport,cache,harass,locality,peers", [
+    ("rpc", False, False, False, False),
+    ("rpc", True, False, False, False),
+    ("local", True, True, False, False),
+    ("local", False, False, True, False),   # locality harassment mode
+    ("rpc", False, True, True, False),      # both harassers over the socket
+    ("local", False, False, False, True),   # peer-fabric harassment mode
+    ("rpc", False, True, False, True),      # hostile peers over the socket
 ])
-def test_cluster_invariant_over_transport(transport, cache, harass, locality):
+def test_cluster_invariant_over_transport(transport, cache, harass, locality,
+                                          peers):
     from cluster_invariant import check_cluster_invariant
     check_cluster_invariant(2, 2, 3, True, 1, transport=transport,
                             cache=cache, harass_renew=harass,
-                            harass_locality=locality)
+                            harass_locality=locality, harass_peers=peers)
 
 
 # ---------------------------------------------------------------------------
