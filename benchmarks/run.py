@@ -3,9 +3,14 @@ from __future__ import annotations
 
 import sys
 import traceback
+from pathlib import Path
 
 
 def main() -> None:
+    # artifacts live under benchmarks/out/ — gitignored, so a fresh checkout
+    # doesn't have it; recreate rather than making every bench defensive
+    (Path(__file__).resolve().parent / "out").mkdir(parents=True,
+                                                    exist_ok=True)
     from . import (campaign_plan, cluster_throughput, executor_throughput,
                    kernel_bench, locality_throughput, peer_fabric,
                    pipeline_throughput, rpc_throughput, table1_cost,

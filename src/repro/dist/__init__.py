@@ -9,7 +9,7 @@ from .cache import (DigestSummary, InputCache, cache_from_env,
                     harvest_summary, load_summary_file, save_summary_file,
                     summaries_from_cache_dirs)
 from .cluster import ClusterRunner, ClusterStats, Node, run_worker
-from .placement import best_node, best_peers, unit_local_bytes
+from .placement import WarmSetIndex, best_node, best_peers, unit_local_bytes
 from .queue import Lease, WorkQueue
 from .sharding import (Rules, attn_shard_choice, constrain, constrain_residual,
                        constrain_params_gathered, current_rules, param_spec_for,
@@ -19,7 +19,7 @@ __all__ = [
     "ClusterRunner", "ClusterStats", "Node", "Lease", "WorkQueue",
     "DigestSummary", "InputCache", "cache_from_env", "QueueClient",
     "QueueServer", "BlobServer", "PeerFabric", "fetch_blob", "run_worker",
-    "best_node", "best_peers", "unit_local_bytes",
+    "WarmSetIndex", "best_node", "best_peers", "unit_local_bytes",
     "harvest_summary", "load_summary_file", "save_summary_file",
     "summaries_from_cache_dirs",
     "Rules", "attn_shard_choice", "constrain", "constrain_residual",

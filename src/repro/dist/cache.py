@@ -560,15 +560,27 @@ class InputCache:
             st.update(self.fabric.counters())
         return st
 
+    # full-push wires list exact digests up to this many blobs (64-hex chars
+    # each: 64k blobs ≈ 4 MiB, inside the rpc frame cap); a larger cache
+    # omits the list and the coordinator's warm-set index rebuild falls back
+    # to probing the Bloom filter, exactly the pre-list behaviour
+    SUMMARY_DIGEST_LIST_CAP = 65536
+
     def summary_sync(self) -> Tuple[int, dict]:
         """Full summary push: ``(cursor, wire)`` where the wire carries the
-        whole Bloom filter plus current cache stats. A node sends this once
-        on join (``register``/``put_summary``) and keeps ``cursor`` to drain
-        deltas from."""
+        whole Bloom filter, an exact ``digests`` list (capped; lets the
+        coordinator rebuild its warm-set index without Bloom false
+        positives — old coordinators ignore the unknown key), plus current
+        cache stats. A node sends this once on join
+        (``register``/``put_summary``) and keeps ``cursor`` to drain deltas
+        from."""
         with self._lock:
-            return self._seq, {"v": SUMMARY_WIRE_VERSION,
-                               "full": self.summary.to_wire(),
-                               "stats": self._stats_locked()}
+            wire = {"v": SUMMARY_WIRE_VERSION,
+                    "full": self.summary.to_wire(),
+                    "stats": self._stats_locked()}
+            if len(self._blobs) <= self.SUMMARY_DIGEST_LIST_CAP:
+                wire["digests"] = sorted(self._blobs)
+            return self._seq, wire
 
     def summary_delta_since(self, cursor: int) -> Tuple[int, dict]:
         """Heartbeat piggyback: ``(new_cursor, wire)``. The wire carries the

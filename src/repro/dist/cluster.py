@@ -227,25 +227,41 @@ class Node:
                                      summary_delta=self._summary_delta())
                 if self.renew:
                     with self._held_lock:
-                        held = list(self._held)
-                    for idx, epoch in held:
-                        if self.killed.is_set():
-                            break
+                        held = sorted(self._held)
+                    verdicts = self._renew_held(held) if held else []
+                    for (idx, epoch), ok in zip(held, verdicts):
+                        if ok:
+                            continue
                         with self._held_lock:
-                            if (idx, epoch) not in self._held:
-                                continue     # completed since the snapshot
-                        if not self.queue.renew(idx, self.node_id, epoch):
-                            with self._held_lock:
-                                # only a lease we still hold counts as lost —
-                                # a renew losing the race with its own unit's
-                                # completion is routine, not a WAN event
-                                lost = (idx, epoch) in self._held
-                                self._held.discard((idx, epoch))
-                            if lost:
-                                self.lease_lost += 1
+                            # only a lease we still hold counts as lost —
+                            # a renew losing the race with its own unit's
+                            # completion is routine, not a WAN event
+                            lost = (idx, epoch) in self._held
+                            self._held.discard((idx, epoch))
+                        if lost:
+                            self.lease_lost += 1
             except ConnectionError:
                 return                       # transport gone: die silent,
             self.killed.wait(self.hb_interval_s)  # the reaper does the rest
+
+    def _renew_held(self, held):
+        """Renew a snapshot of in-hand leases: one ``renew_batch`` round trip
+        when the queue has it (in-process queues and new coordinators via
+        the shedding client), else per-op renews — same verdicts, N trips."""
+        batch = getattr(self.queue, "renew_batch", None)
+        if batch is not None:
+            return batch(self.node_id, [[i, e] for i, e in held])
+        return [self.queue.renew(i, self.node_id, e) for i, e in held]
+
+    def _next_units(self, max_units: int):
+        """Grant up to ``max_units`` leases: one ``next_units`` round trip
+        when the queue has it, else one per-op grant (the caller's top-up
+        loop keeps asking, preserving the old shape)."""
+        batch = getattr(self.queue, "next_units", None)
+        if batch is not None:
+            return batch(self.node_id, max_units)
+        got = self.queue.next_unit(self.node_id)
+        return [] if got is None else [got]
 
     def _safe_load(self, unit: WorkUnit):
         return safe_load_unit_inputs(unit, self.data_root, cache=self.cache)
@@ -259,21 +275,23 @@ class Node:
             self._push_summary()
             self._announce_fabric()
             while not self.killed.is_set():
-                # top up the leased in-hand window; prefetch primary inputs
-                # (a speculative twin skips prefetch — it must start *now*)
+                # top up the leased in-hand window — the whole shortfall in
+                # one (batched) ask; prefetch primary inputs (a speculative
+                # twin skips prefetch — it must start *now*)
                 while len(inhand) < 1 + self.prefetch:
-                    nxt = self.queue.next_unit(self.node_id)
-                    if nxt is None:
-                        break
-                    unit, lease = nxt
-                    with self._held_lock:
-                        self._held.add((lease.unit_idx, lease.epoch))
-                    fut = (None if lease.speculative
-                           else self._loader.submit(self._safe_load, unit))
-                    if lease.speculative:
-                        inhand.appendleft((unit, lease, fut))
-                    else:
-                        inhand.append((unit, lease, fut))
+                    need = 1 + self.prefetch - len(inhand)
+                    grants = self._next_units(need)
+                    for unit, lease in grants:
+                        with self._held_lock:
+                            self._held.add((lease.unit_idx, lease.epoch))
+                        fut = (None if lease.speculative
+                               else self._loader.submit(self._safe_load, unit))
+                        if lease.speculative:
+                            inhand.appendleft((unit, lease, fut))
+                        else:
+                            inhand.append((unit, lease, fut))
+                    if len(grants) < need:
+                        break              # nothing more leasable right now
                 if not inhand:
                     if self.queue.finished():
                         break

@@ -38,9 +38,20 @@ Protocol (see ``docs/cluster.md`` for the failure model):
   speculation target, dead-node redistribution — scores candidate units by
   **estimated cache-local bytes** (``Σ input_bytes[s]`` over input digests
   the node's summary holds) and prefers keeping bytes where they already
-  live. Scoring is purely advisory: a stale or missing summary degrades to
-  the locality-blind behaviour of PR 2/3, never to a wrong schedule. See
-  the placement-policy section of ``docs/cluster.md``.
+  live. Scores come from an incremental **warm-set index**
+  (:class:`~repro.dist.placement.WarmSetIndex`): digest→unit posting lists
+  built once at admission and folded per-node as summaries and deltas
+  arrive, so bulk decisions read precomputed ``unit → warm bytes`` dicts
+  instead of re-probing Bloom filters under the lock — backlog fills and
+  steals stay scored at 10⁵–10⁶-unit backlogs (the old
+  ``LOCALITY_BULK_SCAN_CAP`` blind fallback is gone). Scoring is purely
+  advisory: a stale or missing summary degrades to the locality-blind
+  behaviour of PR 2/3, never to a wrong schedule. See the placement-policy
+  section of ``docs/cluster.md``.
+* **Batching** — ``next_units`` / ``complete_batch`` / ``renew_batch``
+  wrap N grants/completions/renewals in one lock acquisition (and, over
+  rpc, one round trip). Same semantics as N per-op calls; old
+  coordinators simply don't export them and new clients shed to per-op.
 
 Everything is guarded by one lock — the queue is the single shared-state
 object, and the whole method surface is JSON-serializable by design:
@@ -61,19 +72,17 @@ from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 from ..core.query import WorkUnit
 from .cache import SUMMARY_WIRE_VERSION, DigestSummary
-from .placement import best_node, best_peers, unit_local_bytes
+# best_node / unit_local_bytes are re-exported here on purpose even though
+# grants now read the WarmSetIndex: the shared-scorer contract (campaign
+# admission and queue grants rank identically) is pinned by identity tests
+# against this module's attributes, and the index rebuild reproduces exactly
+# their semantics.
+from .placement import WarmSetIndex, best_node, best_peers, unit_local_bytes
 
 # grant-time scoring looks this deep into a node's own deque for a
-# higher-affinity unit; bounded so next_unit stays O(window · inputs) even
-# on six-figure unit lists
+# higher-affinity unit; bounded so a grant disturbs at most a head window of
+# the deque ordering even on six-figure unit lists
 LOCALITY_SCAN_WINDOW = 16
-
-# backlog fills and steals score at most this many candidates; past it they
-# fall back to the blind (FIFO / tail-half) shape. All scoring happens under
-# the one queue lock, so an unbounded sort over a six-figure backlog would
-# stall heartbeats/renewals long enough for short TTLs to reap live nodes —
-# at that scale, per-unit placement nuance is worth less than lock latency.
-LOCALITY_BULK_SCAN_CAP = 512
 
 # locate_blobs answers at most this many digests per call and ranks at most
 # this many peers per digest — both bound lock time against a hostile or
@@ -131,14 +140,25 @@ class WorkQueue:
         # (:class:`repro.core.campaign.CampaignPlan`, or its loaded-JSON
         # shape) seeds each node's deque from its admission-time shard, so
         # the queue starts already warm instead of rediscovering locality.
+        #
+        # The backlog deque is consumed lazily: warm (scored) fills delete
+        # membership from ``_backlog_seq`` and leave a stale deque entry
+        # behind for the FIFO pop to skip, so no fill ever rebuilds the
+        # deque. ``_backlog_seq`` doubles as the admission-order key (front
+        # appends count down, back appends count up), which is what scored
+        # fills use to break warmth ties in FIFO order.
         self._backlog: Deque[int] = deque()
+        self._backlog_seq: Dict[int, int] = {}
+        self._backlog_front = 0
+        self._backlog_back = 1
         if plan is not None:
             self._seed_from_plan(plan)
         elif node_ids and partition == "round_robin":
             for i in range(len(self.units)):
                 self._queues[node_ids[i % len(node_ids)]].append(i)
         else:
-            self._backlog.extend(range(len(self.units)))
+            for i in range(len(self.units)):
+                self._backlog_append(i)
         self._epochs: Dict[int, int] = {i: 0 for i in range(len(self.units))}
         self._leases: Dict[int, Lease] = {}          # primary lease per unit
         self._spec: Dict[int, Lease] = {}            # at most one twin per unit
@@ -152,9 +172,14 @@ class WorkQueue:
         self.requeues: List[int] = []                # reaped unit idxs (log)
         self.renew_rejections: int = 0               # stale-lease renew count
         # locality state: per-node cache digest summaries (pushed by nodes)
-        # plus the cache stats that piggyback on the same wire, and the
-        # placement counters operators read from stats_snapshot()
+        # plus the cache stats that piggyback on the same wire, the
+        # incremental warm-set index every placement decision reads, and the
+        # placement counters operators read from stats_snapshot(). The
+        # summaries stay authoritative for blob location (locate_blobs
+        # probes arbitrary digests); the index only covers digests this
+        # queue's units reference.
         self._summaries: Dict[str, DigestSummary] = {}
+        self._warm = WarmSetIndex(self.units)
         self._cache_stats: Dict[str, Dict[str, int]] = {}
         # peer-fabric state: blob-server addresses nodes advertised on
         # register/heartbeat (absence = "don't route peers at me"), plus
@@ -217,9 +242,13 @@ class WorkQueue:
                 if i is None or i in seeded:
                     continue
                 seeded.add(i)
-                (self._backlog if target is None else target).append(i)
-        self._backlog.extend(i for i in range(len(self.units))
-                             if i not in seeded)
+                if target is None:
+                    self._backlog_append(i)
+                else:
+                    target.append(i)
+        for i in range(len(self.units)):
+            if i not in seeded:
+                self._backlog_append(i)
 
     def _retire_meta(self, idx: int, entry: dict):
         """Record the completion that retired ``idx``: keyed for the final
@@ -228,6 +257,31 @@ class WorkQueue:
         self._primary_meta[idx] = entry
         self._primary_log.append(entry)
 
+    # -- backlog bookkeeping -------------------------------------------------
+    # Callers hold the lock. Membership and ordering live in _backlog_seq;
+    # the deque exists only to give the FIFO pop its order without scans.
+
+    def _backlog_append(self, idx: int):
+        self._backlog.append(idx)
+        self._backlog_seq[idx] = self._backlog_back
+        self._backlog_back += 1
+
+    def _backlog_appendleft(self, idx: int):
+        self._backlog.appendleft(idx)
+        self._backlog_front -= 1
+        self._backlog_seq[idx] = self._backlog_front
+
+    def _backlog_pop_fifo(self) -> Optional[int]:
+        """Oldest live backlog entry, skipping entries a warm fill already
+        took (stale deque copies) and units retired while parked."""
+        while self._backlog:
+            idx = self._backlog.popleft()
+            if self._backlog_seq.pop(idx, None) is None:
+                continue
+            if idx not in self._done:
+                return idx
+        return None
+
     # -- locality scoring ----------------------------------------------------
     # All helpers assume the caller holds the lock. Scores are *estimates*
     # (Bloom false positives, stale summaries) and only ever shape ordering —
@@ -235,14 +289,15 @@ class WorkQueue:
 
     def _local_bytes(self, idx: int, node_id: str) -> int:
         """Estimated bytes of unit ``idx``'s inputs already in ``node_id``'s
-        host cache, per its last pushed digest summary. 0 without a summary
+        host cache — an O(1) warm-set index lookup. 0 without a summary
         (old client, no cache, version skew) — the locality-blind fallback.
-        The score itself is the shared admission/grant scorer
+        The index's full-push rebuild probes the same shared
+        admission/grant scorer semantics
         (:func:`repro.dist.placement.unit_local_bytes`), so campaign plans
         and live grants can never rank the same unit differently."""
         if not self.locality:
             return 0
-        return unit_local_bytes(self.units[idx], self._summaries.get(node_id))
+        return self._warm.score(node_id, idx)
 
     def _node_scores(self, node_id: str) -> bool:
         """Whether scoring can distinguish anything for this node."""
@@ -251,10 +306,13 @@ class WorkQueue:
 
     def _best_node(self, idx: int, candidates: List[str]) -> str:
         """The candidate holding the most of ``idx``'s input bytes; ties go
-        to the shallowest deque, then lexicographic for determinism."""
-        return best_node(self.units[idx], candidates,
-                         self._summaries if self.locality else {},
-                         {n: len(q) for n, q in self._queues.items()})
+        to the shallowest deque, then lexicographic for determinism — the
+        index-backed twin of :func:`repro.dist.placement.best_node`."""
+        if not self.locality:
+            return min(candidates,
+                       key=lambda n: (len(self._queues[n]), n))
+        return self._warm.best_node(
+            idx, candidates, {n: len(q) for n, q in self._queues.items()})
 
     def _apply_summary_wire(self, node_id: str, wire) -> bool:
         """Fold a summary push (full or delta) into the per-node state.
@@ -275,13 +333,25 @@ class WorkQueue:
                 self.locality_stats["summary_rejected"] += 1
                 return False
             self._summaries[node_id] = summary
+            if self.locality:
+                # an exact digest list on the wire (new caches send one)
+                # makes the rebuild exact; otherwise probe the Bloom filter
+                # for every referenced digest, matching unit_local_bytes
+                digests = wire.get("digests")
+                self._warm.rebuild(
+                    node_id, summary,
+                    digests=digests if isinstance(digests, list) else None)
             return True
         summary = self._summaries.setdefault(node_id, DigestSummary())
         try:
             for d in wire.get("add") or []:
                 summary.add(str(d))
+                if self.locality:
+                    self._warm.add(node_id, str(d))
             for d in wire.get("drop") or []:
                 summary.discard(str(d))
+                if self.locality:
+                    self._warm.discard(node_id, str(d))
         except (TypeError, ValueError):
             self.locality_stats["summary_rejected"] += 1
             return False
@@ -338,6 +408,29 @@ class WorkQueue:
                 self.units[idx].total_input_bytes
             return idx, max(0, best_score)
 
+    def _next_unit_locked(self, node_id: str
+                          ) -> Optional[Tuple[WorkUnit, Lease]]:
+        if node_id in self._dead or node_id not in self._queues:
+            return None
+        sq = self._spec_queues[node_id]
+        while sq:
+            idx = sq.popleft()
+            if idx in self._done:
+                self._spec.pop(idx, None)
+                continue
+            return self.units[idx], self._spec[idx]
+        q = self._queues[node_id]
+        if not q:
+            self._fill_from_backlog(node_id)
+        if not q:
+            self._steal_into(node_id)
+        got = self._pop_scored(node_id)   # never returns a retired unit
+        if got is None:
+            return None
+        idx, score = got
+        return self.units[idx], self._grant(idx, node_id, False,
+                                            local_bytes=score)
+
     def next_unit(self, node_id: str) -> Optional[Tuple[WorkUnit, Lease]]:
         """Lease the next unit for ``node_id``: own speculative work first,
         then the best-affinity unit near the node's own deque head, then a
@@ -347,26 +440,22 @@ class WorkQueue:
         until :meth:`finished`) — including for unknown node ids, so a
         transport client that skipped :meth:`register` fails soft."""
         with self._lock:
-            if node_id in self._dead or node_id not in self._queues:
-                return None
-            sq = self._spec_queues[node_id]
-            while sq:
-                idx = sq.popleft()
-                if idx in self._done:
-                    self._spec.pop(idx, None)
-                    continue
-                return self.units[idx], self._spec[idx]
-            q = self._queues[node_id]
-            if not q:
-                self._fill_from_backlog(node_id)
-            if not q:
-                self._steal_into(node_id)
-            got = self._pop_scored(node_id)   # never returns a retired unit
-            if got is None:
-                return None
-            idx, score = got
-            return self.units[idx], self._grant(idx, node_id, False,
-                                                local_bytes=score)
+            return self._next_unit_locked(node_id)
+
+    def next_units(self, node_id: str, max_units: int = 1
+                   ) -> List[Tuple[WorkUnit, Lease]]:
+        """Batched :meth:`next_unit`: up to ``max_units`` grants under one
+        lock acquisition (over rpc: one round trip). Stops early when no
+        leasable work exists right now; a short batch means exactly what a
+        ``None`` from :meth:`next_unit` means."""
+        out: List[Tuple[WorkUnit, Lease]] = []
+        with self._lock:
+            for _ in range(max(1, int(max_units))):
+                got = self._next_unit_locked(node_id)
+                if got is None:
+                    break
+                out.append(got)
+        return out
 
     def _fill_from_backlog(self, node_id: str):
         """Move a fair share of never-partitioned units (queue built with no
@@ -374,26 +463,41 @@ class WorkQueue:
         alive) onto ``node_id``'s deque — late registrants then rebalance via
         ordinary stealing. With a usable summary the share is the node's
         **top-k by cache-local bytes** (warmest first, so prefetch starts on
-        the warmest work); otherwise FIFO, exactly the PR 3 behaviour."""
-        if not self._backlog:
+        the warmest work); otherwise FIFO, exactly the PR 3 behaviour.
+
+        Cost is O(warm-set · log + k), independent of backlog depth: the
+        warm candidates come straight off the node's warm-set index entry,
+        so a million-unit backlog no longer forces the blind-FIFO fallback
+        the old ``LOCALITY_BULK_SCAN_CAP`` imposed."""
+        if not self._backlog_seq:
             return
         alive = max(1, sum(1 for n in self._queues if n not in self._dead))
-        k = max(1, len(self._backlog) // alive)
+        k = max(1, len(self._backlog_seq) // alive)
         q = self._queues[node_id]
-        if (not self._node_scores(node_id)
-                or len(self._backlog) > LOCALITY_BULK_SCAN_CAP):
-            for _ in range(k):
-                if not self._backlog:
-                    break
-                q.append(self._backlog.popleft())
-            return
-        scored = sorted(range(len(self._backlog)),
-                        key=lambda p: (-self._local_bytes(self._backlog[p],
-                                                          node_id), p))
-        take = set(scored[:k])
-        chosen = [self._backlog[p] for p in scored[:k]]
-        self._backlog = deque(idx for p, idx in enumerate(self._backlog)
-                              if p not in take)
+        chosen: List[int] = []
+        if self._node_scores(node_id):
+            # intersect warm set and backlog by iterating whichever is
+            # smaller — a deep backlog against a small cache scans the warm
+            # set, a drained backlog against a big cache scans the backlog
+            scores = self._warm.scores(node_id)
+            if len(scores) <= len(self._backlog_seq):
+                warm = [(idx, s) for idx, s in scores.items()
+                        if idx in self._backlog_seq and idx not in self._done]
+            else:
+                warm = [(idx, s) for idx in self._backlog_seq
+                        if (s := scores.get(idx, 0)) > 0
+                        and idx not in self._done]
+            # warmest first; ties in backlog (admission) order — the exact
+            # ordering the old full sort produced
+            warm.sort(key=lambda t: (-t[1], self._backlog_seq[t[0]]))
+            for idx, _ in warm[:k]:
+                del self._backlog_seq[idx]
+                chosen.append(idx)
+        while len(chosen) < k:
+            idx = self._backlog_pop_fifo()
+            if idx is None:
+                break
+            chosen.append(idx)
         q.extend(chosen)                    # warmest-first order
 
     def _steal_into(self, thief: str):
@@ -404,7 +508,12 @@ class WorkQueue:
         With usable summaries the thief takes the entries that are
         **coldest for the victim** (preferring, among those, warmest for the
         thief); blind, it takes the tail half, preserving the victim's head
-        locality and prefetch exactly as before."""
+        locality and prefetch exactly as before.
+
+        The scored selection reads both warm-set index entries — one cheap
+        pass over the victim deque plus a sort of only the warm entries —
+        so it stays scored at any depth (the old cap fell back to blind
+        tail-half past 512 entries)."""
         lens = {n: len(q) for n, q in self._queues.items()
                 if n != thief and n not in self._dead and len(q)}
         if not lens:
@@ -415,22 +524,37 @@ class WorkQueue:
         self._steal_rr += 1
         vq = self._queues[victim]
         k = max(1, len(vq) // 2)
-        scoring = ((self._node_scores(thief) or self._node_scores(victim))
-                   and len(vq) <= LOCALITY_BULK_SCAN_CAP)
-        if scoring:
-            # coldest-for-victim first; among equals prefer warmest-for-thief,
-            # then latest position (degrades to tail-half when scores tie)
-            order = sorted(range(len(vq)),
-                           key=lambda p: (self._local_bytes(vq[p], victim),
-                                          -self._local_bytes(vq[p], thief),
-                                          -p))
-            take = sorted(order[:k])        # preserve victim's ordering
-            grabbed = [vq[p] for p in take]
+        if self._node_scores(thief) or self._node_scores(victim):
+            wv = self._warm.scores(victim) if self.locality else {}
+            wt = self._warm.scores(thief) if self.locality else {}
+            # selection order (matches the old full sort on
+            # (victim_bytes, -thief_bytes, -pos)): victim-cold entries first
+            # — thief-warm ones ahead of plain cold, tail-first within each —
+            # then victim-warm entries coldest-first. Only warm entries get
+            # sorted; the cold majority is consumed tail-first as-is.
+            cold_thief_warm: List[Tuple[int, int, int]] = []
+            cold_positions: List[int] = []
+            victim_warm: List[Tuple[int, int, int, int]] = []
+            for p, idx in enumerate(vq):
+                v = wv.get(idx, 0)
+                if v > 0:
+                    victim_warm.append((v, -wt.get(idx, 0), -p, p))
+                elif (t := wt.get(idx, 0)) > 0:
+                    cold_thief_warm.append((-t, -p, p))
+                else:
+                    cold_positions.append(p)
+            cold_thief_warm.sort()
+            victim_warm.sort()
+            sel = [e[-1] for e in cold_thief_warm]
+            sel.extend(reversed(cold_positions))
+            sel.extend(e[-1] for e in victim_warm)
+            take = set(sel[:k])
+            grabbed = [idx for p, idx in enumerate(vq) if p in take]
             self._queues[victim] = deque(idx for p, idx in enumerate(vq)
-                                         if p not in set(take))
+                                         if p not in take)
             self.locality_stats["steals_scored"] += 1
             self.locality_stats["stolen_local_bytes"] += \
-                sum(self._local_bytes(i, thief) for i in grabbed)
+                sum(wt.get(i, 0) for i in grabbed)
         else:
             grabbed = [vq.pop() for _ in range(k)]
             # reverse: popping the tail reversed the order; keep victim's order
@@ -466,59 +590,88 @@ class WorkQueue:
         :meth:`results_snapshot` ``primaries``, every non-retiring report
         (twin losers, zombies, late duplicates) in ``duplicates``."""
         with self._lock:
-            entry = None
-            if meta is not None:
-                entry = {"idx": idx, "node_id": node_id, "status": status,
-                         "speculative": speculative, **meta}
-            if node_id in self._dead:
-                if entry is not None:
-                    self._dup_meta.append(entry)
-                return
-            if speculative:
-                spec = self._spec.get(idx)
-                if spec is not None and spec.node_id == node_id:
-                    self._spec.pop(idx)
-                if idx in self._done:
-                    if entry is not None:
-                        self._dup_meta.append(entry)
-                    return
-                if status in ("ok", "skipped"):
-                    self._done[idx] = status
-                    self._started.pop(idx, None)
-                    self._failed_pending.pop(idx, None)
-                    # the twin won: its result is the unit's result, and the
-                    # deferred primary failure (if any) is superseded
-                    self._pending_meta.pop(idx, None)
-                    if entry is not None:
-                        self._retire_meta(idx, entry)
-                elif idx in self._failed_pending:
-                    self._done[idx] = self._failed_pending.pop(idx)
-                    pend = self._pending_meta.pop(idx, None)
-                    if pend is not None:
-                        self._retire_meta(idx, pend)
-                    if entry is not None:
-                        self._dup_meta.append(entry)
-                elif entry is not None:
-                    self._dup_meta.append(entry)
-                return
-            lease = self._leases.get(idx)
-            if lease is not None and lease.node_id == node_id:
-                self._leases.pop(idx)
-                self._started.pop(idx, None)
+            self._complete_locked(idx, node_id, status,
+                                  speculative=speculative, meta=meta)
+
+    def complete_batch(self, completions: Sequence[dict]):
+        """Batched :meth:`complete`: N terminal reports under one lock
+        acquisition (over rpc: one round trip). Each entry is a JSON-safe
+        dict ``{"idx", "node_id", "status"}`` plus optional ``speculative``
+        and ``meta`` — the same arguments, same semantics, same order as N
+        per-op calls. Malformed entries are dropped (fail-soft: the worker
+        retries nothing, exactly as a lost per-op duplicate report)."""
+        with self._lock:
+            for c in completions:
+                if not isinstance(c, dict):
+                    continue
+                try:
+                    idx = int(c["idx"])
+                    node_id = str(c["node_id"])
+                    status = str(c["status"])
+                except (KeyError, TypeError, ValueError):
+                    continue
+                meta = c.get("meta")
+                self._complete_locked(
+                    idx, node_id, status,
+                    speculative=bool(c.get("speculative", False)),
+                    meta=meta if isinstance(meta, dict) else None)
+
+    def _complete_locked(self, idx: int, node_id: str, status: str, *,
+                         speculative: bool = False,
+                         meta: Optional[dict] = None):
+        entry = None
+        if meta is not None:
+            entry = {"idx": idx, "node_id": node_id, "status": status,
+                     "speculative": speculative, **meta}
+        if node_id in self._dead:
+            if entry is not None:
+                self._dup_meta.append(entry)
+            return
+        if speculative:
+            spec = self._spec.get(idx)
+            if spec is not None and spec.node_id == node_id:
+                self._spec.pop(idx)
             if idx in self._done:
                 if entry is not None:
                     self._dup_meta.append(entry)
                 return
-            if status == "failed" and idx in self._spec:
-                self._failed_pending[idx] = status   # twin still racing
+            if status in ("ok", "skipped"):
+                self._done[idx] = status
+                self._started.pop(idx, None)
+                self._failed_pending.pop(idx, None)
+                # the twin won: its result is the unit's result, and the
+                # deferred primary failure (if any) is superseded
+                self._pending_meta.pop(idx, None)
                 if entry is not None:
-                    self._pending_meta[idx] = entry
-                return
-            self._done[idx] = status
-            self._failed_pending.pop(idx, None)
-            self._pending_meta.pop(idx, None)
+                    self._retire_meta(idx, entry)
+            elif idx in self._failed_pending:
+                self._done[idx] = self._failed_pending.pop(idx)
+                pend = self._pending_meta.pop(idx, None)
+                if pend is not None:
+                    self._retire_meta(idx, pend)
+                if entry is not None:
+                    self._dup_meta.append(entry)
+            elif entry is not None:
+                self._dup_meta.append(entry)
+            return
+        lease = self._leases.get(idx)
+        if lease is not None and lease.node_id == node_id:
+            self._leases.pop(idx)
+            self._started.pop(idx, None)
+        if idx in self._done:
             if entry is not None:
-                self._retire_meta(idx, entry)
+                self._dup_meta.append(entry)
+            return
+        if status == "failed" and idx in self._spec:
+            self._failed_pending[idx] = status   # twin still racing
+            if entry is not None:
+                self._pending_meta[idx] = entry
+            return
+        self._done[idx] = status
+        self._failed_pending.pop(idx, None)
+        self._pending_meta.pop(idx, None)
+        if entry is not None:
+            self._retire_meta(idx, entry)
 
     def renew(self, idx: int, node_id: str, epoch: int,
               summary_delta=None) -> bool:
@@ -543,21 +696,45 @@ class WorkQueue:
         with self._lock:
             if summary_delta is not None:
                 self._apply_summary_wire(node_id, summary_delta)
-            if idx in self._done:
-                return False                 # completed: routine, not counted
-            if node_id in self._dead:
-                self.renew_rejections += 1
-                return False
-            lease = self._leases.get(idx)
-            if lease is None or lease.node_id != node_id or lease.epoch != epoch:
-                lease = self._spec.get(idx)
-            if lease is None or lease.node_id != node_id or lease.epoch != epoch:
-                self.renew_rejections += 1
-                return False
-            self._heartbeats[node_id] = self._now()
-            renewed = dataclasses.replace(lease, granted_at=self._now())
-            (self._spec if lease.speculative else self._leases)[idx] = renewed
-            return True
+            return self._renew_locked(idx, node_id, epoch)
+
+    def renew_batch(self, node_id: str, leases: Sequence[Sequence[int]],
+                    summary_delta=None) -> List[bool]:
+        """Batched :meth:`renew` for every lease a node holds: one lock
+        acquisition (over rpc: one round trip) renews ``leases`` — a list of
+        ``[unit_idx, epoch]`` pairs — and applies the piggybacked
+        ``summary_delta`` once. Returns one verdict per pair, in order;
+        malformed pairs are simply rejected (False), same fail-soft posture
+        as every other wire surface."""
+        with self._lock:
+            if summary_delta is not None:
+                self._apply_summary_wire(node_id, summary_delta)
+            out: List[bool] = []
+            for pair in leases:
+                try:
+                    idx, epoch = int(pair[0]), int(pair[1])
+                except (TypeError, ValueError, IndexError):
+                    out.append(False)
+                    continue
+                out.append(self._renew_locked(idx, node_id, epoch))
+            return out
+
+    def _renew_locked(self, idx: int, node_id: str, epoch: int) -> bool:
+        if idx in self._done:
+            return False                 # completed: routine, not counted
+        if node_id in self._dead:
+            self.renew_rejections += 1
+            return False
+        lease = self._leases.get(idx)
+        if lease is None or lease.node_id != node_id or lease.epoch != epoch:
+            lease = self._spec.get(idx)
+        if lease is None or lease.node_id != node_id or lease.epoch != epoch:
+            self.renew_rejections += 1
+            return False
+        self._heartbeats[node_id] = self._now()
+        renewed = dataclasses.replace(lease, granted_at=self._now())
+        (self._spec if lease.speculative else self._leases)[idx] = renewed
+        return True
 
     # -- speculation --------------------------------------------------------
 
@@ -695,6 +872,7 @@ class WorkQueue:
                         self._retire_meta(idx, pend)
         self._spec_queues[node_id].clear()
         self._summaries.pop(node_id, None)   # dead cache scores nothing
+        self._warm.drop_node(node_id)        # and holds no warm set
         self._blob_addrs.pop(node_id, None)  # and serves no peers
         # unleased entries still sitting in its deque
         orphans.extend(i for i in self._queues[node_id] if i not in self._done)
@@ -710,7 +888,8 @@ class WorkQueue:
         else:
             # nobody alive to take them: park in the backlog so a later
             # register() (network transport) can still finish the job
-            self._backlog.extendleft(reversed(orphans))
+            for idx in reversed(orphans):
+                self._backlog_appendleft(idx)
         self.requeues.extend(orphans)
         return orphans
 

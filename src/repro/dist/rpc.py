@@ -9,13 +9,24 @@ module wraps it in a socket server and gives workers a drop-in client:
   TCP. Wire format is **JSON lines**: one request object per line
   (``{"id": n, "method": "...", "params": {...}}``), one response per line
   (``{"id": n, "ok": true, "result": ...}`` or ``{"id": n, "ok": false,
-  "error": "..."}``), UTF-8, ``\\n``-framed. One thread per connection; a
-  dropped connection kills only that worker's session — its leases die with
-  its heartbeats and are reaped like any crashed node.
+  "error": "..."}``), UTF-8, ``\\n``-framed. Hot paths may instead use
+  **length-prefixed binary frames** (``0x00`` magic byte + 4-byte big-endian
+  payload length + the same JSON payload): the server answers in whichever
+  framing the request arrived in and tags every JSON-lines response with
+  ``"bin": 1``, which is how a new client discovers it may upgrade — an old
+  server never sees a binary frame, an old client never notices the tag.
+  Both sides cap frames at ``MAX_FRAME_BYTES`` and reject oversize with a
+  protocol error (a corrupt or hostile peer must not balloon memory). One
+  thread per connection; a dropped connection kills only that worker's
+  session — its leases die with its heartbeats and are reaped like any
+  crashed node.
 * :class:`QueueClient` — implements the exact ``WorkQueue`` method surface
   (``next_unit`` / ``complete`` / ``heartbeat`` / ``speculate`` / ``reap`` /
-  ``renew`` / ``register`` / introspection) over one persistent connection,
-  so :class:`~repro.dist.cluster.Node` and ``ClusterRunner`` run unchanged
+  ``renew`` / ``register`` / introspection, plus the batched
+  ``next_units`` / ``complete_batch`` / ``renew_batch`` that fold N hot-path
+  ops into one round trip and shed to per-op calls against a pre-batch
+  coordinator) over one persistent connection, so
+  :class:`~repro.dist.cluster.Node` and ``ClusterRunner`` run unchanged
   against either the in-process queue or a remote one.
 
 Only already-JSON data crosses the wire: ``WorkUnit`` and ``Lease`` are flat
@@ -50,12 +61,25 @@ from .queue import Lease, WorkQueue
 
 QUEUE_ADDR_ENV = "REPRO_QUEUE_ADDR"
 
+# Hard ceiling on one request/response frame, both framings, both sides.
+# The control plane moves leases and digest summaries — a few KB; 8 MiB is
+# two orders of headroom. Anything larger is a corrupt length prefix, a
+# desynchronized stream, or a hostile peer, and the old unbounded readline
+# would have buffered it all before failing.
+MAX_FRAME_BYTES = 8 << 20
+
+# First byte of a length-prefixed binary frame. JSON-lines requests always
+# start with "{", so one peeked byte disambiguates the framings per request.
+_FRAME_MAGIC = b"\x00"
+
 # The queue surface a client may invoke. getattr-dispatch is gated on this
 # allowlist so a malformed request can name only protocol methods, nothing
 # else on the object.
 _METHODS = frozenset({
-    "next_unit", "complete", "mark_started", "heartbeat", "mark_dead",
-    "reap", "speculate", "renew", "register", "running", "finished",
+    "next_unit", "next_units", "complete", "complete_batch", "mark_started",
+    "heartbeat", "mark_dead",
+    "reap", "speculate", "renew", "renew_batch", "register", "running",
+    "finished",
     "pending", "alive_nodes", "done_status", "queue_depths", "active_leases",
     "results_snapshot", "stats_snapshot", "primary_log", "put_summary",
     "summaries_snapshot", "locate_blobs",
@@ -121,15 +145,62 @@ class _Handler(socketserver.StreamRequestHandler):
             self.server.conns.discard(self.connection)  # type: ignore[attr-defined]
         super().finish()
 
+    def _reply(self, resp: dict, *, binary: bool):
+        data = json.dumps(resp).encode()
+        if binary:
+            self.wfile.write(_FRAME_MAGIC
+                             + len(data).to_bytes(4, "big") + data)
+        else:
+            self.wfile.write(data + b"\n")
+        self.wfile.flush()
+
     def handle(self):
         queue: WorkQueue = self.server.queue            # type: ignore[attr-defined]
         while True:
-            line = self.rfile.readline()
-            if not line:
+            head = self.rfile.read(1)
+            if not head:
                 return                                   # client hung up
+            binary = head == _FRAME_MAGIC
+            if binary:
+                hdr = self.rfile.read(4)
+                if len(hdr) < 4:
+                    return                               # EOF mid-header
+                n = int.from_bytes(hdr, "big")
+                if n > MAX_FRAME_BYTES:
+                    # a length prefix past the cap means the stream cannot
+                    # be resynchronized: report and hang up (the client's
+                    # ConnectionError path — the reaper's failure mode)
+                    try:
+                        self._reply({"id": None, "ok": False,
+                                     "error": f"ProtocolError: {n}-byte "
+                                              f"frame exceeds cap "
+                                              f"{MAX_FRAME_BYTES}"},
+                                    binary=True)
+                    except OSError:
+                        pass
+                    return
+                payload = self.rfile.read(n)
+                if len(payload) < n:
+                    return                               # EOF mid-frame
+            else:
+                rest = self.rfile.readline(MAX_FRAME_BYTES)
+                payload = head + rest
+                if not payload.endswith(b"\n"):
+                    if len(payload) > MAX_FRAME_BYTES:
+                        # oversize line: the rest of it is still in the
+                        # socket — never try to resync past it
+                        try:
+                            self._reply(
+                                {"id": None, "ok": False,
+                                 "error": f"ProtocolError: line exceeds "
+                                          f"frame cap {MAX_FRAME_BYTES}"},
+                                binary=False)
+                        except OSError:
+                            pass
+                    return                               # oversize or EOF
             req = None
             try:
-                req = json.loads(line)
+                req = json.loads(payload)
                 if not isinstance(req, dict):
                     raise ValueError("request must be a JSON object")
                 method = req.get("method")
@@ -142,9 +213,13 @@ class _Handler(socketserver.StreamRequestHandler):
             except Exception as e:  # noqa: BLE001 — reported to the caller
                 resp = {"id": req.get("id") if isinstance(req, dict) else None,
                         "ok": False, "error": f"{type(e).__name__}: {e}"}
+            if not binary:
+                # advertise binary-framing support on every JSON-lines
+                # response; a new client upgrades after its first call, an
+                # old client ignores the extra key
+                resp["bin"] = 1
             try:
-                self.wfile.write(json.dumps(resp).encode() + b"\n")
-                self.wfile.flush()
+                self._reply(resp, binary=binary)
             except OSError:
                 return                                   # connection dropped
 
@@ -224,7 +299,8 @@ class QueueClient:
     is indistinguishable from its own crash, which is exactly the failure
     semantics the reaper expects (silence -> lease requeue)."""
 
-    def __init__(self, addr: Tuple[str, int], *, timeout_s: float = 30.0):
+    def __init__(self, addr: Tuple[str, int], *, timeout_s: float = 30.0,
+                 binary: bool = True):
         self.addr = addr
         self._lock = threading.Lock()
         self._id = 0
@@ -238,12 +314,68 @@ class QueueClient:
         # old coordinator rejects it once, then we stop advertising (the
         # worker still serves blobs; nobody is told, nobody dials in)
         self._fabric_ok = True
+        # and for the batched hot-path methods: one "unknown method" from a
+        # pre-batch coordinator downgrades this client to per-op calls
+        self._batched_ok = True
+        # binary framing is negotiated, never assumed: the first JSON-lines
+        # response from a framing-capable server carries "bin": 1, after
+        # which (with binary=True) every request is length-prefixed. An old
+        # server therefore never receives a frame it would misread as a
+        # garbled line. binary=False pins the client to JSON-lines — the
+        # old-client-new-server compatibility shape, kept testable.
+        self._binary_enabled = bool(binary)
+        self._binary = False
         self._sock = socket.create_connection(addr, timeout=timeout_s)
         self._file = self._sock.makefile("rb")
 
     def close(self):
         with self._lock:
             self._poison()
+
+    def _read_response(self, method: str) -> bytes:
+        """One response frame in whichever framing this connection speaks.
+        Caller holds the lock. Poisons and raises :class:`ConnectionError`
+        on EOF, a desynchronized stream, or an oversize frame — the cap
+        protects the client's memory exactly as the server's protects its."""
+        if self._binary:
+            head = self._file.read(1)
+            if not head:
+                self._poison()
+                raise ConnectionError(
+                    f"queue server {self.addr} closed the connection")
+            if head != _FRAME_MAGIC:
+                self._poison()
+                raise ConnectionError(
+                    f"queue rpc {method}: expected a binary frame from "
+                    f"{self.addr} — stream desynchronized")
+            hdr = self._file.read(4)
+            if len(hdr) < 4:
+                self._poison()
+                raise ConnectionError(
+                    f"queue server {self.addr} closed the connection")
+            n = int.from_bytes(hdr, "big")
+            if n > MAX_FRAME_BYTES:
+                self._poison()
+                raise ConnectionError(
+                    f"queue rpc {method}: {n}-byte response frame from "
+                    f"{self.addr} exceeds cap {MAX_FRAME_BYTES}")
+            payload = self._file.read(n)
+            if len(payload) < n:
+                self._poison()
+                raise ConnectionError(
+                    f"queue server {self.addr} closed the connection")
+            return payload
+        line = self._file.readline(MAX_FRAME_BYTES + 1)
+        if not line:
+            self._poison()
+            raise ConnectionError(
+                f"queue server {self.addr} closed the connection")
+        if len(line) > MAX_FRAME_BYTES and not line.endswith(b"\n"):
+            self._poison()
+            raise ConnectionError(
+                f"queue rpc {method}: response line from {self.addr} "
+                f"exceeds frame cap {MAX_FRAME_BYTES}")
+        return line
 
     def _call(self, method: str, **params) -> Any:
         with self._lock:
@@ -252,9 +384,21 @@ class QueueClient:
                     f"queue rpc {method}: connection to {self.addr} is down")
             self._id += 1
             req = {"id": self._id, "method": method, "params": params}
+            data = json.dumps(req).encode()
             try:
-                self._sock.sendall(json.dumps(req).encode() + b"\n")
-                line = self._file.readline()
+                if self._binary:
+                    self._sock.sendall(
+                        _FRAME_MAGIC + len(data).to_bytes(4, "big") + data)
+                else:
+                    self._sock.sendall(data + b"\n")
+            except OSError as e:
+                self._poison()
+                raise ConnectionError(
+                    f"queue rpc {method} to {self.addr}: {e}") from e
+            try:
+                raw = self._read_response(method)
+            except ConnectionError:
+                raise
             except OSError as e:
                 # a timed-out call may leave its reply in flight: the stream
                 # is no longer aligned, so poison the connection rather than
@@ -262,12 +406,8 @@ class QueueClient:
                 self._poison()
                 raise ConnectionError(
                     f"queue rpc {method} to {self.addr}: {e}") from e
-            if not line:
-                self._poison()
-                raise ConnectionError(
-                    f"queue server {self.addr} closed the connection")
             try:
-                resp = json.loads(line)
+                resp = json.loads(raw)
             except json.JSONDecodeError as e:
                 # a truncated line at EOF (server killed mid-reply) is a
                 # transport death, not a protocol error: poison + ConnectionError
@@ -278,9 +418,17 @@ class QueueClient:
                     f"from {self.addr}: {e}") from e
             if resp.get("id") != req["id"]:        # desync: never trust again
                 self._poison()
+                if resp.get("id") is None and not resp.get("ok", True):
+                    # an id-less error is the server refusing the stream
+                    # itself (e.g. a frame past the cap) before closing it
+                    raise ConnectionError(
+                        f"queue rpc {method}: server {self.addr} rejected "
+                        f"the stream: {resp.get('error')}")
                 raise ConnectionError(
                     f"queue rpc {method}: response id {resp.get('id')!r} != "
                     f"request id {req['id']} — stream desynchronized")
+            if not self._binary and self._binary_enabled and resp.get("bin"):
+                self._binary = True       # server advertised frame support
         if not resp.get("ok"):
             raise RuntimeError(f"queue rpc {method}: {resp.get('error')}")
         return _decode(resp.get("result"))
@@ -309,10 +457,50 @@ class QueueClient:
         got = self._call("next_unit", node_id=node_id)
         return None if got is None else (got[0], got[1])
 
+    def next_units(self, node_id: str, max_units: int = 1):
+        """Batched grants: one round trip for up to ``max_units`` leases.
+        Sheds to per-op :meth:`next_unit` calls (permanently, for this
+        connection) against a coordinator that predates batching."""
+        if self._batched_ok:
+            try:
+                got = self._call("next_units", node_id=node_id,
+                                 max_units=max_units)
+                return [(g[0], g[1]) for g in got]
+            except RuntimeError as e:
+                if "unknown method" not in str(e):
+                    raise
+                self._batched_ok = False
+        out = []
+        for _ in range(max(1, int(max_units))):
+            one = self.next_unit(node_id)
+            if one is None:
+                break
+            out.append(one)
+        return out
+
     def complete(self, idx: int, node_id: str, status: str, *,
                  speculative: bool = False, meta: Optional[dict] = None):
         self._call("complete", idx=idx, node_id=node_id, status=status,
                    speculative=speculative, meta=meta)
+
+    def complete_batch(self, completions):
+        """Batched terminal reports (list of ``{"idx", "node_id", "status"}``
+        dicts plus optional ``speculative``/``meta``); sheds to per-op
+        :meth:`complete` calls against a pre-batch coordinator."""
+        completions = list(completions)
+        if self._batched_ok:
+            try:
+                self._call("complete_batch", completions=completions)
+                return
+            except RuntimeError as e:
+                if "unknown method" not in str(e):
+                    raise
+                self._batched_ok = False
+        for c in completions:
+            meta = c.get("meta")
+            self.complete(int(c["idx"]), str(c["node_id"]), str(c["status"]),
+                          speculative=bool(c.get("speculative", False)),
+                          meta=meta if isinstance(meta, dict) else None)
 
     def mark_started(self, idx: int):
         self._call("mark_started", idx=idx)
@@ -359,6 +547,30 @@ class QueueClient:
                 if not self._downgrade_on_type_error(e):
                     raise
         return self._call("renew", idx=idx, node_id=node_id, epoch=epoch)
+
+    def renew_batch(self, node_id: str, leases, summary_delta=None):
+        """Renew every held lease (``[[idx, epoch], ...]``) in one round
+        trip, the ``summary_delta`` applied once. Sheds to per-op
+        :meth:`renew` calls against a pre-batch coordinator — the delta then
+        piggybacks on the first per-op renew, keeping its once-per-beat
+        semantics."""
+        leases = [[int(i), int(e)] for i, e in leases]
+        if self._batched_ok:
+            params: Dict[str, Any] = {"node_id": node_id, "leases": leases}
+            if summary_delta is not None and self._summaries_ok:
+                params["summary_delta"] = summary_delta
+            try:
+                return [bool(v) for v in self._call("renew_batch", **params)]
+            except RuntimeError as e:
+                if "unknown method" not in str(e):
+                    raise
+                self._batched_ok = False
+        out = []
+        delta = summary_delta
+        for i, ep in leases:
+            out.append(self.renew(i, node_id, ep, summary_delta=delta))
+            delta = None
+        return out
 
     def register(self, node_id: str, summary=None, blob_addr=None) -> bool:
         params: Dict[str, Any] = {"node_id": node_id}
@@ -498,6 +710,11 @@ def _main():
                     help="host:port to serve cached blobs to peers on "
                          "(or $REPRO_BLOB_ADDR); needs --cache-dir")
     args = ap.parse_args()
+
+    # allocator/XLA hygiene before anything imports jax (the work path pulls
+    # in the pipelines); REPRO_ENV_PROFILE=off opts out — see launch/env.py
+    from ..launch.env import apply_env_profile
+    apply_env_profile("coordinator" if args.cmd == "serve" else "worker")
 
     if args.cmd == "serve":
         from ..core.query import load_units

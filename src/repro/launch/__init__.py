@@ -1,3 +1,17 @@
-from .mesh import make_production_mesh, make_local_mesh
+__all__ = ["make_production_mesh", "make_local_mesh",
+           "apply_env_profile", "env_profile", "format_exports"]
 
-__all__ = ["make_production_mesh", "make_local_mesh"]
+
+def __getattr__(name):
+    # mesh pulls in jax; loaded lazily so the env profile (which must run
+    # *before* the first jax import to land its XLA flags) can be imported
+    # from this package without defeating itself. env is lazy too so
+    # ``python -m repro.launch.env`` doesn't trip runpy's
+    # found-in-sys.modules warning.
+    if name in ("make_production_mesh", "make_local_mesh"):
+        from . import mesh
+        return getattr(mesh, name)
+    if name in ("apply_env_profile", "env_profile", "format_exports"):
+        from . import env
+        return getattr(env, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -44,6 +44,10 @@ SHARD_TEMPLATE = """#!/bin/bash
 {placement_line}
 
 set -euo pipefail
+# allocator and XLA hygiene, resolved on the *compute* node (tcmalloc
+# paths differ per host; LD_PRELOAD must be set before python starts) —
+# fail-soft when the package is not importable there
+eval "$(python -m repro.launch.env --role worker 2>/dev/null || true)"
 MANIFEST={manifest_json}
 python -m repro.core.workflow --run-one {units_json} --index $SLURM_ARRAY_TASK_ID \\
     --data-root {data_root} --scratch $SLURM_TMPDIR

@@ -1,11 +1,16 @@
-"""Launcher-level behaviour: training driver, serving driver, SLURM writers."""
+"""Launcher-level behaviour: training driver, serving driver, SLURM writers,
+and the allocator/XLA environment profile the launch scripts apply."""
+import shlex
 from pathlib import Path
 
 import numpy as np
+import pytest
 
 from repro.configs import get_config
+from repro.launch.env import (ENV_PROFILE_ENV, apply_env_profile, env_profile,
+                              format_exports)
 from repro.launch.serve import serve_batch
-from repro.launch.slurm import write_pod_launch
+from repro.launch.slurm import write_pod_launch, write_shard_script
 from repro.launch.train import train
 
 
@@ -59,3 +64,75 @@ def test_dryrun_cli_reduced_smoke(tmp_path):
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     r = Rules(mesh, "train", "fsdp", global_batch=256)
     assert r.map["batch"]  # divisible on the 1x1 mesh
+
+
+# ---------------------------------------------------------------------------
+# environment profile (repro.launch.env)
+# ---------------------------------------------------------------------------
+
+def test_env_profile_sets_hygiene_and_merges_xla_flags():
+    prof = env_profile("worker", base={})
+    assert prof["TF_CPP_MIN_LOG_LEVEL"] == "4"
+    assert "TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD" in prof
+    assert "--xla_force_host_platform_device_count=1" in prof["XLA_FLAGS"]
+
+
+def test_env_profile_never_clobbers_operator_settings():
+    base = {"TF_CPP_MIN_LOG_LEVEL": "0",
+            "XLA_FLAGS": "--xla_force_host_platform_device_count=8 "
+                         "--xla_dump_to=/tmp/x",
+            "LD_PRELOAD": "/opt/custom.so"}
+    prof = env_profile("coordinator", base=base)
+    # operator-pinned vars stay out of the profile entirely; the XLA flag
+    # the operator set by name wins, so XLA_FLAGS needs no merge at all
+    assert "TF_CPP_MIN_LOG_LEVEL" not in prof
+    assert "LD_PRELOAD" not in prof
+    assert "XLA_FLAGS" not in prof
+
+
+def test_env_profile_merges_only_missing_xla_flags():
+    base = {"XLA_FLAGS": "--xla_dump_to=/tmp/x"}
+    prof = env_profile("worker", base=base)
+    assert prof["XLA_FLAGS"].startswith("--xla_dump_to=/tmp/x")
+    assert "--xla_force_host_platform_device_count=1" in prof["XLA_FLAGS"]
+
+
+def test_env_profile_unknown_role_rejected():
+    with pytest.raises(ValueError, match="unknown role"):
+        env_profile("gpu-wrangler")
+
+
+def test_apply_env_profile_respects_off_switch(monkeypatch):
+    monkeypatch.setenv(ENV_PROFILE_ENV, "off")
+    assert apply_env_profile("worker") == {}
+    assert format_exports("worker") == ""
+
+
+def test_apply_env_profile_updates_environ(monkeypatch):
+    monkeypatch.delenv(ENV_PROFILE_ENV, raising=False)
+    monkeypatch.delenv("TF_CPP_MIN_LOG_LEVEL", raising=False)
+    import os
+    applied = apply_env_profile("worker")
+    assert applied["TF_CPP_MIN_LOG_LEVEL"] == "4"
+    assert os.environ["TF_CPP_MIN_LOG_LEVEL"] == "4"
+
+
+def test_format_exports_emits_quoted_shell_lines():
+    out = format_exports("worker", base={})
+    lines = out.splitlines()
+    assert all(line.startswith("export ") for line in lines)
+    for line in lines:
+        k, _, v = line[len("export "):].partition("=")
+        assert shlex.split(v) == [shlex.split(v)[0]]   # one quoted value
+
+
+def test_shard_script_evals_env_profile_before_python(tmp_path):
+    p = write_shard_script(tmp_path, name="shard-000", n_units=4,
+                           units_json="units.json",
+                           manifest_json="manifest.json", data_root="/data")
+    s = Path(p).read_text()
+    assert 'eval "$(python -m repro.launch.env --role worker' in s
+    # fail-soft on hosts where the package is missing, and the profile line
+    # lands before the worker python starts
+    assert "|| true" in s
+    assert s.index("repro.launch.env") < s.index("repro.core.workflow")

@@ -526,3 +526,167 @@ def test_provenance_roundtrips_locality_stamps(tmp_path):
     p.save(tmp_path)
     back = Provenance.load(tmp_path)
     assert back.locality_score == 0.75 and back.bytes_from_cache == 4096
+
+
+# ---------------------------------------------------------------------------
+# warm-set index: the incremental scorer behind every placement decision
+# ---------------------------------------------------------------------------
+
+def _flat_units(n, *, unique_digests=False):
+    """Synthetic units with one input each; digests shared pairwise unless
+    ``unique_digests`` (so both the overlap and the distinct cases exist)."""
+    from repro.core.query import WorkUnit
+    pool = n if unique_digests else max(1, n // 2)
+    return [WorkUnit(dataset="wd", subject=f"s{i:05d}", session="01",
+                     pipeline="p", pipeline_digest="pd",
+                     inputs={"T1w": f"in/{i}.nii"}, out_dir=f"out/{i}",
+                     input_digests={"T1w": f"dig-{i % pool}"},
+                     input_bytes={"T1w": 1000 + (i % 7) * 10})
+            for i in range(n)]
+
+
+def test_warm_index_full_push_matches_bloom_scorer_probe_for_probe():
+    from repro.dist.placement import WarmSetIndex, unit_local_bytes
+    units = _flat_units(40)
+    idx = WarmSetIndex(units)
+    s = DigestSummary()
+    for u in units[10:20]:
+        for d in u.input_digests.values():
+            s.add(d)
+    idx.rebuild("n", s)                         # Bloom probes, no exact list
+    for i, u in enumerate(units):
+        assert idx.score("n", i) == unit_local_bytes(u, s)
+
+
+def test_warm_index_exact_digest_list_beats_bloom_false_positives():
+    from repro.dist.placement import WarmSetIndex
+    units = _flat_units(30, unique_digests=True)
+    idx = WarmSetIndex(units)
+    held = sorted(units[3].input_digests.values())
+    # a deliberately saturated filter claims everything; the exact list wins
+    s = DigestSummary(m=1, k=1)
+    for d in held:
+        s.add(d)
+    idx.rebuild("n", s, digests=held)
+    assert idx.score("n", 3) == units[3].total_input_bytes
+    assert idx.score("n", 4) == 0               # Bloom alone would say warm
+
+
+def test_warm_index_delta_matches_fresh_rebuild():
+    from repro.dist.placement import WarmSetIndex
+    units = _flat_units(24, unique_digests=True)
+    a = WarmSetIndex(units)
+    a.rebuild("n", set(), digests=[])
+    final = set()
+    for i in (1, 5, 9, 5):                      # 5 added twice: a multiset
+        a.add("n", f"dig-{i}")
+        final.add(f"dig-{i}")
+    a.discard("n", "dig-9")
+    final.discard("dig-9")
+    a.discard("n", "dig-5")                     # one copy left: still warm
+    b = WarmSetIndex(units)
+    b.rebuild("n", final, digests=sorted(final))
+    assert a.scores("n") == b.scores("n")
+    a.discard("n", "dig-5")                     # last copy: cold now
+    assert a.score("n", 5) == 0
+
+
+def test_warm_index_ignores_unreferenced_digests_and_drops_nodes():
+    from repro.dist.placement import WarmSetIndex
+    units = _flat_units(8, unique_digests=True)
+    idx = WarmSetIndex(units)
+    idx.add("n", "dig-2")
+    idx.add("n", "never-referenced-anywhere")   # one dict miss, no state
+    assert idx.scores("n") == {2: units[2].total_input_bytes}
+    idx.drop_node("n")
+    assert idx.scores("n") == {}
+    idx.discard("ghost", "dig-2")               # unknown node: no-op
+
+
+def test_warm_index_best_node_matches_placement_best_node():
+    from repro.dist.placement import WarmSetIndex, best_node
+    units = _flat_units(20)
+    idx = WarmSetIndex(units)
+    summaries = {"a": {u for x in units[:6]
+                       for u in x.input_digests.values()},
+                 "b": {u for x in units[6:14]
+                       for u in x.input_digests.values()},
+                 "c": set()}
+    for n, held in summaries.items():
+        idx.rebuild(n, held, digests=sorted(held))
+    load = {"a": 3, "b": 1, "c": 0}
+    for i, u in enumerate(units):
+        assert (idx.best_node(i, ["a", "b", "c"], load)
+                == best_node(u, ["a", "b", "c"], summaries, load))
+
+
+# ---------------------------------------------------------------------------
+# the 512-unit cap is gone: scored placement on either side of the old edge
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [511, 512, 513])
+def test_backlog_fill_stays_scored_across_old_cap_boundary(n):
+    """The old coordinator went placement-blind past a 512-entry backlog
+    (LOCALITY_BULK_SCAN_CAP): a node whose cache held the *last* admitted
+    unit was handed the FIFO head instead. The index-backed fill must grant
+    the warm unit first at 511, 512 and 513 alike."""
+    units = _flat_units(n, unique_digests=True)
+    q = WorkQueue(units)                        # zero nodes: all backlogged
+    assert q.register("w")
+    warm = units[-1]                            # admitted last: FIFO-worst
+    q.put_summary("w", _summary_for([warm]))
+    unit, lease = q.next_unit("w")
+    assert unit.job_id == warm.job_id
+    assert lease.local_bytes == warm.total_input_bytes
+    st = q.stats_snapshot()["locality"]
+    assert st["scored_grants"] == 1 and st["blind_grants"] == 0
+
+
+@pytest.mark.parametrize("n", [511, 515])
+def test_steal_stays_scored_across_old_cap_boundary(n):
+    """Same edge for stealing: past 512 entries the old steal took the blind
+    tail half, so a thief-warm unit parked in the victim's front half was
+    unstealable. It must be stolen at any depth now."""
+    units = _flat_units(n, unique_digests=True)
+    q = WorkQueue(units)
+    assert q.register("victim")
+    q.next_unit("victim")                       # fill victim's deque (> cap)
+    assert q.register("thief")
+    warm_idx = q._queues["victim"][len(q._queues["victim"]) // 4]
+    q.put_summary("thief", _summary_for([units[warm_idx]]))
+    unit, lease = q.next_unit("thief")          # backlog empty: steals
+    assert q.steals["thief"] == 1
+    assert q.stats_snapshot()["locality"]["steals_scored"] == 1
+    got = {lease.unit_idx} | set(q._queues["thief"])
+    assert warm_idx in got                      # front-half warm unit stolen
+    assert unit.job_id == units[warm_idx].job_id  # and granted first
+
+
+def test_queue_local_bytes_agrees_with_shared_scorer(dataset):
+    """The index is a cache of the shared placement scorer, not a second
+    scorer: after any summary push, the queue-side score for every unit
+    equals a fresh unit_local_bytes() probe of the stored summary."""
+    from repro.dist.placement import unit_local_bytes
+    pipe, units = _work(dataset)
+    q = WorkQueue(units, ["a", "b"])
+    q.put_summary("a", _summary_for(units[:5]))
+    q.put_summary("b", _summary_for(units[5:9]))
+    q.heartbeat("a", summary_delta={
+        "v": 1, "add": list(units[9].input_digests.values()), "drop": []})
+    for node in ("a", "b"):
+        for i, u in enumerate(units):
+            assert (q._warm.score(node, i)
+                    == unit_local_bytes(u, q._summaries.get(node)))
+
+
+def test_summary_sync_wire_carries_exact_digest_list(dataset, tmp_path):
+    pipe, units = _work(dataset)
+    cache = InputCache(tmp_path / "cache", max_bytes=1 << 30)
+    load_unit_inputs(units[0], dataset.root, cache=cache)
+    _cursor, wire = cache.summary_sync()
+    assert sorted(wire["digests"]) == wire["digests"]
+    assert set(units[0].input_digests.values()) <= set(wire["digests"])
+    # a queue fed that wire scores exactly, not probabilistically
+    q = WorkQueue(units, ["a"])
+    assert q.put_summary("a", wire) is True
+    assert q._warm.score("a", 0) == units[0].total_input_bytes

@@ -2,7 +2,9 @@
 (renew vs reap, register/backlog, JSON-lines framing), cache behaviour under
 size pressure, and the ISSUE acceptance run — a 64-unit chaos schedule over
 the socket transport with a worker in a genuinely separate process."""
+import json
 import os
+import socket
 import subprocess
 import sys
 import threading
@@ -433,8 +435,17 @@ def test_acceptance_64_units_chaos_over_socket_with_worker_process(tmp_path):
     lock = threading.Lock()
 
     def chaos(unit, attempt):
-        # local nodes run slightly slow so the external process provably
-        # steals real work on a loaded CI box; unit 5 straggles once
+        # hold local nodes back (bounded per unit) until the external
+        # process has registered — a cold python booting jax takes seconds
+        # on a loaded box, and the batched grant path drains 64 tiny units
+        # faster than that — so it provably commits real work; unit 5
+        # straggles once
+        deadline = time.time() + 1.0
+        while time.time() < deadline:
+            srv = runner.server
+            if srv is not None and "ext-0" in srv.queue.alive_nodes():
+                break
+            time.sleep(0.05)
         time.sleep(0.01)
         if unit.job_id == slow_id:
             with lock:
@@ -484,3 +495,172 @@ def test_acceptance_64_units_chaos_over_socket_with_worker_process(tmp_path):
     ext_commits = [p for p in provs if p.node_id == "ext-0"]
     assert len(ext_commits) >= 1, (runner.stats.processed, wout)
     assert worker.returncode in (0, 3), wout
+
+
+# ---------------------------------------------------------------------------
+# frame caps + binary framing
+# ---------------------------------------------------------------------------
+
+def test_oversize_jsonl_request_rejected_then_connection_closed(dataset):
+    """A request line past MAX_FRAME_BYTES used to balloon the server's
+    memory via unbounded readline; now it gets one ProtocolError reply and
+    the connection closes (the stream cannot be resynchronized)."""
+    from repro.dist import rpc as rpc_mod
+    pipe, units = _work(dataset)
+    q = WorkQueue(units, ["a"])
+    with QueueServer(q) as srv:
+        s = socket.create_connection(srv.address, timeout=30)
+        with s:
+            s.sendall(b"{" + b"x" * (rpc_mod.MAX_FRAME_BYTES + 16))
+            f = s.makefile("rb")
+            resp = json.loads(f.readline())
+            assert resp["ok"] is False and resp["id"] is None
+            assert "ProtocolError" in resp["error"]
+            assert f.readline() == b""           # server hung up
+        # the server survives: a fresh client still gets work
+        c = QueueClient(srv.address)
+        assert c.next_unit("a") is not None
+        c.close()
+
+
+def test_oversize_binary_length_prefix_rejected(dataset):
+    from repro.dist import rpc as rpc_mod
+    pipe, units = _work(dataset)
+    q = WorkQueue(units, ["a"])
+    with QueueServer(q) as srv:
+        s = socket.create_connection(srv.address, timeout=30)
+        with s:
+            n = rpc_mod.MAX_FRAME_BYTES + 1
+            s.sendall(rpc_mod._FRAME_MAGIC + n.to_bytes(4, "big"))
+            f = s.makefile("rb")
+            assert f.read(1) == rpc_mod._FRAME_MAGIC
+            rlen = int.from_bytes(f.read(4), "big")
+            resp = json.loads(f.read(rlen))
+            assert resp["ok"] is False and "ProtocolError" in resp["error"]
+            assert f.read(1) == b""              # server hung up
+
+
+def test_client_poisons_on_oversize_response(dataset):
+    """A server reply past the cap must not be buffered to completion: the
+    client raises ConnectionError and every later call fails fast."""
+    from repro.dist import rpc as rpc_mod
+    srv = socket.create_server(("127.0.0.1", 0))
+    addr = srv.getsockname()
+
+    def fake_server():
+        conn, _ = srv.accept()
+        with conn:
+            conn.makefile("rb").readline()       # consume the request
+            conn.sendall(b"x" * (rpc_mod.MAX_FRAME_BYTES + 16))
+    t = threading.Thread(target=fake_server, daemon=True)
+    t.start()
+    c = QueueClient(addr)
+    with pytest.raises(ConnectionError, match="exceeds frame cap"):
+        c.finished()
+    with pytest.raises(ConnectionError, match="is down"):
+        c.pending()
+    t.join(timeout=30)
+    srv.close()
+
+
+def test_client_upgrades_to_binary_after_first_response(dataset):
+    pipe, units = _work(dataset)
+    q = WorkQueue(units, ["a"])
+    with QueueServer(q) as srv:
+        c = QueueClient(srv.address)
+        assert c._binary is False                # negotiated, never assumed
+        assert c.finished() is False             # JSON-lines, sees "bin": 1
+        assert c._binary is True
+        unit, lease = c.next_unit("a")           # binary-framed round trip
+        assert unit.job_id == q.units[lease.unit_idx].job_id
+        c.complete(lease.unit_idx, "a", "ok")
+        assert c.done_status()[lease.unit_idx] == "ok"
+        c.close()
+
+
+def test_binary_false_pins_client_to_jsonlines(dataset):
+    pipe, units = _work(dataset)
+    q = WorkQueue(units, ["a"])
+    with QueueServer(q) as srv:
+        c = QueueClient(srv.address, binary=False)
+        for _ in range(3):
+            assert c.finished() is False
+        assert c._binary is False                # old-client wire, unchanged
+        assert c.next_unit("a") is not None
+        c.close()
+
+
+# ---------------------------------------------------------------------------
+# batched rpcs + version skew, both directions
+# ---------------------------------------------------------------------------
+
+def test_batched_grant_renew_complete_roundtrip(dataset):
+    pipe, units = _work(dataset)
+    q = WorkQueue(units, ["a"])
+    with QueueServer(q) as srv:
+        c = QueueClient(srv.address)
+        got = c.next_units("a", 5)
+        assert len(got) == 5 and c._batched_ok is True
+        leases = [[lease.unit_idx, lease.epoch] for _u, lease in got]
+        assert c.renew_batch("a", leases) == [True] * 5
+        stale = [[leases[0][0], leases[0][1] + 7]] + leases[1:]
+        assert c.renew_batch("a", stale) == [False] + [True] * 4
+        c.complete_batch([{"idx": i, "node_id": "a", "status": "ok",
+                           "meta": {"seconds": 0.5}} for i, _e in leases])
+        snap = c.results_snapshot()
+        assert all(snap["primaries"][i]["seconds"] == 0.5
+                   for i, _e in leases)
+        # a short batch means what a None from next_unit means
+        rest = c.next_units("a", 10_000)
+        assert len(rest) == len(units) - 5
+        c.close()
+
+
+def test_renew_batch_applies_summary_delta_once(dataset):
+    pipe, units = _work(dataset)
+    q = WorkQueue(units, ["a"])
+    with QueueServer(q) as srv:
+        c = QueueClient(srv.address)
+        got = c.next_units("a", 2)
+        leases = [[lease.unit_idx, lease.epoch] for _u, lease in got]
+        digs = list(units[0].input_digests.values())
+        assert c.renew_batch("a", leases, summary_delta={
+            "v": 1, "add": digs, "drop": []}) == [True, True]
+        assert "a" in c.summaries_snapshot()
+        c.close()
+    # delta lands exactly once: each digest adds one copy, so one discard
+    # per digest empties the summary again
+    for d in digs:
+        q._summaries["a"].discard(d)
+    assert len(q._summaries["a"]) == 0
+
+
+def test_new_client_sheds_batching_against_pre_batch_server(
+        dataset, monkeypatch):
+    """New worker vs old coordinator: the batched methods aren't in the
+    server's allowlist, so the first call reports "unknown method"; the
+    client downgrades to per-op for good and the run proceeds."""
+    from repro.dist import rpc as rpc_mod
+    monkeypatch.setattr(
+        rpc_mod, "_METHODS",
+        frozenset(rpc_mod._METHODS
+                  - {"next_units", "complete_batch", "renew_batch"}))
+    pipe, units = _work(dataset)
+    q = WorkQueue(units, ["a"])
+    with QueueServer(q) as srv:
+        c = QueueClient(srv.address)
+        got = c.next_units("a", 4)
+        assert len(got) == 4 and c._batched_ok is False
+        leases = [[lease.unit_idx, lease.epoch] for _u, lease in got]
+        digs = list(units[0].input_digests.values())
+        verdicts = c.renew_batch("a", leases,
+                                 summary_delta={"v": 1, "add": digs,
+                                                "drop": []})
+        assert verdicts == [True] * 4
+        c.complete_batch([{"idx": i, "node_id": "a", "status": "ok"}
+                          for i, _e in leases])
+        assert sum(1 for s in c.done_status().values() if s == "ok") == 4
+        c.close()
+    for d in digs:                               # the piggyback landed once
+        q._summaries["a"].discard(d)
+    assert len(q._summaries["a"]) == 0
