@@ -28,6 +28,19 @@ storage** than blind admission. Artifacts land in ``benchmarks/out/``
 (``campaign_plan.json`` + the plan itself as ``campaign.json``; CI uploads
 both). Runs thread-pinned in a subprocess like the other executor benches;
 override the bench artifact path with ``REPRO_BENCH_JSON``.
+
+**Staged arm** (``REPRO_CAMPAIGN_BENCH_ARMS=staged``, its own CI matrix
+row): the same contest on a two-stage dependency DAG — 64 ``bias_correct``
+producers feeding 64 ``affine_register`` consumers whose inputs are the
+producers' committed outputs. The probe run executes stage 1 with output
+write-through *disabled*, so the snapshotted caches hold stage-1 inputs
+only: stage-2 input digests are invisible to every harvested summary, and
+the only way the planner can warm-place a consumer is **producer
+placement** (admit the child to the shard where its parents' outputs will
+land). Both measured runs then execute the full DAG with write-through on;
+they differ only in admission. Gate: producer-placed admission strictly
+beats placement-blind on hit-rate AND bytes-from-storage. Artifact:
+``benchmarks/out/campaign_staged.json``.
 """
 from __future__ import annotations
 
@@ -49,9 +62,12 @@ NODES = 4
 CHAOS = {"node-1": 4}
 
 _INPROC_FLAG = "REPRO_CAMPAIGN_BENCH_INPROC"
+_STAGED_FLAG = "REPRO_CAMPAIGN_BENCH_STAGED_INPROC"
+ARMS_ENV = "REPRO_CAMPAIGN_BENCH_ARMS"
 _OUT_DIR = Path(__file__).resolve().parent / "out"
 _JSON_OUT = _OUT_DIR / "campaign_plan.json"
 _PLAN_OUT = _OUT_DIR / "campaign.json"
+_STAGED_OUT = _OUT_DIR / "campaign_staged.json"
 
 def _run_inproc():
     from repro.core import (builtin_pipelines, query_available_work,
@@ -195,10 +211,198 @@ def _run_inproc():
     return rows
 
 
+def _run_staged_inproc():
+    from repro.core import (Provenance, builtin_pipelines,
+                            query_available_work, synthesize_dataset)
+    from repro.core.campaign import Cohort, plan_campaign
+    from repro.core.query import WorkUnit
+    from repro.core.workflow import WRITE_THROUGH_ENV
+    from repro.dist import ClusterRunner
+    from repro.dist.cache import (load_summary_file, save_summary_file,
+                                  summaries_from_cache_dirs)
+    rows = []
+    with tempfile.TemporaryDirectory() as td:
+        td = Path(td)
+        ds = synthesize_dataset(td / "ds", "stagedbench",
+                                n_subjects=N_SUBJECTS,
+                                sessions_per_subject=SESSIONS, shape=SHAPE)
+        pipes = builtin_pipelines()
+        s1_pipe, s2_pipe = pipes["bias_correct"], pipes["affine_register"]
+        s1, excluded = query_available_work(ds, s1_pipe)
+        assert len(s1) == N_SUBJECTS * SESSIONS
+        deriv = Path(ds.root) / "derivatives"
+        caches = td / "hosts"
+        snapshot = td / "hosts-warm"
+
+        # -- probe: stage 1 only, output write-through OFF -------------------
+        # The snapshotted caches hold stage-1 *inputs* only, so stage-2
+        # digests (harvested below from provenance) are invisible to every
+        # summary: warm placement of the consumers can come from producer
+        # placement alone.
+        os.environ[WRITE_THROUGH_ENV] = "0"
+        try:
+            probe = ClusterRunner(s1_pipe, ds.root, nodes=NODES,
+                                  locality=False, cache_dir=caches,
+                                  cache_per_node=True,
+                                  straggler_factor=100.0, poll_s=0.02)
+            results = probe.run(s1)
+            ok = sum(r.status == "ok" for r in results)
+            if ok != len(s1):
+                raise RuntimeError(f"probe incomplete: {ok}/{len(s1)} ok")
+        finally:
+            os.environ.pop(WRITE_THROUGH_ENV, None)
+        shutil.copytree(caches, snapshot)
+
+        # -- stage 2 from committed provenance: outputs become inputs --------
+        # deterministic pipelines => re-running stage 1 in the measured arms
+        # reproduces these exact digests, so the plan stays valid
+        s2 = []
+        for u in s1:
+            prov = Provenance.load(Path(u.out_dir))
+            fname = f"sub-{u.subject}_ses-{u.session}_T1w_biascorr.npy"
+            digest = prov.outputs[fname]
+            path = Path(u.out_dir) / fname
+            rel = str(path.relative_to(ds.root))
+            s2.append(WorkUnit(
+                dataset=u.dataset, subject=u.subject, session=u.session,
+                pipeline=s2_pipe.name, pipeline_digest=s2_pipe.digest(),
+                inputs={"T1w": rel},
+                out_dir=str(Path(ds.root) / "derivatives" / s2_pipe.name /
+                            f"sub-{u.subject}" / f"ses-{u.session}"),
+                input_digests={"T1w": digest},
+                input_bytes={"T1w": path.stat().st_size},
+                depends_on=[u.job_id]))
+        shutil.rmtree(deriv, ignore_errors=True)
+        units = s1 + s2
+        in_bits = sum(u.total_input_bytes for u in units) * 8
+
+        # -- offline plan over the full DAG ----------------------------------
+        summaries = summaries_from_cache_dirs(snapshot)
+        sfile = save_summary_file(td / "summaries.json", summaries)
+        decoded = load_summary_file(sfile)
+        # the premise the arm rests on: no consumer digest is (even Bloom-)
+        # visible in any harvested summary
+        assert not any(u.input_digests["T1w"] in s
+                       for u in s2 for s in decoded.values()), \
+            "stage-2 digests leaked into the probe caches"
+        status = {"disk_free_gb": 64.0}
+        cohorts = [Cohort(ds.name, s1_pipe.name, s1_pipe.digest(), s1,
+                          excluded),
+                   Cohort(ds.name, s2_pipe.name, s2_pipe.digest(), s2, [])]
+        plan = plan_campaign(cohorts, decoded, status=status)
+        assert sorted(plan.assigned_unit_ids()) == \
+            sorted(u.job_id for u in units)
+        # producer placement engaged: consumers landed on warm shards even
+        # though no summary knows their bytes
+        node_of = {jid: s.node_id for s in plan.shards for jid in s.unit_ids}
+        placed_warm = sum(1 for u in s2 if node_of[u.job_id] is not None)
+        if not placed_warm:
+            raise RuntimeError("no consumer was producer-placed — staged "
+                               "planner regression")
+
+        # -- measured: full DAG, write-through ON, blind vs planned ----------
+        def measure(seeded_plan) -> dict:
+            shutil.rmtree(caches, ignore_errors=True)
+            shutil.copytree(snapshot, caches)
+            runner = ClusterRunner(
+                pipes, ds.root, nodes=NODES, locality=False,
+                partition="backlog" if seeded_plan is None else "round_robin",
+                plan=seeded_plan, cache_dir=caches, cache_per_node=True,
+                die_after=dict(CHAOS), lease_ttl_s=0.6, hb_interval_s=0.1,
+                straggler_factor=100.0, poll_s=0.02)
+            t0 = time.time()
+            results = runner.run(units)
+            dt = time.time() - t0
+            ok = sum(r.status == "ok" for r in results)
+            if ok != len(units):
+                raise RuntimeError(
+                    f"staged planned={seeded_plan is not None}: "
+                    f"{ok}/{len(units)} ok")
+            totals = _cache_totals(runner)
+            shutil.rmtree(deriv, ignore_errors=True)
+            return {
+                "seconds": round(dt, 3), "ok": ok,
+                "hits": totals.get("hits", 0),
+                "misses": totals.get("misses", 0),
+                "hit_rate": round(_hit_rate(totals), 4),
+                "bytes_from_cache": totals.get("bytes_from_cache", 0),
+                "bytes_from_storage": totals.get("bytes_from_storage", 0),
+                "effective_gbps": round(in_bits / dt / 1e9, 3),
+                "requeued": len(runner.stats.requeued),
+                "steals": sum(runner.stats.steals.values()),
+            }
+
+        blind = measure(None)
+        planned = measure(plan)
+
+        for phase, m in (("blind", blind), ("planned", planned)):
+            rows.append((f"campaign_staged_hit_rate_{phase}", m["hit_rate"],
+                         f"{m['hits']}/{m['hits'] + m['misses']} input "
+                         f"fetches served node-local across the 2-stage DAG "
+                         f"({phase} admission)"))
+            rows.append((f"campaign_staged_storage_bytes_{phase}",
+                         m["bytes_from_storage"],
+                         f"input bytes moved from shared storage "
+                         f"({phase} admission)"))
+        saved = blind["bytes_from_storage"] - planned["bytes_from_storage"]
+        rows.append(("campaign_staged_storage_bytes_saved", saved,
+                     "bytes producer placement kept off the storage link on "
+                     "the same 128-unit staged chaos schedule"))
+        rows.append(("campaign_staged_consumers_placed", placed_warm,
+                     f"of {len(s2)} consumers admitted to their producers' "
+                     f"shard with zero summary visibility of their inputs"))
+
+        # acceptance gate: producer placement strictly beats blind on both
+        if planned["hit_rate"] <= blind["hit_rate"]:
+            raise RuntimeError(
+                f"staged planned hit rate {planned['hit_rate']} not "
+                f"strictly above blind {blind['hit_rate']} — producer "
+                f"placement regression")
+        if planned["bytes_from_storage"] >= blind["bytes_from_storage"]:
+            raise RuntimeError(
+                f"staged planned moved {planned['bytes_from_storage']} "
+                f"bytes from storage, not strictly below blind "
+                f"{blind['bytes_from_storage']} — producer placement "
+                f"regression")
+
+        plan_json = plan.to_json()
+
+    _STAGED_OUT.parent.mkdir(parents=True, exist_ok=True)
+    _STAGED_OUT.write_text(json.dumps({
+        "units": len(units), "stages": 2, "shape": list(SHAPE),
+        "nodes": NODES, "chaos": {"die_after": CHAOS},
+        "plan": {"inputs_hash": json.loads(plan_json)["inputs_hash"],
+                 "shards": len(json.loads(plan_json)["shards"]),
+                 "consumers_producer_placed": placed_warm},
+        "blind": blind, "planned": planned,
+        "gate": {"hit_rate_strictly_higher": True,
+                 "storage_bytes_strictly_lower": True},
+        "rows": [[n, v, d] for n, v, d in rows],
+    }, indent=1))
+    return rows
+
+
 def run():
-    """Benchmark entry (benchmarks.run): re-exec pinned — see ``_pin``."""
-    return run_pinned("benchmarks.campaign_plan", "campaign_",
-                      _INPROC_FLAG, _run_inproc, timeout=1800)
+    """Benchmark entry (benchmarks.run): re-exec pinned — see ``_pin``.
+
+    ``REPRO_CAMPAIGN_BENCH_ARMS`` selects the arms (comma-separated:
+    ``plan``, ``staged``; default ``plan``) — the staged arm runs in its own
+    CI matrix row so a producer-placement regression fails a dedicated,
+    artifact-uploading job."""
+    if os.environ.get(_INPROC_FLAG):
+        return _run_inproc()
+    if os.environ.get(_STAGED_FLAG):
+        return _run_staged_inproc()
+    arms = [a.strip() for a in
+            os.environ.get(ARMS_ENV, "plan").split(",") if a.strip()]
+    rows = []
+    if "plan" in arms:
+        rows += run_pinned("benchmarks.campaign_plan", "campaign_",
+                           _INPROC_FLAG, _run_inproc, timeout=1800)
+    if "staged" in arms:
+        rows += run_pinned("benchmarks.campaign_plan", "campaign_staged_",
+                           _STAGED_FLAG, _run_staged_inproc, timeout=1800)
+    return rows
 
 
 if __name__ == "__main__":

@@ -40,6 +40,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import heapq
 import json
 from pathlib import Path
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
@@ -232,6 +233,27 @@ def admission_throttle(status: Optional[Mapping[str, float]],
 # the planner
 # ---------------------------------------------------------------------------
 
+class _PlannedView:
+    """Duck-typed summary union the scorer reads during DAG admission: the
+    node's *real* cache summary plus the digests the plan predicts will land
+    there (outputs of parents already assigned to the node, which write
+    through into the host cache the moment they commit). Implements exactly
+    the surface :func:`~repro.dist.placement.unit_local_bytes` probes
+    (``len`` + ``in``), so producer placement flows through the same shared
+    scorer as every other placement decision — rankings cannot drift."""
+    __slots__ = ("real", "planned")
+
+    def __init__(self, real: DigestSummary, planned: set):
+        self.real = real
+        self.planned = planned
+
+    def __contains__(self, digest) -> bool:
+        return digest in self.planned or digest in self.real
+
+    def __len__(self) -> int:
+        return len(self.real) + len(self.planned)
+
+
 def plan_campaign(cohorts: Sequence[Cohort], summaries=None, *,
                   throttle: int = DEFAULT_THROTTLE,
                   status: Optional[Mapping[str, float]] = None,
@@ -239,12 +261,26 @@ def plan_campaign(cohorts: Sequence[Cohort], summaries=None, *,
     """Bucket N cohorts' admitted units into per-node shards by the shared
     placement score.
 
-    Deterministic: units are walked in cohort order then query order, nodes
-    ranked by ``(-local_bytes, assigned_bytes, node_id)`` — replanning from
-    identical inputs yields a byte-identical plan. Guarantees (property-
-    tested): every admitted unit lands in exactly one shard; a session the
-    cohort excluded is never assigned; a unit admitted by several cohorts
-    (overlapping manifests) is assigned once, under its first admission.
+    Deterministic: units are admitted in cohort order then query order and
+    assigned in dependency (topological) order — stable by admission order,
+    so a dependency-free campaign assigns in exactly the admission walk —
+    with nodes ranked by ``(-local_bytes, assigned_bytes, node_id)``.
+    Replanning from identical inputs yields a byte-identical plan.
+    Guarantees (property-tested): every admitted unit lands in exactly one
+    shard; a session the cohort excluded is never assigned; a unit admitted
+    by several cohorts (overlapping manifests) is assigned once, under its
+    first admission.
+
+    **Producer placement** (multi-stage DAGs): a parent's placement *is*
+    the next stage's locality — its outputs write through into the host
+    cache where it runs — so when a unit is assigned to a node, the input
+    digests its ``depends_on`` children declare are folded into that node's
+    planned warm set, and the children (assigned later: topological order)
+    score those predicted bytes through the same scorer as real summary
+    bytes. Children then shard to the node where their parents' outputs
+    will land. A ``depends_on`` cycle among admitted units raises
+    ``ValueError``; edges to job_ids outside the campaign count as
+    satisfied and score nothing.
 
     ``max_shard_units`` splits a node's bucket into multiple arrays (site
     ``MaxArraySize`` limits); ``status`` (a
@@ -256,15 +292,14 @@ def plan_campaign(cohorts: Sequence[Cohort], summaries=None, *,
     nodes = sorted(decoded)
     status = dict(status or {})
 
-    assigned: Dict[str, List[WorkUnit]] = {n: [] for n in nodes}
-    local: Dict[str, int] = {n: 0 for n in nodes}    # Σ scorer estimate
-    loads: Dict[str, int] = {n: 0 for n in nodes}    # Σ bytes, tie-break
-    cold: List[WorkUnit] = []
+    # pass 1 — admission: cohort order, exclusion re-check, first-cohort
+    # dedup. Placement waits for pass 2 so parents are placed before the
+    # children that score against their predicted outputs.
+    admitted_units: List[WorkUnit] = []
     seen: set = set()
     cohort_rows: List[dict] = []
     excluded_rows: List[dict] = []
     max_unit_bytes = 0
-
     for cohort in cohorts:
         excl_keys = {(e.subject, e.session) for e in cohort.excluded}
         admitted = 0
@@ -279,19 +314,66 @@ def plan_campaign(cohorts: Sequence[Cohort], summaries=None, *,
             seen.add(u.job_id)
             admitted += 1
             max_unit_bytes = max(max_unit_bytes, u.total_input_bytes)
-            target = best_node(u, nodes, decoded, loads) if nodes else None
-            score = (unit_local_bytes(u, decoded[target])
-                     if target is not None else 0)
-            if target is None or score <= 0:
-                cold.append(u)
-            else:
-                assigned[target].append(u)
-                local[target] += score
-                loads[target] += u.total_input_bytes
+            admitted_units.append(u)
         cohort_rows.append({
             "dataset": cohort.dataset, "pipeline": cohort.pipeline,
             "pipeline_digest": cohort.pipeline_digest,
             "admitted": admitted, "excluded": len(cohort.excluded)})
+
+    # DAG edges among admitted units + predicted outputs per parent: a
+    # child's declared input digests are, by definition of depends_on, bytes
+    # its parents' commits will produce
+    by_job = {u.job_id: k for k, u in enumerate(admitted_units)}
+    children: Dict[int, List[int]] = {}
+    indeg: Dict[int, int] = {}
+    produced: Dict[int, set] = {}
+    for k, u in enumerate(admitted_units):
+        ps = {by_job[str(d)] for d in getattr(u, "depends_on", None) or ()
+              if str(d) in by_job}
+        if not ps:
+            continue
+        indeg[k] = len(ps)
+        child_digests = set((u.input_digests or {}).values())
+        for p in ps:
+            children.setdefault(p, []).append(k)
+            if child_digests:
+                produced.setdefault(p, set()).update(child_digests)
+
+    # pass 2 — assignment in topological order, stable by admission index
+    # (a heap of ready units), so a dependency-free campaign walks exactly
+    # the admission order the old single-pass planner did
+    heap = [k for k in range(len(admitted_units)) if k not in indeg]
+    heapq.heapify(heap)
+    planned: Dict[str, set] = {n: set() for n in nodes}
+    views = {n: _PlannedView(decoded[n], planned[n]) for n in nodes}
+    assigned: Dict[str, List[WorkUnit]] = {n: [] for n in nodes}
+    scores: Dict[str, int] = {}                      # job_id -> grant score
+    loads: Dict[str, int] = {n: 0 for n in nodes}    # Σ bytes, tie-break
+    cold: List[WorkUnit] = []
+    placed = 0
+    while heap:
+        k = heapq.heappop(heap)
+        placed += 1
+        u = admitted_units[k]
+        target = best_node(u, nodes, views, loads) if nodes else None
+        score = (unit_local_bytes(u, views[target])
+                 if target is not None else 0)
+        if target is None or score <= 0:
+            cold.append(u)
+        else:
+            assigned[target].append(u)
+            scores[u.job_id] = score
+            loads[target] += u.total_input_bytes
+            planned[target].update(produced.get(k, ()))
+        for c in children.get(k, ()):
+            indeg[c] -= 1
+            if indeg[c] == 0:
+                del indeg[c]
+                heapq.heappush(heap, c)
+    if placed < len(admitted_units):
+        cyc = sorted(admitted_units[k].job_id for k in indeg)
+        raise ValueError(
+            "depends_on cycle among admitted units: " + ", ".join(cyc))
 
     def chunks(units: List[WorkUnit]) -> List[List[WorkUnit]]:
         if not max_shard_units or max_shard_units < 1:
@@ -305,10 +387,7 @@ def plan_campaign(cohorts: Sequence[Cohort], summaries=None, *,
             shards.append(Shard(
                 shard_id=f"shard-{len(shards):03d}", node_id=node_id,
                 unit_ids=[u.job_id for u in chunk],
-                est_local_bytes=(local[node_id] if len(chunk) ==
-                                 len(assigned[node_id]) else
-                                 sum(unit_local_bytes(u, decoded[node_id])
-                                     for u in chunk)),
+                est_local_bytes=sum(scores[u.job_id] for u in chunk),
                 est_total_bytes=sum(u.total_input_bytes for u in chunk)))
     for chunk in chunks(cold):
         shards.append(Shard(

@@ -33,6 +33,16 @@ class WorkUnit:
     # locality-blind, never broken.
     input_digests: Dict[str, str] = dataclasses.field(default_factory=dict)
     input_bytes: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # Multi-stage curation DAGs: job_ids of units whose committed ok
+    # provenance this unit's inputs are derived from (stage N outputs are
+    # stage N+1 inputs — PyCURT's sort → label → convert → database).
+    # The cluster queue grants a unit only once every parent listed here is
+    # terminally ok/skipped; the campaign planner admits it to the shard
+    # where the parents' outputs land (producer placement, docs/cluster.md).
+    # Parents not present in the same queue/campaign count as satisfied —
+    # the work query already excludes complete work, so a missing parent
+    # means "done before this submission", not "unknowable".
+    depends_on: List[str] = dataclasses.field(default_factory=list)
 
     @property
     def job_id(self) -> str:
@@ -97,18 +107,30 @@ def dump_units(units: List[WorkUnit], path: Path) -> Path:
     """Serialize a unit list to the units-JSON artifact every execution path
     shares (SLURM array tasks, ``repro.dist.rpc serve``, campaign shards).
     Full-fidelity: the data-plane fields (``input_digests``/``input_bytes``)
-    travel too, so a queue built from the file schedules locality-aware."""
+    travel too, so a queue built from the file schedules locality-aware.
+
+    ``depends_on`` is written only when non-empty. Independent units keep
+    the exact pre-DAG shape, so an old ``load_units`` still accepts them;
+    a DAG unit fed to an old coordinator fails its ``WorkUnit(**u)`` with
+    an unexpected-keyword ``TypeError`` instead of silently running
+    children before parents (version-skew fail-soft, docs/cluster.md)."""
     path = Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
-    path.write_text(json.dumps([dataclasses.asdict(u) for u in units],
-                               indent=1))
+    rows = []
+    for u in units:
+        d = dataclasses.asdict(u)
+        if not d.get("depends_on"):
+            d.pop("depends_on", None)
+        rows.append(d)
+    path.write_text(json.dumps(rows, indent=1))
     return path
 
 
 def load_units(path: Path) -> List[WorkUnit]:
     """Reload a :func:`dump_units` artifact into :class:`WorkUnit` objects
     identical to the originals (missing digest fields — pre-locality files —
-    default empty: locality-blind, never broken)."""
+    default empty: locality-blind, never broken; a missing ``depends_on``
+    key — pre-DAG files — loads as an independent unit)."""
     return [WorkUnit(**u) for u in json.loads(Path(path).read_text())]
 
 

@@ -186,7 +186,7 @@ def generate_jobs(manifest: DatasetManifest, pipeline: Pipeline, out_dir: Path,
 @dataclasses.dataclass
 class UnitResult:
     unit: WorkUnit
-    status: str                  # ok | failed | skipped | speculative
+    status: str                  # ok | failed | skipped | speculative | blocked
     seconds: float
     attempts: int
     error: Optional[str] = None
@@ -292,6 +292,26 @@ def safe_load_unit_inputs(unit: WorkUnit, data_root: Path,
         return None
 
 
+# Output write-through (multi-stage DAGs): the committing run inserts its
+# just-written outputs into the host's input cache, so a dependent unit
+# scheduled on the same host (producer placement) serves stage-N outputs as
+# stage-N+1 inputs off local disk. Env-disable for benchmarks that need a
+# warm-up whose caches hold inputs only.
+WRITE_THROUGH_ENV = "REPRO_CACHE_WRITE_THROUGH"
+
+
+def _write_outputs_through(cache, out_dir: Path, out_sums: Dict[str, str]):
+    """Best-effort: a cache insert must never fail a committed unit."""
+    if cache is None or os.environ.get(WRITE_THROUGH_ENV, "1") == "0":
+        return
+    for name, digest in out_sums.items():
+        try:
+            path = Path(out_dir) / name
+            cache.put_bytes(path.read_bytes(), digest=digest, source=path)
+        except Exception:  # noqa: BLE001 — provenance already committed
+            continue
+
+
 def run_unit(unit: WorkUnit, pipeline: Pipeline, data_root: Path,
              attempt: int = 1,
              fault_hook: Optional[Callable[[WorkUnit, int], None]] = None,
@@ -342,6 +362,7 @@ def run_unit(unit: WorkUnit, pipeline: Pipeline, data_root: Path,
                             bytes_from_cache=hit_bytes,
                             peer_fetch=peer_bytes > 0,
                             bytes_from_peer=peer_bytes).save(out_dir)
+        _write_outputs_through(cache, out_dir, out_sums)
         return UnitResult(unit, "ok", time.time() - t0, attempt,
                           bytes_from_cache=hit_bytes,
                           bytes_from_peer=peer_bytes,

@@ -536,6 +536,27 @@ class InputCache:
         self._insert_blob(digest, data, key)
         return arr, digest, "storage", len(data)
 
+    def put_bytes(self, data: bytes, *, digest: Optional[str] = None,
+                  source: Optional[Path] = None) -> Optional[str]:
+        """Write-through insertion: commit ``data`` as a content-addressed
+        blob without a fetch having missed first. This is how pipeline
+        *outputs* land in the producer host's cache the moment their
+        provenance commits, so a DAG child scheduled on the same host
+        (producer placement, ``repro.core.campaign``) hits local blobs
+        instead of re-reading shared storage. ``source`` additionally maps
+        the committed file's source key to the blob, making a later
+        ``fetch_array`` of that exact path a direct hit; ``digest`` (when
+        the caller already hashed the bytes, e.g. ``sha256_save_array``)
+        skips re-hashing. Returns the digest, or ``None`` for data bigger
+        than the whole budget (same passthrough rule as ``fetch_array`` —
+        inserting it would wipe every warm blob for nothing)."""
+        if len(data) > self.max_bytes:
+            return None
+        d = digest or hashlib.sha256(data).hexdigest()
+        key = self._source_key(Path(source)) if source is not None else None
+        self._insert_blob(d, data, key)
+        return d
+
     # -- digest-summary sync (locality-aware placement) ----------------------
 
     def _stats_locked(self) -> Dict[str, object]:

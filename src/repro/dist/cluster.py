@@ -52,7 +52,7 @@ import traceback
 from collections import deque
 from concurrent.futures import ThreadPoolExecutor
 from pathlib import Path
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Mapping, Optional, Tuple
 
 from ..core.pipelines import Pipeline
 from ..core.query import WorkUnit
@@ -92,9 +92,16 @@ class Node:
     started — in-hand leases die with the node and are reaped by the
     coordinator. ``die_after=k`` self-crashes the node after recording ``k``
     units (fault injection for dead-node requeue tests).
+
+    ``pipeline`` is either a single :class:`Pipeline` (every unit runs it,
+    the original shape) or a ``Mapping[str, Pipeline]`` resolved per unit by
+    ``unit.pipeline`` name — what a staged campaign DAG needs, where one
+    queue mixes stages of different pipelines. A unit naming a pipeline the
+    mapping lacks fails terminally (and blocks its DAG descendants) instead
+    of crashing the node.
     """
 
-    def __init__(self, node_id: str, queue: WorkQueue, pipeline: Pipeline,
+    def __init__(self, node_id: str, queue: WorkQueue, pipeline,
                  data_root: Path,
                  record: Callable[[int, UnitResult, Lease], None], *,
                  prefetch: int = 1, max_retries: int = 2,
@@ -142,6 +149,11 @@ class Node:
             target=self._work, name=node_id, daemon=True)
         self._hb = threading.Thread(
             target=self._heartbeat, name=f"{node_id}-hb", daemon=True)
+
+    def _pipeline_for(self, unit: WorkUnit) -> Optional[Pipeline]:
+        if isinstance(self.pipeline, Mapping):
+            return self.pipeline.get(unit.pipeline)
+        return self.pipeline
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -301,6 +313,19 @@ class Node:
                 if self.killed.is_set():
                     break
                 idx = lease.unit_idx
+                pipe = self._pipeline_for(unit)
+                if pipe is None:
+                    # a unit naming a pipeline this node doesn't carry is a
+                    # terminal config failure, not a node crash: record it
+                    # and keep working (its DAG descendants go blocked)
+                    self.processed += 1
+                    with self._held_lock:
+                        self._held.discard((idx, lease.epoch))
+                    self.record(idx, UnitResult(
+                        unit, "failed", 0.0, attempts=1,
+                        error=f"no pipeline named {unit.pipeline!r} "
+                              f"available on node {self.node_id}"), lease)
+                    continue
                 pre = fut.result() if fut is not None else None
                 # straggler clock starts at compute, not at the input load —
                 # a slow prefetch must not trigger spurious speculation
@@ -310,7 +335,7 @@ class Node:
                 total = unit.total_input_bytes
                 score = (min(1.0, lease.local_bytes / total) if total else 0.0)
                 if lease.speculative:
-                    res = run_unit(unit, self.pipeline, self.data_root,
+                    res = run_unit(unit, pipe, self.data_root,
                                    attempt=self.max_retries + 2,
                                    fault_hook=self.fault_hook,
                                    node_id=self.node_id,
@@ -318,7 +343,7 @@ class Node:
                                    locality_score=score)
                 else:
                     res = run_unit_with_retries(
-                        unit, self.pipeline, self.data_root,
+                        unit, pipe, self.data_root,
                         max_retries=self.max_retries,
                         backoff_s=self.backoff_s, fault_hook=self.fault_hook,
                         preloaded=pre, node_id=self.node_id,
@@ -377,9 +402,11 @@ class ClusterRunner:
     worker processes (:func:`run_worker`): they register, steal work, commit
     to shared storage, and their results are folded in from
     ``results_snapshot()``. ``cache_dir`` gives the coordinator host one
-    content-addressed input cache shared by its nodes."""
+    content-addressed input cache shared by its nodes. ``pipeline`` may be
+    a single :class:`Pipeline` or a ``Mapping[str, Pipeline]`` resolved per
+    unit by name (staged DAG campaigns mix pipelines in one queue)."""
 
-    def __init__(self, pipeline: Pipeline, data_root: Path, *,
+    def __init__(self, pipeline, data_root: Path, *,
                  nodes: int = 4, prefetch: int = 1, max_retries: int = 2,
                  backoff_s: float = 0.05, straggler_factor: float = 3.0,
                  straggler_min_s: float = 0.5, lease_ttl_s: float = 2.0,
@@ -614,6 +641,15 @@ class ClusterRunner:
                 primaries[idx] = res
             else:
                 pending_extras.append((idx, res))
+        # DAG failure policy: descendants of a terminally-failed parent were
+        # never granted (no node ever saw them), so they have no completion
+        # record anywhere — synthesize their terminal ``blocked`` result
+        # instead of mistaking them for lost work
+        for idx, st in queue.done_status().items():
+            if st == "blocked" and idx not in primaries:
+                primaries[idx] = UnitResult(
+                    units[idx], "blocked", 0.0, attempts=0,
+                    error="blocked: a depends_on ancestor failed terminally")
         if len(primaries) < len(units):
             crashes = "; ".join(nd.crash for nd in nodes if nd.crash)
             raise RuntimeError(
@@ -658,7 +694,11 @@ def run_worker(addr, pipeline, data_root: Path, node_id: str, *,
                             PeerFabric, parse_blob_addr)
     from .rpc import QueueClient
     if isinstance(pipeline, str):
-        pipeline = builtin_pipelines()[pipeline]
+        # "auto" hands the node the whole builtin registry, resolved per
+        # unit by name — what a worker joining a staged (mixed-pipeline)
+        # DAG campaign wants; any other string names a single pipeline
+        pipeline = (builtin_pipelines() if pipeline == "auto"
+                    else builtin_pipelines()[pipeline])
     if cache is None:
         cache = cache_from_env()
     client = QueueClient(addr)

@@ -52,6 +52,20 @@ Protocol (see ``docs/cluster.md`` for the failure model):
   wrap N grants/completions/renewals in one lock acquisition (and, over
   rpc, one round trip). Same semantics as N per-op calls; old
   coordinators simply don't export them and new clients shed to per-op.
+* **DAG gating** — units carrying ``depends_on`` edges (multi-stage
+  curation pipelines) are **parked**: they sit in no deque and no backlog
+  until every in-queue parent has retired ``ok``/``skipped`` — i.e. holds
+  a committed ok provenance record — at which point the child is released
+  exactly once, to its planned home node (or the backlog). Because release
+  happens only at retirement, the edge set is epoch-safe for free: a
+  reaped parent hasn't retired, so its children stay parked until the
+  re-run's commit; a zombie or twin duplicate can't release twice because
+  a unit retires exactly once. A terminally ``failed`` parent cascades:
+  every transitive descendant lands in a terminal ``blocked`` state —
+  counted done, surfaced in ``stats_snapshot()``, never granted.
+  Dependency cycles are rejected at construction (``ValueError``); parents
+  not present in the queue count as satisfied (the work query already
+  excludes complete work).
 
 Everything is guarded by one lock — the queue is the single shared-state
 object, and the whole method surface is JSON-serializable by design:
@@ -151,14 +165,37 @@ class WorkQueue:
         self._backlog_seq: Dict[int, int] = {}
         self._backlog_front = 0
         self._backlog_back = 1
+        # DAG state, built before dealing so _admit can park non-ready units.
+        # _parents holds each child's *unsatisfied* parent idxs (entries
+        # drain as parents retire ok); _children the forward edges; _parked
+        # maps a waiting child to its planned home node (None = backlog), so
+        # release lands it exactly where the partition/plan wanted it.
+        # Edges naming job_ids outside this queue are satisfied by
+        # definition: the work query excludes already-complete work, so an
+        # absent parent means "done before this submission".
+        self._by_job: Dict[str, int] = {}
+        for i, u in enumerate(self.units):
+            self._by_job.setdefault(u.job_id, i)
+        self._parents: Dict[int, set] = {}
+        self._children: Dict[int, List[int]] = {}
+        for i, u in enumerate(self.units):
+            deps = getattr(u, "depends_on", None) or ()
+            ps = {self._by_job[str(d)] for d in deps
+                  if str(d) in self._by_job}
+            if ps:
+                self._parents[i] = ps
+                for p in sorted(ps):
+                    self._children.setdefault(p, []).append(i)
+        self._check_acyclic()
+        self._parked: Dict[int, Optional[str]] = {}
         if plan is not None:
             self._seed_from_plan(plan)
         elif node_ids and partition == "round_robin":
             for i in range(len(self.units)):
-                self._queues[node_ids[i % len(node_ids)]].append(i)
+                self._admit(i, node_ids[i % len(node_ids)])
         else:
             for i in range(len(self.units)):
-                self._backlog_append(i)
+                self._admit(i, None)
         self._epochs: Dict[int, int] = {i: 0 for i in range(len(self.units))}
         self._leases: Dict[int, Lease] = {}          # primary lease per unit
         self._spec: Dict[int, Lease] = {}            # at most one twin per unit
@@ -236,19 +273,90 @@ class WorkQueue:
             else:
                 node_id = getattr(shard, "node_id", None)
                 unit_ids = getattr(shard, "unit_ids", None)
-            target = self._queues.get(node_id) if node_id else None
+            home = node_id if node_id in self._queues else None
             for jid in unit_ids or []:
                 i = by_job.get(jid)
                 if i is None or i in seeded:
                     continue
                 seeded.add(i)
-                if target is None:
-                    self._backlog_append(i)
-                else:
-                    target.append(i)
+                self._admit(i, home)
         for i in range(len(self.units)):
             if i not in seeded:
-                self._backlog_append(i)
+                self._admit(i, None)
+
+    # -- DAG gating ----------------------------------------------------------
+    # Callers hold the lock (or run from __init__ before the queue is
+    # shared). Correctness hinges on two facts: a unit retires exactly once
+    # (every terminal transition funnels through _retire), and a parked unit
+    # is in no deque/backlog, so nothing — grants, steals, backlog fills,
+    # speculation, dead-node redistribution — can hand it out early.
+
+    def _check_acyclic(self):
+        """Kahn's algorithm over the in-queue edges; raises ``ValueError``
+        naming the cyclic units. Cycles (including self-dependencies) would
+        otherwise deadlock the queue as permanently-parked work."""
+        remaining = {i: set(ps) for i, ps in self._parents.items()}
+        ready = [i for i in range(len(self.units)) if i not in remaining]
+        while ready:
+            nxt: List[int] = []
+            for p in ready:
+                for c in self._children.get(p, ()):
+                    ps = remaining.get(c)
+                    if ps is not None:
+                        ps.discard(p)
+                        if not ps:
+                            del remaining[c]
+                            nxt.append(c)
+            ready = nxt
+        if remaining:
+            cyc = sorted(self.units[i].job_id for i in remaining)
+            raise ValueError(
+                "depends_on cycle among work units: " + ", ".join(cyc))
+
+    def _admit(self, idx: int, node_id: Optional[str]):
+        """Deal ``idx`` to its home: parked (remembering the planned home
+        for release) while any parent is unsatisfied, else straight onto the
+        node's deque — or the backlog when ``node_id`` is None."""
+        if self._parents.get(idx):
+            self._parked[idx] = node_id
+        elif node_id is None:
+            self._backlog_append(idx)
+        else:
+            self._queues[node_id].append(idx)
+
+    def _retire(self, idx: int, status: str):
+        """The single point where a unit becomes terminal. On ``ok``/
+        ``skipped`` — the unit's provenance commit is durable — satisfy its
+        out-edges and release each child that just became ready, exactly
+        once: to its planned home if that node is still alive, else the
+        backlog. On ``failed`` (retries exhausted), cascade: every
+        transitive descendant is necessarily still parked (a child releases
+        only when *all* parents committed ok), so each lands terminally
+        ``blocked`` without ever having been granted."""
+        self._done[idx] = status
+        if status in ("ok", "skipped"):
+            for c in self._children.get(idx, ()):
+                ps = self._parents.get(c)
+                if ps is None:
+                    continue
+                ps.discard(idx)
+                if ps or c in self._done:
+                    continue
+                home = self._parked.pop(c, None)
+                if home is not None and home in self._queues \
+                        and home not in self._dead:
+                    self._queues[home].append(c)
+                else:
+                    self._backlog_append(c)
+        elif status == "failed":
+            stack = list(self._children.get(idx, ()))
+            while stack:
+                c = stack.pop()
+                if c in self._done:
+                    continue
+                self._done[c] = "blocked"
+                self._parked.pop(c, None)
+                stack.extend(self._children.get(c, ()))
 
     def _retire_meta(self, idx: int, entry: dict):
         """Record the completion that retired ``idx``: keyed for the final
@@ -636,7 +744,7 @@ class WorkQueue:
                     self._dup_meta.append(entry)
                 return
             if status in ("ok", "skipped"):
-                self._done[idx] = status
+                self._retire(idx, status)
                 self._started.pop(idx, None)
                 self._failed_pending.pop(idx, None)
                 # the twin won: its result is the unit's result, and the
@@ -645,7 +753,7 @@ class WorkQueue:
                 if entry is not None:
                     self._retire_meta(idx, entry)
             elif idx in self._failed_pending:
-                self._done[idx] = self._failed_pending.pop(idx)
+                self._retire(idx, self._failed_pending.pop(idx))
                 pend = self._pending_meta.pop(idx, None)
                 if pend is not None:
                     self._retire_meta(idx, pend)
@@ -667,7 +775,7 @@ class WorkQueue:
             if entry is not None:
                 self._pending_meta[idx] = entry
             return
-        self._done[idx] = status
+        self._retire(idx, status)
         self._failed_pending.pop(idx, None)
         self._pending_meta.pop(idx, None)
         if entry is not None:
@@ -866,7 +974,7 @@ class WorkQueue:
             if lease.node_id == node_id:
                 self._spec.pop(idx)
                 if idx in self._failed_pending and idx not in self._done:
-                    self._done[idx] = self._failed_pending.pop(idx)
+                    self._retire(idx, self._failed_pending.pop(idx))
                     pend = self._pending_meta.pop(idx, None)
                     if pend is not None:
                         self._retire_meta(idx, pend)
@@ -941,9 +1049,13 @@ class WorkQueue:
         plus the data-movement view operators previously had to grep
         provenance for — per-node cache counters (as last piggybacked on
         heartbeats: hits/misses/evictions/bytes_from_cache/bytes_from_storage)
-        with a cluster-wide ``cache_totals`` roll-up, and the placement
+        with a cluster-wide ``cache_totals`` roll-up, the placement
         counters (``locality``: scored vs blind grants, granted local bytes,
-        steal affinity stats, rejected summary wires)."""
+        steal affinity stats, rejected summary wires), and the DAG view
+        (``dag``: units ready to run vs parked blocked behind unfinished
+        parents vs cancelled — terminally blocked by a failed ancestor —
+        plus per-stage/pipeline progress). Old rpc clients simply ignore
+        the extra key."""
         with self._lock:
             totals: Dict[str, int] = {}
             for st in self._cache_stats.values():
@@ -958,6 +1070,32 @@ class WorkQueue:
                           for n, st in self._cache_stats.items()
                           if isinstance(st.get("peer_bytes_by_addr"), dict)
                           and st["peer_bytes_by_addr"]}
+            # DAG progress: blocked = parked behind unfinished parents,
+            # cancelled = terminally blocked by a failed ancestor, ready =
+            # everything grantable or in flight right now
+            cancelled = sum(1 for s in self._done.values() if s == "blocked")
+            per_stage: Dict[str, Dict[str, int]] = {}
+            for i, u in enumerate(self.units):
+                row = per_stage.setdefault(u.pipeline, {
+                    "total": 0, "ok": 0, "failed": 0, "cancelled": 0,
+                    "blocked": 0, "ready": 0})
+                row["total"] += 1
+                s = self._done.get(i)
+                if s in ("ok", "skipped"):
+                    row["ok"] += 1
+                elif s == "blocked":
+                    row["cancelled"] += 1
+                elif s is not None:
+                    row["failed"] += 1
+                elif i in self._parked:
+                    row["blocked"] += 1
+                else:
+                    row["ready"] += 1
+            dag = {"ready": (len(self.units) - len(self._done)
+                             - len(self._parked)),
+                   "blocked": len(self._parked),
+                   "cancelled": cancelled,
+                   "per_stage": per_stage}
             return {"steals": dict(self.steals),
                     "requeues": list(self.requeues),
                     "renew_rejections": self.renew_rejections,
@@ -969,7 +1107,8 @@ class WorkQueue:
                     "cache_hit_rate": (hits / lookups) if lookups else 0.0,
                     "fabric": dict(self.fabric_stats),
                     "fabric_nodes": sorted(self._blob_addrs),
-                    "peer_links": peer_links}
+                    "peer_links": peer_links,
+                    "dag": dag}
 
     def locate_blobs(self, digests: Sequence[str],
                      node_id: Optional[str] = None) -> Dict[str, List[str]]:

@@ -110,7 +110,18 @@ def _encode(obj: Any) -> Any:
     if isinstance(obj, Lease):
         return {"__lease__": dataclasses.asdict(obj)}
     if isinstance(obj, WorkUnit):
-        return {"__unit__": dataclasses.asdict(obj)}
+        # depends_on travels as a *sibling* of the __unit__ payload: an old
+        # peer's decoder builds WorkUnit(**obj["__unit__"]) and never looks
+        # at siblings, so version skew sheds the edge set instead of raising.
+        # That is safe by construction — the queue only grants ready units,
+        # so an old worker can hold a DAG child only after its parents
+        # committed. New decoders restore the field below.
+        d = dataclasses.asdict(obj)
+        deps = d.pop("depends_on", None)
+        out: Dict[str, Any] = {"__unit__": d}
+        if deps:
+            out["__deps__"] = list(deps)
+        return out
     if isinstance(obj, dict):
         return {str(k): _encode(v) for k, v in obj.items()}
     if isinstance(obj, (list, tuple)):
@@ -123,7 +134,11 @@ def _decode(obj: Any) -> Any:
         if "__lease__" in obj:
             return Lease(**obj["__lease__"])
         if "__unit__" in obj:
-            return WorkUnit(**obj["__unit__"])
+            fields = dict(obj["__unit__"])
+            deps = obj.get("__deps__")
+            if deps:
+                fields["depends_on"] = [str(x) for x in deps]
+            return WorkUnit(**fields)
         return {k: _decode(v) for k, v in obj.items()}
     if isinstance(obj, list):
         return [_decode(v) for v in obj]

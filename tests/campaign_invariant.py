@@ -27,8 +27,16 @@ def check_campaign_invariant(cohorts, summaries, throttle=100, status=None,
     assigned to exactly one shard, no excluded unit is ever assigned, the
     plan is structurally sound (no empty shards, submittable throttle, warm
     shards only name summary-backed nodes), and replanning — in memory and
-    through a serialized ``campaign.json`` — is byte-identical."""
-    from repro.core.campaign import CampaignPlan, plan_campaign
+    through a serialized ``campaign.json`` — is byte-identical.
+
+    DAG cohorts additionally check **producer placement**: a child whose
+    parents were all planned onto one node, and whose own input digests are
+    invisible to every *real* summary (they are predicted parent outputs,
+    not yet on any disk), must be planned onto that same node — its
+    parents' placement *is* its locality. Children whose parents went cold
+    carry no prediction and must stay cold like any blind unit."""
+    from repro.core.campaign import (CampaignPlan, _normalize_summaries,
+                                     plan_campaign)
 
     plan = plan_campaign(cohorts, summaries, throttle=throttle,
                          status=status, max_shard_units=max_shard_units)
@@ -43,6 +51,34 @@ def check_campaign_invariant(cohorts, summaries, throttle=100, status=None,
                for s in plan.shards)
     if max_shard_units:
         assert all(len(s.unit_ids) <= max_shard_units for s in plan.shards)
+    # producer placement, against an independent reading of the inputs
+    decoded = _normalize_summaries(summaries)
+    units_by_id = {}
+    for c in cohorts:
+        for u in c.units:
+            units_by_id.setdefault(u.job_id, u)
+    node_of = {jid: s.node_id for s in plan.shards for jid in s.unit_ids}
+    for jid in assigned:
+        u = units_by_id[jid]
+        deps = [d for d in (getattr(u, "depends_on", None) or ())
+                if d in node_of]
+        digests = set((u.input_digests or {}).values())
+        scoreable = sum((u.input_bytes or {}).get(s, 0)
+                        for s in (u.input_digests or {}))
+        if not deps or not digests or scoreable <= 0:
+            continue          # nothing to score: cold is the right answer
+        if any(d in s for d in digests for s in decoded.values()):
+            continue          # real warmth somewhere may legitimately win
+        parent_nodes = {node_of[d] for d in deps}
+        if parent_nodes == {None}:
+            # parents went cold: no prediction, the child must stay blind
+            assert node_of[jid] is None, \
+                f"{jid} warm-placed with cold parents"
+        elif len(parent_nodes) == 1:
+            (pn,) = parent_nodes
+            assert node_of[jid] == pn, \
+                (f"{jid} planned on {node_of[jid]}, parents' outputs land "
+                 f"on {pn}")
     # determinism + byte-identical replay through disk
     again = plan_campaign(cohorts, summaries, throttle=throttle,
                           status=status, max_shard_units=max_shard_units)

@@ -12,12 +12,23 @@ from pathlib import Path
 import numpy as np
 
 
+def dag_closure(edges, start):
+    """Transitive descendants of ``start`` under ``{child: [parents]}``."""
+    out, frontier = set(), {start}
+    while frontier:
+        frontier = {c for c, ps in edges.items()
+                    if c not in out and frontier.intersection(ps)}
+        out |= frontier
+    return out
+
+
 def check_cluster_invariant(n_subjects: int, sessions: int, nodes: int,
                             flaky: bool, die: int, *,
                             transport: str = "local", cache: bool = False,
                             harass_renew: bool = False,
                             harass_locality: bool = False,
-                            harass_peers: bool = False):
+                            harass_peers: bool = False,
+                            dag_edges=None, fail_idx=None):
     """For the given unit list / node count / injected failures: every unit
     must end with exactly one committed ok provenance, and a concurrent
     reader must never observe a partial output file or torn provenance.
@@ -41,7 +52,19 @@ def check_cluster_invariant(n_subjects: int, sessions: int, nodes: int,
     serving nodes killed mid-run. Every peer-path failure must fall back to
     shared storage: exactly one ok provenance per unit, and the committed
     input digests byte-identical to the manifest regardless of which link
-    the bytes crossed."""
+    the bytes crossed.
+
+    ``dag_edges`` (``{child_pos: [parent_pos, ...]}`` over the queried unit
+    list, parents strictly smaller so the topology is acyclic by
+    construction) attaches ``depends_on`` edges before the run and extends
+    the invariant to DAGs: still exactly one ok provenance per runnable
+    unit, and additionally *no child provenance timestamped before its last
+    parent's commit* — under the same steal/reap/speculation/harassment
+    machinery. ``fail_idx`` makes that unit's fault hook raise on every
+    attempt (retries exhaust): the unit must end terminally ``failed``, its
+    transitive descendants terminally ``blocked`` — never granted, no
+    output files, no provenance — and the blocked count surfaced in
+    ``stats_snapshot()['dag']``."""
     from repro.core import (Provenance, builtin_pipelines,
                             query_available_work, synthesize_dataset)
     from repro.dist import ClusterRunner
@@ -53,6 +76,24 @@ def check_cluster_invariant(n_subjects: int, sessions: int, nodes: int,
         pipe = builtin_pipelines()["bias_correct"]
         units, _ = query_available_work(ds, pipe)
         deriv = Path(ds.root) / "derivatives"
+
+        # DAG topology: attach depends_on edges over the queried list.
+        # Parent positions must be < child position (acyclic by
+        # construction); anything out of range is dropped, so hypothesis
+        # can draw edges without knowing the exact unit count.
+        dag_edges = {c: sorted({p for p in ps if 0 <= p < c})
+                     for c, ps in (dag_edges or {}).items()
+                     if 0 < c < len(units)}
+        dag_edges = {c: ps for c, ps in dag_edges.items() if ps}
+        for c, ps in dag_edges.items():
+            units[c].depends_on = [units[p].job_id for p in ps]
+        if fail_idx is not None and units:
+            fail_idx %= len(units)
+        fail_job = units[fail_idx].job_id if fail_idx is not None else None
+        blocked = dag_closure(dag_edges, fail_idx) \
+            if fail_idx is not None else set()
+        runnable = [i for i in range(len(units))
+                    if i not in blocked and i != fail_idx]
 
         violations = []
         stop = threading.Event()
@@ -73,6 +114,8 @@ def check_cluster_invariant(n_subjects: int, sessions: int, nodes: int,
                         violations.append(f"{p}: {type(e).__name__}: {e}")
 
         def fault(unit, attempt):
+            if fail_job is not None and unit.job_id == fail_job:
+                raise RuntimeError("permanent injected failure")
             if flaky and attempt == 1:
                 raise RuntimeError("transient")
 
@@ -200,13 +243,17 @@ def check_cluster_invariant(n_subjects: int, sessions: int, nodes: int,
         assert wrongly_renewed == []
 
         assert violations == []
-        assert sum(r.status == "ok" for r in results) == len(units)
+        assert sum(r.status == "ok" for r in results) == len(runnable)
         ok_ids = [r.unit.job_id for r in results if r.status == "ok"]
         assert len(ok_ids) == len(set(ok_ids))
-        for u in units:
+        assert set(ok_ids) == {units[i].job_id for i in runnable}
+        provs = {}
+        for i in runnable:
+            u = units[i]
             prov = Provenance.load(Path(u.out_dir))
             assert prov is not None and prov.status == "ok"
             assert prov.pipeline_digest == pipe.digest()
+            provs[i] = prov
             if use_cache:
                 # committed input digests are byte-identical to the manifest
                 # no matter which link (cache / peer / storage) served them
@@ -214,6 +261,37 @@ def check_cluster_invariant(n_subjects: int, sessions: int, nodes: int,
                     want = (u.input_digests or {}).get(suffix)
                     if want:
                         assert prov.inputs[rel] == want
+        # DAG ordering: a child's run began only after its last parent's
+        # provenance commit was durable (the queue released it at retirement)
+        for c, ps in dag_edges.items():
+            if c not in provs:
+                continue
+            for p in ps:
+                assert provs[c].started_at >= provs[p].finished_at - 1e-6, \
+                    (f"unit {c} started at {provs[c].started_at} before "
+                     f"parent {p} committed at {provs[p].finished_at}")
+        # failure policy: the poisoned unit ends terminally failed, its
+        # descendants terminally blocked — never granted, no output files,
+        # no provenance — and the counts surface in the DAG stats
+        if fail_idx is not None:
+            status_by_id = {}
+            for r in results:
+                if r.status != "speculative":
+                    status_by_id.setdefault(r.unit.job_id, r.status)
+            assert status_by_id[fail_job] == "failed"
+            fprov = Provenance.load(Path(units[fail_idx].out_dir))
+            assert fprov is not None and fprov.status == "failed"
+            for b in sorted(blocked):
+                bu = units[b]
+                assert status_by_id[bu.job_id] == "blocked"
+                bdir = Path(bu.out_dir)
+                assert Provenance.load(bdir) is None
+                assert not bdir.exists() or not any(bdir.iterdir())
+        if dag_edges or fail_idx is not None:
+            dag_stats = runner.queue.stats_snapshot()["dag"]
+            assert dag_stats["cancelled"] == len(blocked)
+            assert dag_stats["blocked"] == 0
+            assert dag_stats["ready"] == 0
         assert not list(deriv.rglob("*.tmp-*"))      # all commits atomic
         if harass_peers:
             # fallbacks must be visible, not silent: the harasser guaranteed

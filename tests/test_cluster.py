@@ -13,6 +13,8 @@ from pathlib import Path
 
 import pytest
 
+from conftest import wait_until
+
 N_NODES = max(2, int(os.environ.get("REPRO_CLUSTER_NODES", "4")))
 FAULT_INJECT = os.environ.get("REPRO_FAULT_INJECT", "0") == "1"
 
@@ -275,7 +277,13 @@ def test_long_unit_is_not_mistaken_for_dead_node(dataset):
     def slow(unit, attempt):
         if unit.job_id == slow_id and not done.is_set():
             done.set()
-            time.sleep(1.0)
+            # hold well past the lease ttl; bail out the moment the node is
+            # (wrongly) reaped so the asserts below fail with the evidence
+            # instead of sleeping through a fixed window
+            t0 = time.monotonic()
+            wait_until(lambda: time.monotonic() - t0 > 2.5 * 0.4
+                       or runner.queue.requeues,
+                       timeout=10, desc="lease ttl to elapse mid-compute")
 
     runner = ClusterRunner(pipe, dataset.root, nodes=2, fault_hook=slow,
                            lease_ttl_s=0.4, hb_interval_s=0.1,
@@ -298,7 +306,11 @@ def test_cross_node_speculative_twin_exactly_one_ok(dataset):
                 first = slept["n"] == 0
                 slept["n"] += 1
             if first:
-                time.sleep(1.5)
+                # the primary holds until its cross-node twin has retired
+                # the unit — deterministic "twin wins" instead of a fixed
+                # sleep racing the straggler detector on a loaded box
+                wait_until(lambda: 0 in runner.queue.done_status(),
+                           timeout=30, desc="speculative twin to commit")
 
     runner = ClusterRunner(pipe, dataset.root, nodes=2, fault_hook=slow_once,
                            straggler_factor=1.5, straggler_min_s=0.15,
@@ -413,6 +425,7 @@ def test_cluster_invariant_fixed_grid(n_subjects, sessions, nodes, flaky, die):
     check_cluster_invariant(n_subjects, sessions, nodes, flaky, die)
 
 
+@pytest.mark.slow
 def test_acceptance_64_units_death_plus_speculation(tmp_path):
     """ISSUE acceptance: 4 nodes, 64 units, one injected node death plus a
     straggler twin — exactly 64 committed ok provenances."""
@@ -430,7 +443,10 @@ def test_acceptance_64_units_death_plus_speculation(tmp_path):
                 first = slept["n"] == 0
                 slept["n"] += 1
             if first:
-                time.sleep(1.2)
+                # straggle until the twin commits the unit (bounded), not
+                # for a fixed window the detector might overrun
+                wait_until(lambda: 5 in runner.queue.done_status(),
+                           timeout=30, desc="speculative twin to commit")
 
     runner = ClusterRunner(pipe, ds.root, nodes=4, fault_hook=chaos,
                            die_after={"node-3": 3},

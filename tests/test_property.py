@@ -107,6 +107,39 @@ def test_cluster_exactly_one_ok_provenance_and_no_torn_files(
                             harass_peers=harass_peers)
 
 
+@st.composite
+def _dag_edges(draw, max_units=8):
+    """Random acyclic ``{child_pos: [parent_pos, ...]}`` topologies: every
+    parent index is strictly smaller than its child, so chains, diamonds and
+    fan-in gates all appear but cycles cannot. Positions past the actual
+    unit count are dropped by the harness's normalization."""
+    edges = {}
+    for c in range(1, max_units):
+        ps = draw(st.lists(st.integers(0, c - 1), max_size=2, unique=True))
+        if ps:
+            edges[c] = sorted(ps)
+    return edges
+
+
+@given(n_subjects=st.integers(2, 4), nodes=st.integers(1, 3),
+       flaky=st.booleans(), die=st.integers(0, 2), edges=_dag_edges(),
+       fail=st.one_of(st.none(), st.integers(0, 7)))
+@settings(max_examples=8, deadline=None)
+def test_cluster_dag_gating_and_failure_propagation(
+        n_subjects, nodes, flaky, die, edges, fail):
+    """DAG extension of the executor invariant, over random topologies
+    (chains, diamonds, fan-in gates) with chaos (transient faults, node
+    death) and optionally one permanently failing unit: runnable units end
+    with exactly one ok provenance, no child's provenance predates its last
+    parent's commit, and a failed unit's transitive descendants end
+    terminally ``blocked`` — no provenance, no output dir, surfaced in
+    ``stats_snapshot()['dag']``. Body shared with the deterministic grid in
+    test_dag.py / test_cluster.py."""
+    from cluster_invariant import check_cluster_invariant
+    check_cluster_invariant(n_subjects, 2, nodes, flaky, die,
+                            dag_edges=edges, fail_idx=fail)
+
+
 _DIGEST_POOL = [f"d{i}" for i in range(12)]
 
 
@@ -134,6 +167,13 @@ def _cohorts_and_summaries(draw):
                 out_dir=f"/out/ds{c}/{i}",
                 input_digests={f"in{k}": d for k, d in enumerate(digs)},
                 input_bytes={f"in{k}": size for k in range(len(digs))}))
+        # sprinkle depends_on edges onto later units (parents always earlier
+        # in admission order, so the random DAG is acyclic by construction;
+        # an excluded parent exercises the absent-parent-is-satisfied rule)
+        for i in range(1, len(units)):
+            ps = draw(st.lists(st.integers(0, i - 1), max_size=2,
+                               unique=True))
+            units[i].depends_on = [units[p].job_id for p in ps]
         excluded = [Exclusion(f"s{draw(st.integers(0, 9)):02d}", "01", "x")
                     for _ in range(draw(st.integers(0, 3)))]
         cohorts.append(Cohort(f"ds{c}", "p", "pd", units, excluded))
@@ -157,10 +197,11 @@ def _cohorts_and_summaries(draw):
 def test_campaign_plan_exactly_once_no_excluded_byte_replayable(case):
     """Campaign-planner invariant: for arbitrary cohorts and summary states,
     every admitted unit is assigned to exactly one shard, a unit its cohort
-    excluded is never assigned, and replanning — in memory and through the
-    serialized campaign.json — is byte-identical (the admission-time twin of
-    the executor invariant below; body shared with the deterministic grid in
-    test_campaign.py)."""
+    excluded is never assigned, replanning — in memory and through the
+    serialized campaign.json — is byte-identical, and a DAG child whose only
+    warmth is its parents' predicted outputs is producer-placed onto the
+    parents' node (the admission-time twin of the executor invariant below;
+    body shared with the deterministic grid in test_campaign.py)."""
     from campaign_invariant import check_campaign_invariant
     cohorts, summaries, throttle, status, max_shard = case
     check_campaign_invariant(cohorts, summaries, throttle=throttle,
