@@ -1,0 +1,162 @@
+"""Coordinator crash-recovery: time-to-recover, time-to-resume, wasted work.
+
+The journal (``repro.dist.journal``) exists so a coordinator crash costs a
+campaign seconds, not the run — this bench puts a number on "seconds" and
+gates the safety half. One journaled rpc-transport run over ``N_UNITS``
+units and four worker nodes; a harness thread hard-kills and recovers the
+coordinator (``ClusterRunner.restart_coordinator``) twice, at ~25% and ~50%
+progress. Measured:
+
+* ``recovery_recover_s`` — replaying snapshot + WAL tail into a fresh
+  :class:`~repro.dist.queue.WorkQueue` (max over the restarts: the worst
+  interruption an operator would see);
+* ``recovery_downtime_s`` — crash to new server accepting (recover + rebind);
+* ``recovery_resume_s`` — crash to the first *new* completion committed on
+  the recovered incarnation: the workers' reconnect + re-register latency
+  rides on top of replay here;
+* ``recovery_wasted_units`` — duplicate executions (total results minus
+  unit count): work the crash forced the cluster to redo. Leases granted a
+  TTL of grace at recovery keep this near zero; it is reported, not gated,
+  because a lease that genuinely straddles the kill is *supposed* to re-run.
+
+Acceptance gate (CI): ``recovery_lost_units`` must be exactly 0 — every
+unit ends with a committed status and an ok provenance on disk after two
+coordinator deaths — and at least one restart must actually have happened.
+Gates fail after the JSON lands, so the artifact always shows the numbers
+the failure is about. Writes ``benchmarks/out/recovery.json``
+(``REPRO_BENCH_JSON`` overrides).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import threading
+import time
+from pathlib import Path
+
+from ._pin import run_pinned
+
+N_SUBJECTS = 12
+SESSIONS = 2                        # 24 units
+SHAPE = (48, 48, 48)
+PIPELINE = "bias_correct"
+NODES = 4
+RESTARTS_AT = (0.25, 0.50)          # progress fractions to kill at
+
+_INPROC_FLAG = "REPRO_RECOVERY_BENCH_INPROC"
+_JSON_OUT = Path(__file__).resolve().parent / "out" / "recovery.json"
+
+
+def _run_inproc():
+    from repro.core import (Provenance, builtin_pipelines,
+                            query_available_work, synthesize_dataset)
+    from repro.dist import ClusterRunner
+
+    rows = []
+    report: dict = {"units": N_SUBJECTS * SESSIONS, "nodes": NODES,
+                    "restarts_at": list(RESTARTS_AT)}
+    with tempfile.TemporaryDirectory() as td:
+        td = Path(td)
+        ds = synthesize_dataset(td / "ds", "recbench",
+                                n_subjects=N_SUBJECTS,
+                                sessions_per_subject=SESSIONS, shape=SHAPE)
+        pipe = builtin_pipelines()[PIPELINE]
+        units, _ = query_available_work(ds, pipe)
+        runner = ClusterRunner(
+            pipe, ds.root, nodes=NODES, transport="rpc",
+            lease_ttl_s=2.0, hb_interval_s=0.1, poll_s=0.02,
+            straggler_factor=100.0, journal_dir=td / "journal")
+
+        restarts = []
+
+        def harass():
+            for frac in RESTARTS_AT:
+                want = max(1, int(len(units) * frac))
+                deadline = time.monotonic() + 60
+                while time.monotonic() < deadline:
+                    q = runner.queue
+                    if (q is not None and runner.server is not None
+                            and len(q.done_status()) >= want):
+                        break
+                    time.sleep(0.02)
+                done_before = len(runner.queue.done_status())
+                t_kill = time.monotonic()
+                info = runner.restart_coordinator()
+                if info is None:
+                    return               # run finished first: stand down
+                # resume = first completion the *new* incarnation commits
+                q = runner.queue
+                while (len(q.done_status()) <= done_before
+                       and time.monotonic() - t_kill < 60):
+                    time.sleep(0.01)
+                info["resume_s"] = time.monotonic() - t_kill
+                restarts.append(info)
+                time.sleep(0.3)
+
+        h = threading.Thread(target=harass, daemon=True)
+        t0 = time.monotonic()
+        h.start()
+        results = runner.run(units)
+        wall_s = time.monotonic() - t0
+        h.join(timeout=10)
+
+        committed = [r for r in results if r.status != "speculative"]
+        ok = [r for r in committed if r.status == "ok"]
+        provs_ok = sum(
+            1 for u in units
+            if (p := Provenance.load(Path(u.out_dir))) is not None
+            and p.status == "ok")
+        lost = len(units) - len(committed)
+        wasted = len(results) - len(units)
+
+        rows.append(("recovery_restarts", len(restarts),
+                     "coordinator kills actually injected"))
+        if restarts:
+            rows.append(("recovery_recover_s",
+                         round(max(r["recover_s"] for r in restarts), 4),
+                         "max WAL replay -> live WorkQueue"))
+            rows.append(("recovery_downtime_s",
+                         round(max(r["total_s"] for r in restarts), 4),
+                         "max crash -> new server accepting"))
+            rows.append(("recovery_resume_s",
+                         round(max(r["resume_s"] for r in restarts), 4),
+                         "max crash -> first new completion"))
+        rows.append(("recovery_wasted_units", wasted,
+                     "duplicate executions forced by the kills"))
+        rows.append(("recovery_lost_units", lost,
+                     "units without a committed result (gate: 0)"))
+        rows.append(("recovery_wall_s", round(wall_s, 3),
+                     f"{len(units)} units, {len(restarts)} mid-run kills"))
+        report["restarts"] = restarts
+        report["ok_results"] = len(ok)
+        report["ok_provenances"] = provs_ok
+
+    out = Path(os.environ.get("REPRO_BENCH_JSON", _JSON_OUT))
+    out.parent.mkdir(parents=True, exist_ok=True)
+    report["rows"] = [[n, v, d] for n, v, d in rows]
+    out.write_text(json.dumps(report, indent=1))
+    # gates fail *after* the JSON lands
+    gate_errors = []
+    if lost != 0:
+        gate_errors.append(f"{lost} unit(s) lost across coordinator kills")
+    if provs_ok != len(units):
+        gate_errors.append(f"{len(units) - provs_ok} unit(s) without an ok "
+                           f"provenance on disk")
+    if not restarts:
+        gate_errors.append("no coordinator restart was injected (run "
+                           "finished too fast to measure recovery)")
+    if gate_errors:
+        raise RuntimeError("; ".join(gate_errors))
+    return rows
+
+
+def run():
+    """Benchmark entry (benchmarks.run): re-exec pinned — see ``_pin``."""
+    return run_pinned("benchmarks.recovery", "recovery_",
+                      _INPROC_FLAG, _run_inproc, timeout=900)
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(",".join(str(c) for c in row))

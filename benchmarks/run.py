@@ -13,7 +13,7 @@ def main() -> None:
                                                     exist_ok=True)
     from . import (campaign_plan, cluster_throughput, executor_throughput,
                    kernel_bench, locality_throughput, peer_fabric,
-                   pipeline_throughput, rpc_throughput, table1_cost,
+                   pipeline_throughput, recovery, rpc_throughput, table1_cost,
                    train_step_bench)
     mods = [("table1_cost", table1_cost), ("pipeline_throughput", pipeline_throughput),
             ("executor_throughput", executor_throughput),
@@ -22,6 +22,7 @@ def main() -> None:
             ("locality_throughput", locality_throughput),
             ("peer_fabric", peer_fabric),
             ("campaign_plan", campaign_plan),
+            ("recovery", recovery),
             ("train_step", train_step_bench), ("kernels", kernel_bench)]
     print("name,value,derived")
     failed = 0

@@ -103,35 +103,47 @@ def query_available_work(manifest: DatasetManifest, pipeline: Pipeline, *,
     return work, excluded
 
 
-def dump_units(units: List[WorkUnit], path: Path) -> Path:
-    """Serialize a unit list to the units-JSON artifact every execution path
-    shares (SLURM array tasks, ``repro.dist.rpc serve``, campaign shards).
-    Full-fidelity: the data-plane fields (``input_digests``/``input_bytes``)
-    travel too, so a queue built from the file schedules locality-aware.
-
-    ``depends_on`` is written only when non-empty. Independent units keep
-    the exact pre-DAG shape, so an old ``load_units`` still accepts them;
-    a DAG unit fed to an old coordinator fails its ``WorkUnit(**u)`` with
-    an unexpected-keyword ``TypeError`` instead of silently running
-    children before parents (version-skew fail-soft, docs/cluster.md)."""
-    path = Path(path)
-    path.parent.mkdir(parents=True, exist_ok=True)
+def units_to_rows(units: List[WorkUnit]) -> List[dict]:
+    """The JSON-row shape of a unit list — the one serialization every
+    durable artifact shares (units JSON files, campaign shards, the
+    coordinator journal's snapshot). ``depends_on`` is written only when
+    non-empty: independent units keep the exact pre-DAG shape, so an old
+    ``load_units`` still accepts them; a DAG unit fed to an old coordinator
+    fails its ``WorkUnit(**u)`` with an unexpected-keyword ``TypeError``
+    instead of silently running children before parents (version-skew
+    fail-soft, docs/cluster.md)."""
     rows = []
     for u in units:
         d = dataclasses.asdict(u)
         if not d.get("depends_on"):
             d.pop("depends_on", None)
         rows.append(d)
-    path.write_text(json.dumps(rows, indent=1))
+    return rows
+
+
+def units_from_rows(rows: List[dict]) -> List[WorkUnit]:
+    """Inverse of :func:`units_to_rows` (missing digest fields —
+    pre-locality rows — default empty: locality-blind, never broken; a
+    missing ``depends_on`` key — pre-DAG rows — loads as an independent
+    unit)."""
+    return [WorkUnit(**u) for u in rows]
+
+
+def dump_units(units: List[WorkUnit], path: Path) -> Path:
+    """Serialize a unit list to the units-JSON artifact every execution path
+    shares (SLURM array tasks, ``repro.dist.rpc serve``, campaign shards).
+    Full-fidelity: the data-plane fields (``input_digests``/``input_bytes``)
+    travel too, so a queue built from the file schedules locality-aware."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(units_to_rows(units), indent=1))
     return path
 
 
 def load_units(path: Path) -> List[WorkUnit]:
     """Reload a :func:`dump_units` artifact into :class:`WorkUnit` objects
-    identical to the originals (missing digest fields — pre-locality files —
-    default empty: locality-blind, never broken; a missing ``depends_on``
-    key — pre-DAG files — loads as an independent unit)."""
-    return [WorkUnit(**u) for u in json.loads(Path(path).read_text())]
+    identical to the originals."""
+    return units_from_rows(json.loads(Path(path).read_text()))
 
 
 def write_exclusion_csv(excluded: List[Exclusion], path: Path):

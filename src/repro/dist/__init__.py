@@ -18,7 +18,8 @@ from .sharding import (Rules, attn_shard_choice, constrain, constrain_residual,
 __all__ = [
     "ClusterRunner", "ClusterStats", "Node", "Lease", "WorkQueue",
     "DigestSummary", "InputCache", "cache_from_env", "QueueClient",
-    "QueueServer", "BlobServer", "PeerFabric", "fetch_blob", "run_worker",
+    "QueueServer", "Journal", "JournalCorrupt", "ChaosProxy",
+    "BlobServer", "PeerFabric", "fetch_blob", "run_worker",
     "WarmSetIndex", "best_node", "best_peers", "unit_local_bytes",
     "harvest_summary", "load_summary_file", "save_summary_file",
     "summaries_from_cache_dirs",
@@ -29,9 +30,16 @@ __all__ = [
 
 
 def __getattr__(name):
-    # rpc is loaded lazily so `python -m repro.dist.rpc` (the worker/server
-    # CLI) doesn't trip runpy's found-in-sys.modules warning
+    # rpc/journal are loaded lazily so `python -m repro.dist.rpc` and
+    # `python -m repro.dist.journal` (the CLIs) don't trip runpy's
+    # found-in-sys.modules warning
     if name in ("QueueClient", "QueueServer"):
         from . import rpc
         return getattr(rpc, name)
+    if name in ("Journal", "JournalCorrupt"):
+        from . import journal
+        return getattr(journal, name)
+    if name == "ChaosProxy":
+        from .faults import ChaosProxy
+        return ChaosProxy
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

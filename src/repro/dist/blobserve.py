@@ -39,6 +39,7 @@ import json
 import socket
 import socketserver
 import threading
+import time
 from typing import Callable, Dict, List, Optional, Tuple
 
 # Runbook knob (docs/operating.md): "host:port" this worker's blob server
@@ -285,17 +286,23 @@ class PeerFabric:
 
     def __init__(self, locate: Callable[[List[str]], Dict[str, List[str]]],
                  *, self_addr: Optional[str] = None, timeout_s: float = 5.0,
-                 max_peers: int = 3):
+                 max_peers: int = 3, quarantine_s: float = 5.0):
         self.locate = locate
         self.self_addr = self_addr
         self.timeout_s = float(timeout_s)
         self.max_peers = int(max_peers)
+        # circuit breaker: a peer whose *connection* failed is skipped for
+        # quarantine_s instead of paying a doomed dial (and its timeout) on
+        # every subsequent miss — then retried, so a restarted peer rejoins
+        self.quarantine_s = float(quarantine_s)
+        self._quarantine: Dict[str, float] = {}    # addr -> retry-at (mono)
         self._lock = threading.Lock()
         self._disabled = False
         self._conns: Dict[str, _BlobConn] = {}
         self._counters = {"peer_false_positives": 0, "peer_dead": 0,
                           "peer_digest_mismatches": 0,
-                          "peer_locate_failures": 0}
+                          "peer_locate_failures": 0,
+                          "peer_quarantine_skips": 0}
 
     def _bump(self, key: str):
         with self._lock:
@@ -330,6 +337,25 @@ class PeerFabric:
                 del self._conns[addr]
         conn.close()
 
+    # -- quarantine circuit breaker -----------------------------------------
+    def _quarantine_peer(self, addr: str):
+        if self.quarantine_s <= 0:
+            return
+        with self._lock:
+            self._quarantine[addr] = time.monotonic() + self.quarantine_s
+
+    def _quarantined(self, addr: str) -> bool:
+        """True while ``addr`` is inside its quarantine window. Expiry
+        clears the entry, so the next fetch re-dials (half-open probe)."""
+        with self._lock:
+            until = self._quarantine.get(addr)
+            if until is None:
+                return False
+            if time.monotonic() >= until:
+                del self._quarantine[addr]
+                return False
+            return True
+
     def close(self):
         """Close pooled peer connections (worker shutdown)."""
         with self._lock:
@@ -355,6 +381,9 @@ class PeerFabric:
         for addr in list(located.get(digest) or [])[:self.max_peers]:
             if not isinstance(addr, str) or addr == self.self_addr:
                 continue
+            if self._quarantined(addr):
+                self._bump("peer_quarantine_skips")
+                continue
             conn = None
             try:
                 conn = self._conn_for(addr)
@@ -367,6 +396,7 @@ class PeerFabric:
                 if conn is not None:
                     self._drop(addr, conn)     # stream state is unknown
                 self._bump("peer_dead")
+                self._quarantine_peer(addr)
                 continue
             if hashlib.sha256(data).hexdigest() != digest:
                 # corrupted body or a lying peer: the receiving-side

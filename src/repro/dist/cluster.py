@@ -103,7 +103,8 @@ class Node:
 
     def __init__(self, node_id: str, queue: WorkQueue, pipeline,
                  data_root: Path,
-                 record: Callable[[int, UnitResult, Lease], None], *,
+                 record: Optional[Callable[[int, UnitResult, Lease],
+                                           None]] = None, *,
                  prefetch: int = 1, max_retries: int = 2,
                  backoff_s: float = 0.05,
                  fault_hook: Optional[Callable[[WorkUnit, int], None]] = None,
@@ -137,6 +138,13 @@ class Node:
         # sync cursor in, so the loop doesn't re-send an identical full push
         self._summary_cursor = summary_cursor or 0
         self._summary_pushed = summary_cursor is not None
+        self._fabric_announced = False
+        # reconnect-aware transports tell us when the coordinator was
+        # replaced: everything we pushed (summary, blob addr) died with the
+        # old incarnation, so flag both for a re-push on the next heartbeat
+        hook = getattr(queue, "add_restart_hook", None)
+        if hook is not None:
+            hook(self._on_coordinator_restart)
         self.killed = threading.Event()
         self.processed = 0
         self.lease_lost = 0                  # renewals rejected (stale epoch)
@@ -201,17 +209,25 @@ class Node:
         except RuntimeError:
             pass                           # pre-summary coordinator: blind
 
+    def _on_coordinator_restart(self):
+        """Restart-hook body (fires on whichever thread detected the new
+        incarnation): only flips flags — the heartbeat loop does the actual
+        re-pushing on its next beat, off the detecting thread's hot path."""
+        self._summary_pushed = False
+        self._fabric_announced = False
+
     def _announce_fabric(self):
         """Advertise this host's blob server to the coordinator (a register
         refresh carrying ``blob_addr``), so locate_blobs can route peers
         here. Best-effort with the same downgrade discipline as summaries:
         an old coordinator (TypeError on the param) leaves this host
         fabric-invisible — it still fetches from peers, never serves."""
-        if self.blob_server is None:
+        if self.blob_server is None or self._fabric_announced:
             return
         try:
             self.queue.register(self.node_id,
                                 blob_addr=self.blob_server.advertise)
+            self._fabric_announced = True
         except (TypeError, RuntimeError, ConnectionError):
             pass                       # pre-fabric coordinator: unadvertised
 
@@ -235,6 +251,12 @@ class Node:
         arbitration makes the zombie write harmless."""
         while not self.killed.is_set():
             try:
+                # no-ops while already pushed/announced; after a detected
+                # coordinator restart the flags are down and the new
+                # incarnation gets the full summary + blob addr within one
+                # beat, without manual intervention
+                self._push_summary()
+                self._announce_fabric()
                 self.queue.heartbeat(self.node_id,
                                      summary_delta=self._summary_delta())
                 if self.renew:
@@ -277,6 +299,21 @@ class Node:
 
     def _safe_load(self, unit: WorkUnit):
         return safe_load_unit_inputs(unit, self.data_root, cache=self.cache)
+
+    def _report(self, idx: int, res: UnitResult, lease: Lease):
+        """Commit a finished unit through this node's *own* queue handle.
+
+        Over rpc that means the completion travels the node's socket — the
+        one that survives (reconnects across) a coordinator restart — rather
+        than a coordinator-side closure holding a reference to a queue
+        object that may since have been replaced by recovery. The optional
+        ``record`` callback is pure local bookkeeping (provenance fold,
+        per-node tallies) and runs after the commit is accepted."""
+        self.queue.complete(idx, lease.node_id, res.status,
+                            speculative=lease.speculative,
+                            meta=result_meta(res))
+        if self.record is not None:
+            self.record(idx, res, lease)
 
     def _work(self):
         inhand: deque = deque()            # [(unit, lease, load_future|None)]
@@ -321,7 +358,7 @@ class Node:
                     self.processed += 1
                     with self._held_lock:
                         self._held.discard((idx, lease.epoch))
-                    self.record(idx, UnitResult(
+                    self._report(idx, UnitResult(
                         unit, "failed", 0.0, attempts=1,
                         error=f"no pipeline named {unit.pipeline!r} "
                               f"available on node {self.node_id}"), lease)
@@ -352,7 +389,7 @@ class Node:
                 self.processed += 1
                 with self._held_lock:
                     self._held.discard((idx, lease.epoch))
-                self.record(idx, res, lease)
+                self._report(idx, res, lease)
                 if self.die_after is not None and self.processed >= self.die_after:
                     self.kill()
         except Exception:  # noqa: BLE001 — a crashed node is a dead node
@@ -418,7 +455,9 @@ class ClusterRunner:
                  cache_bytes: Optional[int] = None,
                  cache_per_node: bool = False, peer_fabric: bool = False,
                  locality: bool = True, partition: str = "round_robin",
-                 plan=None):
+                 plan=None, journal_dir: Optional[Path] = None,
+                 client_kwargs: Optional[Dict] = None,
+                 client_dial: Optional[Callable] = None):
         if nodes < 1:
             raise ValueError("need at least one node")
         if transport not in ("local", "rpc"):
@@ -461,9 +500,22 @@ class ClusterRunner:
         # the warm placement the planner computed instead of rediscovering
         # it grant by grant (plan implies partition="plan" in WorkQueue)
         self.plan = plan
+        # journal_dir turns on the coordinator write-ahead log: every queue
+        # mutation is journaled there, and restart_coordinator() (or a fresh
+        # process pointed at the same dir) can rebuild the queue mid-run
+        self.journal_dir = Path(journal_dir) if journal_dir else None
+        # client_kwargs feed every node's QueueClient (e.g. {"binary": False}
+        # pins JSON framing; reconnect knobs); client_dial rewrites the
+        # upstream (host, port) into the address clients actually dial —
+        # the hook a fault-injection proxy routes through
+        self.client_kwargs = dict(client_kwargs or {})
+        self.client_dial = client_dial
         self.stats: Optional[ClusterStats] = None
         self.queue: Optional[WorkQueue] = None
         self.server = None                   # QueueServer once run() serves
+        self._journal = None
+        self._ctl_lock = threading.Lock()    # guards restart vs shutdown
+        self._stopping = False
 
     def node_ids(self) -> List[str]:
         return [f"node-{i}" for i in range(self.n_nodes)]
@@ -481,10 +533,16 @@ class ClusterRunner:
         if not units:
             return []
         node_ids = self.node_ids()
+        journal = None
+        if self.journal_dir is not None:
+            from .journal import Journal
+            journal = Journal(self.journal_dir)
         queue = WorkQueue(units, node_ids, lease_ttl_s=self.lease_ttl_s,
                           locality=self.locality, partition=self.partition,
-                          plan=self.plan)
+                          plan=self.plan, journal=journal)
         self.queue = queue
+        self._journal = journal
+        self._stopping = False
         serving = self.transport == "rpc" or self.serve_addr is not None
         clients = []
         if serving:
@@ -498,6 +556,10 @@ class ClusterRunner:
         rec_lock = threading.Lock()
 
         def record(idx: int, res: UnitResult, lease: Lease):
+            # pure coordinator-side bookkeeping: the committing complete()
+            # already travelled the node's own queue handle (see
+            # Node._report), so this closure never touches the queue — it
+            # must stay valid across a mid-run coordinator restart
             with rec_lock:
                 if lease.speculative or idx in primaries:
                     extras.append((idx, res))
@@ -505,11 +567,6 @@ class ClusterRunner:
                     primaries[idx] = res
                 if res.status == "ok":
                     detector.observe(res.seconds)
-            # local nodes report straight to the coordinator's queue object
-            # (meta included, so snapshot-side consumers see every node alike)
-            queue.complete(idx, lease.node_id, res.status,
-                           speculative=lease.speculative,
-                           meta=result_meta(res))
 
         def node_queue():
             """The queue handle a local node drives: the in-process object,
@@ -520,7 +577,10 @@ class ClusterRunner:
             host, port = self.server.address
             if host in ("0.0.0.0", "::", ""):    # wildcard bind: dial loopback
                 host = "127.0.0.1"
-            client = QueueClient((host, port))
+            dial = (host, port)
+            if self.client_dial is not None:
+                dial = self.client_dial(dial)
+            client = QueueClient(dial, **self.client_kwargs)
             clients.append(client)
             return client
 
@@ -556,18 +616,23 @@ class ClusterRunner:
         for nd in nodes:
             nd.start()
         try:
-            while not queue.finished():
+            # the loop re-reads self.queue every tick: restart_coordinator()
+            # swaps in the recovered queue object mid-run, and monitoring
+            # must follow the live incarnation (a stray call against the old
+            # object is harmless — its journal is closed, appends dropped)
+            while not (q := self.queue).finished():
                 time.sleep(self.poll_s)
-                queue.reap()
-                alive = set(queue.alive_nodes())
-                if not alive and not queue.finished():
+                q = self.queue
+                q.reap()
+                alive = set(q.alive_nodes())
+                if not alive and not q.finished():
                     raise RuntimeError(
-                        f"all nodes dead with {queue.pending()} units pending")
+                        f"all nodes dead with {q.pending()} units pending")
                 # fold remote ok durations into the straggler median so
                 # cross-node speculation sees the whole cluster's pace —
                 # incremental (cursor into the retirement log), so a tick's
                 # cost tracks new completions, not the whole history
-                for m in queue.primary_log(log_cursor):
+                for m in q.primary_log(log_cursor):
                     log_cursor += 1
                     if m["node_id"] not in local_ids and m["status"] == "ok":
                         detector.observe(m.get("seconds", 0.0))
@@ -576,12 +641,14 @@ class ClusterRunner:
                 # the most of the unit's input bytes (least-loaded when no
                 # summary covers it), so the twin starts from warm local disk
                 now = time.time()
-                for idx, t0, holder in queue.running():
+                for idx, t0, holder in q.running():
                     if idx in speculated or not detector.is_straggler(now - t0):
                         continue
-                    if queue.speculate(idx) is not None:
+                    if q.speculate(idx) is not None:
                         speculated.add(idx)
         finally:
+            with self._ctl_lock:
+                self._stopping = True        # fence out restart_coordinator
             for nd in nodes:
                 nd.kill()
             for nd in nodes:
@@ -590,8 +657,13 @@ class ClusterRunner:
                 client.close()
             if self.server is not None:
                 self.server.stop()
+            if self._journal is not None:
+                self._journal.close()
         # units finished by worker processes (never seen by record()) come
-        # back through the queue's result metadata
+        # back through the queue's result metadata — read from the *final*
+        # queue incarnation, which holds the whole run's state whether or
+        # not the coordinator was restarted along the way
+        queue = self.queue
         snap = queue.results_snapshot()
         remote_primaries = {idx: m for idx, m in snap["primaries"].items()
                             if m["node_id"] not in local_ids}
@@ -660,6 +732,48 @@ class ClusterRunner:
         return dedupe_results([primaries[idx] for idx in order],
                               [(pos[idx], res) for idx, res in pending_extras])
 
+    def restart_coordinator(self) -> Optional[Dict[str, float]]:
+        """Kill the live coordinator mid-run and bring up a recovered one on
+        the same port — the crash-recovery drill, callable from any thread
+        while :meth:`run` is in flight.
+
+        Requires ``transport="rpc"`` (clients must be able to redial; local
+        nodes hold direct object references that recovery can't swap) and a
+        ``journal_dir``. The sequence is exactly what a fresh process
+        pointed at the journal would do: hard-crash the server (no drain —
+        this simulates a dying host, in-flight frames are torn),
+        close the old journal (fencing any zombie appends), replay
+        snapshot + WAL tail into a new :class:`WorkQueue`, and rebind a
+        :class:`~repro.dist.rpc.QueueServer` on the *same* host:port so
+        reconnecting clients land on the new incarnation without
+        re-resolution. Returns timing/recovery facts, or ``None`` when the
+        run is already shutting down (the race is expected under chaos
+        harnesses — callers treat ``None`` as "too late, stand down")."""
+        if self.transport != "rpc":
+            raise ValueError("restart_coordinator needs transport='rpc'")
+        if self.journal_dir is None:
+            raise ValueError("restart_coordinator needs a journal_dir")
+        from .journal import Journal
+        from .rpc import QueueServer
+        with self._ctl_lock:
+            if self._stopping or self.server is None or self._journal is None:
+                return None
+            t0 = time.monotonic()
+            host, port = self.server.address
+            self.server.crash()
+            self._journal.close()
+            journal = Journal(self.journal_dir)
+            q = WorkQueue.recover(journal, lease_ttl_s=self.lease_ttl_s,
+                                  locality=self.locality)
+            t_recovered = time.monotonic()
+            self.queue = q
+            self._journal = journal
+            self.server = QueueServer(q, host, port).start()
+            return {"recover_s": t_recovered - t0,
+                    "total_s": time.monotonic() - t0,
+                    "done": float(len(q.done_status())),
+                    "pending": float(q.pending())}
+
 
 def run_worker(addr, pipeline, data_root: Path, node_id: str, *,
                prefetch: int = 1, max_retries: int = 2,
@@ -721,12 +835,10 @@ def run_worker(addr, pipeline, data_root: Path, node_id: str, *,
                 f"queue at {addr} rejected node id {node_id!r} "
                 "(reaped earlier? rejoin under a fresh id)")
 
-        def record(idx: int, res: UnitResult, lease: Lease):
-            client.complete(idx, lease.node_id, res.status,
-                            speculative=lease.speculative,
-                            meta=result_meta(res))
-
-        node = Node(node_id, client, pipeline, Path(data_root), record,
+        # no record callback: the Node commits every completion through its
+        # own client handle (Node._report), which is also what lets a
+        # reconnecting worker keep committing across a coordinator restart
+        node = Node(node_id, client, pipeline, Path(data_root),
                     prefetch=prefetch, max_retries=max_retries,
                     backoff_s=backoff_s, hb_interval_s=hb_interval_s,
                     poll_s=poll_s, cache=cache, summary_cursor=cursor,

@@ -26,7 +26,8 @@ production, plain sets in tests).
 """
 from __future__ import annotations
 
-from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+from typing import (Container, Dict, Iterable, List, Mapping, Optional,
+                    Sequence, Tuple)
 
 
 def unit_local_bytes(unit, summary) -> int:
@@ -104,9 +105,16 @@ class WarmSetIndex:
     correctness stays score-blind everywhere.
     """
 
-    def __init__(self, units: Sequence[object]):
+    def __init__(self, units: Sequence[object], *,
+                 skip: Container[int] = ()):
+        """``skip`` excludes unit indices from the posting lists — journal
+        recovery rebuilds the index over only still-placeable units, so a
+        mostly-finished campaign's restarted coordinator doesn't carry (or
+        score against) postings for work that already retired."""
         self._postings: Dict[str, List[Tuple[int, int]]] = {}
         for i, u in enumerate(units):
+            if i in skip:
+                continue
             digests = getattr(u, "input_digests", None)
             if not digests:
                 continue

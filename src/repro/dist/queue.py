@@ -84,7 +84,7 @@ from collections import deque
 from pathlib import PurePath
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
-from ..core.query import WorkUnit
+from ..core.query import WorkUnit, units_from_rows
 from .cache import SUMMARY_WIRE_VERSION, DigestSummary
 # best_node / unit_local_bytes are re-exported here on purpose even though
 # grants now read the WarmSetIndex: the shared-scorer contract (campaign
@@ -133,7 +133,7 @@ class WorkQueue:
                  node_ids: Sequence[str] = (), *,
                  lease_ttl_s: float = 2.0, now=time.time,
                  locality: bool = True, partition: str = "round_robin",
-                 plan=None):
+                 plan=None, journal=None):
         if plan is not None:
             partition = "plan"
         if partition not in ("round_robin", "backlog", "plan"):
@@ -246,6 +246,20 @@ class WorkQueue:
         self._primary_log: List[dict] = []           # same entries, in order
         self._pending_meta: Dict[int, dict] = {}     # deferred primary failure
         self._dup_meta: List[dict] = []
+        # durability (docs/cluster.md): with a Journal attached, every
+        # mutation that changes what a restarted coordinator must know —
+        # grants, completions, renewals, node joins, deaths — appends one
+        # record under the lock it already holds, and compaction snapshots
+        # the mutable state whenever the WAL grows past the journal's
+        # threshold. _replaying gates the append sites while recover()
+        # re-drives the same code paths from the log.
+        self._journal = None
+        self._replaying = False
+        if journal is not None:
+            journal.write_units(self.units)
+            with self._lock:
+                self._journal = journal
+                journal.compact(self._snapshot_state_locked())
 
     def _seed_from_plan(self, plan):
         """Deal units into per-node deques per an admission-time campaign
@@ -390,6 +404,220 @@ class WorkQueue:
                 return idx
         return None
 
+    # -- durability (write-ahead journal) ------------------------------------
+    # Callers hold the lock. The journal sees exactly the mutations a
+    # restart must reconstruct; placement state (deques, backlog order,
+    # summaries, the warm-set index) is deliberately NOT journaled —
+    # recovery rebuilds it from scratch and reconnecting workers re-push
+    # their summaries, so the log stays small and placement stays advisory.
+
+    def _journal_append(self, rec: dict):
+        j = self._journal
+        if j is None or self._replaying:
+            return
+        j.append(rec)
+
+    def _journal_maybe_compact(self):
+        """Compaction runs only at public-method boundaries, never inside
+        :meth:`_journal_append`: an append can precede its mutation (a
+        death record lands before the leases are torn down), and a snapshot
+        taken mid-mutation would claim the record's seq without containing
+        its effect — replay would then skip the record and lose the event."""
+        j = self._journal
+        if j is not None and not self._replaying and j.should_compact():
+            j.compact(self._snapshot_state_locked())
+
+    def _snapshot_state_locked(self) -> dict:
+        """The mutable-state snapshot compaction writes: everything a
+        recovery needs that isn't the (immutable) unit list. JSON object
+        keys must be strings, so int-keyed maps are stringified here and
+        re-intified in :meth:`recover`."""
+        leases = [[l.unit_idx, l.node_id, l.epoch,
+                   1 if l.speculative else 0, l.local_bytes]
+                  for l in list(self._leases.values())
+                  + list(self._spec.values())]
+        return {
+            "nodes": list(self._queues),
+            "dead": sorted(self._dead),
+            "blob_addrs": dict(self._blob_addrs),
+            "epochs": {str(i): e for i, e in self._epochs.items() if e},
+            "done": {str(i): s for i, s in self._done.items()},
+            "leases": leases,
+            "failed_pending": {str(i): s
+                               for i, s in self._failed_pending.items()},
+            "pending_meta": {str(i): dict(m)
+                             for i, m in self._pending_meta.items()},
+            "primary_log": [dict(m) for m in self._primary_log],
+            "dup_meta": [dict(m) for m in self._dup_meta],
+            "requeues": list(self.requeues),
+            "steals": dict(self.steals),
+            "renew_rejections": self.renew_rejections,
+        }
+
+    def _apply_record(self, rec: dict):
+        """Re-drive one WAL record during recovery (``_replaying`` is set,
+        nothing is re-journaled). Completion and death records go through
+        the real code paths so retirement/DAG-release/dup arbitration
+        replay exactly as they ran; grants apply minimally (epoch + lease)
+        because the normalization pass at the end of :meth:`recover`
+        rebuilds all placement state anyway. Unknown record types are
+        skipped — an old coordinator replaying a newer journal degrades to
+        ignoring what it can't parse rather than crashing."""
+        t = rec.get("t")
+        try:
+            if t == "register":
+                n = str(rec["n"])
+                if n in self._dead:
+                    return
+                if n not in self._queues:
+                    self._queues[n] = deque()
+                    self._spec_queues[n] = deque()
+                    self.steals.setdefault(n, 0)
+                    self._heartbeats[n] = self._now()
+                b = rec.get("b")
+                if b:
+                    self._blob_addrs[n] = str(b)
+            elif t == "grant":
+                i, n, e = int(rec["i"]), str(rec["n"]), int(rec["e"])
+                if i in self._done or e <= self._epochs.get(i, 0) \
+                        or n not in self._queues or n in self._dead:
+                    return
+                self._epochs[i] = e
+                spec = bool(rec.get("s"))
+                lease = Lease(i, n, e, self._now(), speculative=spec,
+                              local_bytes=int(rec.get("lb", 0)))
+                (self._spec if spec else self._leases)[i] = lease
+            elif t == "complete":
+                m = rec.get("m")
+                self._complete_locked(
+                    int(rec["i"]), str(rec["n"]), str(rec["st"]),
+                    speculative=bool(rec.get("s")),
+                    meta=m if isinstance(m, dict) else None)
+            elif t == "dead":
+                self._declare_dead(str(rec["n"]))
+            elif t == "renew":
+                pass    # pure liveness: recovery re-stamps every clock
+        except (KeyError, TypeError, ValueError):
+            pass        # a malformed-but-CRC-valid record loses one event,
+            #             never the recovery
+
+    @classmethod
+    def recover(cls, journal, *, lease_ttl_s: float = 2.0, now=time.time,
+                locality: bool = True) -> "WorkQueue":
+        """Rebuild a queue from a dead coordinator's journal: replay
+        snapshot + WAL tail (torn tail truncated), then normalize.
+
+        What comes back durable: unit list, terminal statuses + result
+        metadata, DAG gates (drained to match the done set), per-unit
+        epochs, node membership incl. deaths, and in-flight leases — which
+        resolve through the ordinary epoch/reap machinery: every lease
+        restarts its TTL clock *now*, so a holder that reconnects and
+        renews keeps its lease, and one that died with the old coordinator
+        is reaped exactly like any other silent node. What is deliberately
+        rebuilt fresh rather than restored: all placement state — every
+        grantable unit returns to the backlog in admission order, spec
+        twins re-enter their node's speculative queue, and the warm-set
+        index is re-derived (summaries re-arrive as workers reconnect and
+        re-push). Duplicate post-restart completions are harmless by the
+        same arbitration that already absorbs zombies and twins."""
+        rows, state, tail, _torn = journal.replay()
+        q = cls(units_from_rows(rows), (), lease_ttl_s=lease_ttl_s,
+                now=now, locality=locality)
+        with q._lock:
+            q._replaying = True
+            st = state or {}
+            for n in st.get("nodes", []):
+                n = str(n)
+                if n not in q._queues:
+                    q._queues[n] = deque()
+                    q._spec_queues[n] = deque()
+                    q.steals.setdefault(n, 0)
+                    q._heartbeats[n] = q._now()
+            for n in st.get("dead", []):
+                q._dead.add(str(n))
+            for n, a in (st.get("blob_addrs") or {}).items():
+                if str(n) not in q._dead:
+                    q._blob_addrs[str(n)] = str(a)
+            for i, e in (st.get("epochs") or {}).items():
+                q._epochs[int(i)] = int(e)
+            # terminal statuses, then drain the DAG gates to match: an
+            # ok/skipped parent's edge is satisfied, any done unit leaves
+            # the parked set (release/cascade already happened pre-crash)
+            for i, s in (st.get("done") or {}).items():
+                q._done[int(i)] = str(s)
+            for i, s in q._done.items():
+                q._parked.pop(i, None)
+                if s in ("ok", "skipped"):
+                    for c in q._children.get(i, ()):
+                        ps = q._parents.get(c)
+                        if ps is not None:
+                            ps.discard(i)
+            for c in [c for c, ps in q._parents.items()
+                      if not ps and c not in q._done]:
+                q._parked.pop(c, None)
+            for le in st.get("leases", []):
+                try:
+                    i, n, e = int(le[0]), str(le[1]), int(le[2])
+                    spec, lb = bool(le[3]), int(le[4])
+                except (TypeError, ValueError, IndexError):
+                    continue
+                if i in q._done or n in q._dead or n not in q._queues:
+                    continue
+                lease = Lease(i, n, e, q._now(), speculative=spec,
+                              local_bytes=lb)
+                (q._spec if spec else q._leases)[i] = lease
+            for i, s in (st.get("failed_pending") or {}).items():
+                q._failed_pending[int(i)] = str(s)
+            for i, m in (st.get("pending_meta") or {}).items():
+                if isinstance(m, dict):
+                    q._pending_meta[int(i)] = dict(m)
+            for m in st.get("primary_log", []):
+                if isinstance(m, dict) and "idx" in m:
+                    q._retire_meta(int(m["idx"]), dict(m))
+            q._dup_meta.extend(dict(m) for m in st.get("dup_meta", [])
+                               if isinstance(m, dict))
+            q.requeues.extend(int(i) for i in st.get("requeues", []))
+            for n, c in (st.get("steals") or {}).items():
+                q.steals[str(n)] = int(c)
+            q.renew_rejections = int(st.get("renew_rejections", 0))
+            for rec in tail:
+                q._apply_record(rec)
+            # normalization: placement state is rebuilt from scratch.
+            # Mid-replay deque/backlog churn (requeues, DAG releases) left
+            # stale entries; clearing and re-dealing makes "grantable ⇔
+            # exactly one of backlog/lease" an invariant rather than an
+            # accident of replay order.
+            for n in q._queues:
+                q._queues[n].clear()
+                q._spec_queues[n].clear()
+            q._backlog.clear()
+            q._backlog_seq.clear()
+            q._backlog_front, q._backlog_back = 0, 1
+            for i in range(len(q.units)):
+                if i in q._done or i in q._parked or i in q._leases:
+                    continue
+                q._backlog_append(i)
+            t0 = q._now()
+            for i, l in list(q._spec.items()):
+                if i in q._done or l.node_id in q._dead:
+                    q._spec.pop(i)
+                    continue
+                q._spec_queues[l.node_id].append(i)
+                q._spec[i] = dataclasses.replace(l, granted_at=t0)
+            for i, l in list(q._leases.items()):
+                q._leases[i] = dataclasses.replace(l, granted_at=t0)
+            q._started.clear()
+            # one full TTL of grace for every surviving node to reconnect
+            # to the new incarnation before the reaper may declare it dead
+            for n in q._queues:
+                if n not in q._dead:
+                    q._heartbeats[n] = t0
+            q._warm = WarmSetIndex(q.units, skip=q._done)
+            q._replaying = False
+            q._journal = journal
+            journal.compact(q._snapshot_state_locked())
+        return q
+
     # -- locality scoring ----------------------------------------------------
     # All helpers assume the caller holds the lock. Scores are *estimates*
     # (Bloom false positives, stale summaries) and only ever shape ordering —
@@ -473,6 +701,11 @@ class WorkQueue:
         lease = Lease(idx, node_id, self._epochs[idx], self._now(),
                       speculative=speculative, local_bytes=local_bytes)
         (self._spec if speculative else self._leases)[idx] = lease
+        rec = {"t": "grant", "i": idx, "n": node_id, "e": lease.epoch,
+               "lb": local_bytes}
+        if speculative:
+            rec["s"] = 1
+        self._journal_append(rec)
         return lease
 
     def _pop_scored(self, node_id: str) -> Optional[Tuple[int, int]]:
@@ -548,7 +781,9 @@ class WorkQueue:
         until :meth:`finished`) — including for unknown node ids, so a
         transport client that skipped :meth:`register` fails soft."""
         with self._lock:
-            return self._next_unit_locked(node_id)
+            got = self._next_unit_locked(node_id)
+            self._journal_maybe_compact()
+            return got
 
     def next_units(self, node_id: str, max_units: int = 1
                    ) -> List[Tuple[WorkUnit, Lease]]:
@@ -563,6 +798,7 @@ class WorkQueue:
                 if got is None:
                     break
                 out.append(got)
+            self._journal_maybe_compact()
         return out
 
     def _fill_from_backlog(self, node_id: str):
@@ -700,6 +936,7 @@ class WorkQueue:
         with self._lock:
             self._complete_locked(idx, node_id, status,
                                   speculative=speculative, meta=meta)
+            self._journal_maybe_compact()
 
     def complete_batch(self, completions: Sequence[dict]):
         """Batched :meth:`complete`: N terminal reports under one lock
@@ -723,10 +960,20 @@ class WorkQueue:
                     idx, node_id, status,
                     speculative=bool(c.get("speculative", False)),
                     meta=meta if isinstance(meta, dict) else None)
+            self._journal_maybe_compact()
 
     def _complete_locked(self, idx: int, node_id: str, status: str, *,
                          speculative: bool = False,
                          meta: Optional[dict] = None):
+        # every report is journaled — retiring or not — so replay re-runs
+        # the exact same arbitration (twin races, zombie dups, deferred
+        # failures) the live queue ran, instead of a cleaned-up history
+        rec = {"t": "complete", "i": idx, "n": node_id, "st": status}
+        if speculative:
+            rec["s"] = 1
+        if meta is not None:
+            rec["m"] = meta
+        self._journal_append(rec)
         entry = None
         if meta is not None:
             entry = {"idx": idx, "node_id": node_id, "status": status,
@@ -804,7 +1051,9 @@ class WorkQueue:
         with self._lock:
             if summary_delta is not None:
                 self._apply_summary_wire(node_id, summary_delta)
-            return self._renew_locked(idx, node_id, epoch)
+            ok = self._renew_locked(idx, node_id, epoch)
+            self._journal_maybe_compact()
+            return ok
 
     def renew_batch(self, node_id: str, leases: Sequence[Sequence[int]],
                     summary_delta=None) -> List[bool]:
@@ -825,6 +1074,7 @@ class WorkQueue:
                     out.append(False)
                     continue
                 out.append(self._renew_locked(idx, node_id, epoch))
+            self._journal_maybe_compact()
             return out
 
     def _renew_locked(self, idx: int, node_id: str, epoch: int) -> bool:
@@ -842,6 +1092,8 @@ class WorkQueue:
         self._heartbeats[node_id] = self._now()
         renewed = dataclasses.replace(lease, granted_at=self._now())
         (self._spec if lease.speculative else self._leases)[idx] = renewed
+        self._journal_append({"t": "renew", "n": node_id, "i": idx,
+                              "e": epoch})
         return True
 
     # -- speculation --------------------------------------------------------
@@ -869,6 +1121,7 @@ class WorkQueue:
             twin = self._grant(idx, node_id, True,
                                local_bytes=self._local_bytes(idx, node_id))
             self._spec_queues[node_id].append(idx)
+            self._journal_maybe_compact()
             return twin
 
     def running(self) -> List[Tuple[int, float, str]]:
@@ -898,7 +1151,8 @@ class WorkQueue:
         with self._lock:
             if node_id in self._dead:
                 return False
-            if node_id not in self._queues:
+            fresh = node_id not in self._queues
+            if fresh:
                 self._queues[node_id] = deque()
                 self._spec_queues[node_id] = deque()
                 self.steals.setdefault(node_id, 0)
@@ -906,7 +1160,16 @@ class WorkQueue:
             if summary is not None:
                 self._apply_summary_wire(node_id, summary)
             if blob_addr:
+                addr_changed = self._blob_addrs.get(node_id) != str(blob_addr)
                 self._blob_addrs[node_id] = str(blob_addr)
+            else:
+                addr_changed = False
+            if fresh or addr_changed:
+                rec = {"t": "register", "n": node_id}
+                if node_id in self._blob_addrs:
+                    rec["b"] = self._blob_addrs[node_id]
+                self._journal_append(rec)
+            self._journal_maybe_compact()
             return True
 
     def put_summary(self, node_id: str, summary) -> bool:
@@ -935,13 +1198,18 @@ class WorkQueue:
                 self._heartbeats[node_id] = self._now()
                 if summary_delta is not None:
                     self._apply_summary_wire(node_id, summary_delta)
-                if blob_addr:
+                if blob_addr and \
+                        self._blob_addrs.get(node_id) != str(blob_addr):
                     self._blob_addrs[node_id] = str(blob_addr)
+                    self._journal_append({"t": "register", "n": node_id,
+                                          "b": str(blob_addr)})
+                    self._journal_maybe_compact()
 
     def mark_dead(self, node_id: str):
         """Explicit fail-fast path (e.g. a node's thread crashed)."""
         with self._lock:
             self._declare_dead(node_id)
+            self._journal_maybe_compact()
 
     def reap(self) -> List[int]:
         """Declare heartbeat-expired nodes dead; requeue their leased units
@@ -954,11 +1222,13 @@ class WorkQueue:
             requeued: List[int] = []
             for n in newly_dead:
                 requeued.extend(self._declare_dead(n))
+            self._journal_maybe_compact()
             return requeued
 
     def _declare_dead(self, node_id: str) -> List[int]:
         if node_id in self._dead:
             return []
+        self._journal_append({"t": "dead", "n": node_id})
         self._dead.add(node_id)
         alive = [n for n in self._queues if n not in self._dead]
         orphans: List[int] = []

@@ -50,11 +50,14 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import random
 import socket
 import socketserver
 import threading
+import time
+import uuid
 from pathlib import Path
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 from ..core.query import WorkUnit
 from .queue import Lease, WorkQueue
@@ -154,13 +157,24 @@ class _Handler(socketserver.StreamRequestHandler):
         super().setup()
         with self.server.conn_lock:                     # type: ignore[attr-defined]
             self.server.conns.add(self.connection)      # type: ignore[attr-defined]
+            self.server.handler_threads.add(            # type: ignore[attr-defined]
+                threading.current_thread())
 
     def finish(self):
         with self.server.conn_lock:                     # type: ignore[attr-defined]
             self.server.conns.discard(self.connection)  # type: ignore[attr-defined]
+            self.server.handler_threads.discard(        # type: ignore[attr-defined]
+                threading.current_thread())
         super().finish()
 
     def _reply(self, resp: dict, *, binary: bool):
+        # every response is stamped with the server's incarnation id so a
+        # reconnecting client can tell "same coordinator, transient blip"
+        # from "new incarnation, re-register and re-push state". ~20 bytes;
+        # old clients ignore the key (same posture as the "bin" tag).
+        inc = getattr(self.server, "incarnation", None)
+        if inc:
+            resp["inc"] = inc
         data = json.dumps(resp).encode()
         if binary:
             self.wfile.write(_FRAME_MAGIC
@@ -247,6 +261,10 @@ class _Server(socketserver.ThreadingTCPServer):
         super().__init__(*a, **kw)
         self.conn_lock = threading.Lock()
         self.conns: set = set()
+        self.handler_threads: set = set()
+        # fresh per server object: two QueueServers on the same port (a
+        # restart) necessarily present different ids
+        self.incarnation = uuid.uuid4().hex[:12]
 
 
 class QueueServer:
@@ -259,12 +277,15 @@ class QueueServer:
     :attr:`address` after :meth:`start`."""
 
     def __init__(self, queue: WorkQueue, host: str = "127.0.0.1",
-                 port: int = 0):
+                 port: int = 0, *, drain_s: float = 5.0):
         self.queue = queue
+        self.drain_s = float(drain_s)
         self._srv = _Server((host, port), _Handler)
         self._srv.queue = queue                          # type: ignore[attr-defined]
         self._thread = threading.Thread(
             target=self._srv.serve_forever, name="queue-server", daemon=True)
+        self._stop_lock = threading.Lock()
+        self._stopped = False
 
     @property
     def address(self) -> Tuple[str, int]:
@@ -275,15 +296,61 @@ class QueueServer:
         host, port = self.address
         return f"{host}:{port}"
 
+    @property
+    def incarnation(self) -> str:
+        """This server object's identity on the wire (stamped into every
+        response). A restarted coordinator necessarily presents a new one."""
+        return self._srv.incarnation
+
     def start(self) -> "QueueServer":
         self._thread.start()
         return self
 
     def stop(self):
+        """Graceful, idempotent shutdown: stop accepting, half-close every
+        live connection (``SHUT_RD`` — no new requests arrive, but a reply
+        already being computed still reaches its worker), join the handler
+        threads up to ``drain_s``, then force-close stragglers. Safe to call
+        twice (or concurrently with :meth:`crash`): the second call is a
+        no-op, so tests and operators can stop/restart freely without racing
+        half-written replies."""
+        with self._stop_lock:
+            if self._stopped:
+                return
+            self._stopped = True
         self._srv.shutdown()
-        # drop live worker connections too: handler threads block on
-        # readline and would otherwise outlive the server, and clients
-        # deserve a prompt ConnectionError over a silent hang
+        with self._srv.conn_lock:
+            conns = list(self._srv.conns)
+            threads = list(self._srv.handler_threads)
+        for conn in conns:
+            try:
+                conn.shutdown(socket.SHUT_RD)
+            except OSError:
+                pass
+        deadline = time.monotonic() + self.drain_s
+        for t in threads:
+            t.join(timeout=max(0.0, deadline - time.monotonic()))
+        # anything still running after the drain budget is wedged mid-call:
+        # cut it off rather than hang the operator
+        with self._srv.conn_lock:
+            conns = list(self._srv.conns)
+        for conn in conns:
+            try:
+                conn.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+        self._srv.server_close()
+
+    def crash(self):
+        """Simulated coordinator death: immediately sever every connection
+        mid-whatever-it-was-doing — no drain, no goodbye frames. Idempotent
+        like :meth:`stop`. The restart harness uses this to exercise the
+        journal-recovery path against torn replies and half-served grants."""
+        with self._stop_lock:
+            if self._stopped:
+                return
+            self._stopped = True
+        self._srv.shutdown()
         with self._srv.conn_lock:
             conns = list(self._srv.conns)
         for conn in conns:
@@ -304,22 +371,56 @@ class QueueServer:
 # client
 # ---------------------------------------------------------------------------
 
+class _FatalStream(ConnectionError):
+    """The server refused the stream itself (an id-less error reply, e.g.
+    an oversize frame): deterministic, so retrying the same bytes would
+    fail the same way forever. Never redialed."""
+
+
 class QueueClient:
     """``WorkQueue``-shaped proxy over one persistent JSON-lines connection.
 
     Thread-safe: a node's worker, loader, and heartbeat threads share the
     client; one lock serializes request/response pairs on the socket (calls
-    are sub-millisecond control-plane messages, never data transfers). Any
-    transport error raises :class:`ConnectionError` — to the node loop that
-    is indistinguishable from its own crash, which is exactly the failure
-    semantics the reaper expects (silence -> lease requeue)."""
+    are sub-millisecond control-plane messages, never data transfers).
+
+    **Reconnect** (default on): a transport error drops the socket and the
+    call redials with capped exponential backoff + jitter for up to
+    ``reconnect_window_s``, then replays the request — safe because the
+    entire queue surface is idempotent or epoch-guarded (a duplicate
+    ``complete`` lands in the dup log, a duplicate ``register`` refreshes a
+    heartbeat, a stale ``renew`` is rejected). Each redial renegotiates
+    binary framing from scratch and re-registers the node with its last
+    summary. Every server response carries an incarnation id; when it
+    changes (the coordinator restarted), registered restart hooks fire so
+    the node can re-push its full cache summary and blob address to the new
+    incarnation. ``reconnect=False`` restores the pre-reconnect contract:
+    any transport error permanently poisons the client and raises
+    :class:`ConnectionError` — to the node loop that is indistinguishable
+    from its own crash, which is exactly the failure semantics the reaper
+    expects (silence -> lease requeue). With reconnect on the same terminal
+    semantics apply once the window is exhausted."""
 
     def __init__(self, addr: Tuple[str, int], *, timeout_s: float = 30.0,
-                 binary: bool = True):
+                 binary: bool = True, reconnect: bool = True,
+                 reconnect_window_s: float = 20.0, backoff_s: float = 0.05,
+                 backoff_max_s: float = 1.0):
         self.addr = addr
+        self.timeout_s = float(timeout_s)
         self._lock = threading.Lock()
         self._id = 0
         self._poisoned = False
+        self._reconnect = bool(reconnect)
+        self._reconnect_window_s = float(reconnect_window_s)
+        self._backoff_s = float(backoff_s)
+        self._backoff_max_s = float(backoff_max_s)
+        self._closing = threading.Event()
+        self._incarnation: Optional[str] = None
+        self._register_params: Optional[Dict[str, Any]] = None
+        self._restart_hooks: list = []
+        self._hooks_lock = threading.Lock()
+        self._hooks_running = False
+        self._pending_restart = False
         # locality version-skew fail-soft: a server that predates cache
         # digest summaries rejects the extra params with a TypeError; after
         # the first such rejection this client stops sending summaries and
@@ -340,122 +441,218 @@ class QueueClient:
         # old-client-new-server compatibility shape, kept testable.
         self._binary_enabled = bool(binary)
         self._binary = False
-        self._sock = socket.create_connection(addr, timeout=timeout_s)
+        # the first dial fails loudly (OSError), reconnect or not: "the
+        # coordinator was never there" is an operator error, not a blip
+        self._sock: Optional[socket.socket] = \
+            socket.create_connection(addr, timeout=timeout_s)
         self._file = self._sock.makefile("rb")
 
     def close(self):
+        self._closing.set()            # wakes any backoff sleep immediately
         with self._lock:
             self._poison()
 
+    def add_restart_hook(self, fn: Callable[[], None]):
+        """Run ``fn()`` after this client detects a coordinator restart (the
+        server incarnation id changed). Fired outside the transport lock, so
+        hooks may freely call client methods (re-push a summary,
+        re-advertise a blob server); hook exceptions are swallowed — a
+        failed re-push degrades locality, never the reconnect."""
+        with self._hooks_lock:
+            self._restart_hooks.append(fn)
+
     def _read_response(self, method: str) -> bytes:
         """One response frame in whichever framing this connection speaks.
-        Caller holds the lock. Poisons and raises :class:`ConnectionError`
-        on EOF, a desynchronized stream, or an oversize frame — the cap
-        protects the client's memory exactly as the server's protects its."""
+        Caller holds the lock. Raises :class:`ConnectionError` on EOF, a
+        desynchronized stream, or an oversize frame — the cap protects the
+        client's memory exactly as the server's protects its. The caller
+        (:meth:`_call`) decides whether that means redial or poison."""
         if self._binary:
             head = self._file.read(1)
             if not head:
-                self._poison()
                 raise ConnectionError(
                     f"queue server {self.addr} closed the connection")
             if head != _FRAME_MAGIC:
-                self._poison()
                 raise ConnectionError(
                     f"queue rpc {method}: expected a binary frame from "
                     f"{self.addr} — stream desynchronized")
             hdr = self._file.read(4)
             if len(hdr) < 4:
-                self._poison()
                 raise ConnectionError(
                     f"queue server {self.addr} closed the connection")
             n = int.from_bytes(hdr, "big")
             if n > MAX_FRAME_BYTES:
-                self._poison()
-                raise ConnectionError(
+                # deterministic local rejection, not transport weather: the
+                # same reply would blow the cap on every redial — fatal
+                raise _FatalStream(
                     f"queue rpc {method}: {n}-byte response frame from "
-                    f"{self.addr} exceeds cap {MAX_FRAME_BYTES}")
+                    f"{self.addr} exceeds frame cap {MAX_FRAME_BYTES}")
             payload = self._file.read(n)
             if len(payload) < n:
-                self._poison()
                 raise ConnectionError(
                     f"queue server {self.addr} closed the connection")
             return payload
         line = self._file.readline(MAX_FRAME_BYTES + 1)
         if not line:
-            self._poison()
             raise ConnectionError(
                 f"queue server {self.addr} closed the connection")
         if len(line) > MAX_FRAME_BYTES and not line.endswith(b"\n"):
-            self._poison()
-            raise ConnectionError(
+            raise _FatalStream(
                 f"queue rpc {method}: response line from {self.addr} "
                 f"exceeds frame cap {MAX_FRAME_BYTES}")
         return line
 
+    def _drop_socket_locked(self):
+        """Tear down a dead/poisoned socket without judging the client."""
+        if self._sock is not None:
+            try:
+                self._file.close()
+                self._sock.close()
+            except OSError:
+                pass
+        self._sock = None
+
+    def _connect_locked(self):
+        """Redial. Framing restarts at JSON-lines — the server on the other
+        end may be a different (even older) build than last time, so the
+        binary upgrade is renegotiated per connection, never remembered."""
+        self._sock = socket.create_connection(self.addr,
+                                              timeout=self.timeout_s)
+        self._file = self._sock.makefile("rb")
+        self._binary = False
+
+    def _replay_session_locked(self):
+        """Re-establish session state on a fresh connection: re-send the
+        last successful ``register`` (node id + full summary + blob addr)
+        so the server — possibly a brand-new incarnation that has never
+        heard of this node — can place and route it again before the
+        retried call lands. A ``False`` result (the node was reaped) is
+        left for the node loop to discover through its own calls."""
+        if self._register_params is not None:
+            self._roundtrip_locked("register", dict(self._register_params))
+
+    def _roundtrip_locked(self, method: str, params: dict) -> dict:
+        """One request/response exchange on the current socket. Caller
+        holds the lock. Transport trouble raises plain
+        :class:`ConnectionError` (retryable: the caller may redial);
+        a deterministic stream rejection raises :class:`_FatalStream`."""
+        self._id += 1
+        req = {"id": self._id, "method": method, "params": params}
+        data = json.dumps(req).encode()
+        try:
+            if self._binary:
+                self._sock.sendall(
+                    _FRAME_MAGIC + len(data).to_bytes(4, "big") + data)
+            else:
+                self._sock.sendall(data + b"\n")
+            raw = self._read_response(method)
+        except ConnectionError:
+            raise
+        except OSError as e:
+            # includes timeout: a timed-out call may leave its reply in
+            # flight — the stream is no longer aligned, so this socket is
+            # done either way
+            raise ConnectionError(
+                f"queue rpc {method} to {self.addr}: {e}") from e
+        try:
+            resp = json.loads(raw)
+        except json.JSONDecodeError as e:
+            # truncated line at EOF (server killed mid-reply): transport
+            # death, not a protocol error
+            raise ConnectionError(
+                f"queue rpc {method}: truncated/garbage response "
+                f"from {self.addr}: {e}") from e
+        if resp.get("id") != req["id"]:
+            if resp.get("id") is None and not resp.get("ok", True):
+                # an id-less error is the server refusing the stream itself
+                # (e.g. a frame past the cap) before closing it — the same
+                # bytes would be refused again, so never retry
+                raise _FatalStream(
+                    f"queue rpc {method}: server {self.addr} rejected "
+                    f"the stream: {resp.get('error')}")
+            raise ConnectionError(
+                f"queue rpc {method}: response id {resp.get('id')!r} != "
+                f"request id {req['id']} — stream desynchronized")
+        if not self._binary and self._binary_enabled and resp.get("bin"):
+            self._binary = True           # server advertised frame support
+        inc = resp.get("inc")
+        if inc:
+            if self._incarnation is None:
+                self._incarnation = inc
+            elif inc != self._incarnation:
+                self._incarnation = inc
+                self._pending_restart = True
+        return resp
+
     def _call(self, method: str, **params) -> Any:
-        with self._lock:
-            if self._poisoned:
-                raise ConnectionError(
-                    f"queue rpc {method}: connection to {self.addr} is down")
-            self._id += 1
-            req = {"id": self._id, "method": method, "params": params}
-            data = json.dumps(req).encode()
-            try:
-                if self._binary:
-                    self._sock.sendall(
-                        _FRAME_MAGIC + len(data).to_bytes(4, "big") + data)
-                else:
-                    self._sock.sendall(data + b"\n")
-            except OSError as e:
-                self._poison()
-                raise ConnectionError(
-                    f"queue rpc {method} to {self.addr}: {e}") from e
-            try:
-                raw = self._read_response(method)
-            except ConnectionError:
-                raise
-            except OSError as e:
-                # a timed-out call may leave its reply in flight: the stream
-                # is no longer aligned, so poison the connection rather than
-                # let the next call consume the wrong response
-                self._poison()
-                raise ConnectionError(
-                    f"queue rpc {method} to {self.addr}: {e}") from e
-            try:
-                resp = json.loads(raw)
-            except json.JSONDecodeError as e:
-                # a truncated line at EOF (server killed mid-reply) is a
-                # transport death, not a protocol error: poison + ConnectionError
-                # so node loops see the failure mode they are built for
-                self._poison()
-                raise ConnectionError(
-                    f"queue rpc {method}: truncated/garbage response "
-                    f"from {self.addr}: {e}") from e
-            if resp.get("id") != req["id"]:        # desync: never trust again
-                self._poison()
-                if resp.get("id") is None and not resp.get("ok", True):
-                    # an id-less error is the server refusing the stream
-                    # itself (e.g. a frame past the cap) before closing it
+        deadline = None
+        delay = self._backoff_s
+        while True:
+            resp = None
+            with self._lock:
+                if self._poisoned or self._closing.is_set():
                     raise ConnectionError(
-                        f"queue rpc {method}: server {self.addr} rejected "
-                        f"the stream: {resp.get('error')}")
+                        f"queue rpc {method}: connection to {self.addr} "
+                        f"is down")
+                try:
+                    if self._sock is None:
+                        self._connect_locked()
+                        self._replay_session_locked()
+                    resp = self._roundtrip_locked(method, params)
+                except _FatalStream as e:
+                    self._poison()
+                    raise ConnectionError(str(e)) from None
+                except (ConnectionError, OSError) as e:
+                    self._drop_socket_locked()
+                    if not self._reconnect:
+                        self._poison()
+                        raise ConnectionError(
+                            f"queue rpc {method} to {self.addr}: {e}") from e
+                    if deadline is None:
+                        deadline = time.monotonic() + self._reconnect_window_s
+                    if time.monotonic() >= deadline:
+                        self._poison()
+                        raise ConnectionError(
+                            f"queue rpc {method} to {self.addr}: gave up "
+                            f"after {self._reconnect_window_s:.1f}s of "
+                            f"redials: {e}") from e
+            if resp is not None:
+                # outside the lock: hooks re-enter the client
+                self._maybe_fire_restart_hooks()
+                if not resp.get("ok"):
+                    raise RuntimeError(
+                        f"queue rpc {method}: {resp.get('error')}")
+                return _decode(resp.get("result"))
+            # redial backoff, outside the lock so heartbeat/worker threads
+            # aren't serialized behind the sleep; jitter de-synchronizes a
+            # whole cluster's workers re-dialing one reborn coordinator
+            if self._closing.wait(delay * (0.5 + random.random())):
                 raise ConnectionError(
-                    f"queue rpc {method}: response id {resp.get('id')!r} != "
-                    f"request id {req['id']} — stream desynchronized")
-            if not self._binary and self._binary_enabled and resp.get("bin"):
-                self._binary = True       # server advertised frame support
-        if not resp.get("ok"):
-            raise RuntimeError(f"queue rpc {method}: {resp.get('error')}")
-        return _decode(resp.get("result"))
+                    f"queue rpc {method}: client closed while redialing")
+            delay = min(delay * 2, self._backoff_max_s)
+
+    def _maybe_fire_restart_hooks(self):
+        with self._hooks_lock:
+            if not self._pending_restart or self._hooks_running:
+                return        # no restart seen, or a hook is mid-flight
+            #                   (hooks call client methods: don't recurse)
+            self._pending_restart = False
+            self._hooks_running = True
+            hooks = list(self._restart_hooks)
+        try:
+            for fn in hooks:
+                try:
+                    fn()
+                except Exception:   # noqa: BLE001 — a failed re-push
+                    pass            # degrades locality, never the session
+        finally:
+            with self._hooks_lock:
+                self._hooks_running = False
 
     def _poison(self):
         """Caller holds the lock: drop the socket; every later call raises."""
         self._poisoned = True
-        try:
-            self._file.close()
-            self._sock.close()
-        except OSError:
-            pass
+        self._drop_socket_locked()
 
     def _downgrade_on_type_error(self, exc: RuntimeError) -> bool:
         """An old server reports our new summary params as a ``TypeError:
@@ -595,7 +792,11 @@ class QueueClient:
             params["blob_addr"] = blob_addr
         while True:
             try:
-                return self._call("register", **params)
+                joined = self._call("register", **params)
+                # remember the post-shedding params: every future redial
+                # replays exactly this registration before anything else
+                self._register_params = dict(params)
+                return joined
             except RuntimeError as e:
                 if "blob_addr" in params and "TypeError" in str(e):
                     self._fabric_ok = False
@@ -707,6 +908,15 @@ def _main():
     sv.add_argument("--lease-ttl", type=float, default=30.0,
                     help="seconds of heartbeat silence before a node is reaped")
     sv.add_argument("--reap-interval", type=float, default=1.0)
+    sv.add_argument("--journal", default=None, metavar="DIR",
+                    help="write-ahead journal directory: every queue "
+                         "mutation becomes durable, and re-serving with the "
+                         "same DIR recovers the previous incarnation's "
+                         "state instead of starting over")
+    sv.add_argument("--fsync", default="interval",
+                    choices=("always", "interval", "never"),
+                    help="journal durability: fsync every record, on an "
+                         "interval (default), or leave it to the OS")
 
     wk = sub.add_parser("work", help="join the queue and drain units")
     wk.add_argument("--addr", default=os.environ.get(QUEUE_ADDR_ENV),
@@ -734,7 +944,23 @@ def _main():
     if args.cmd == "serve":
         from ..core.query import load_units
         units = load_units(Path(args.units))
-        queue = WorkQueue(units, (), lease_ttl_s=args.lease_ttl)
+        if args.journal:
+            from .journal import Journal
+            journal = Journal(args.journal, fsync=args.fsync)
+            if journal.exists():
+                # a previous incarnation died here: its journal, not the
+                # --units file, is the authoritative state
+                queue = WorkQueue.recover(journal,
+                                          lease_ttl_s=args.lease_ttl)
+                done = len(queue.done_status())
+                print(f"recovered journal {args.journal}: "
+                      f"{len(queue.units)} units, {done} already terminal",
+                      flush=True)
+            else:
+                queue = WorkQueue(units, (), lease_ttl_s=args.lease_ttl,
+                                  journal=journal)
+        else:
+            queue = WorkQueue(units, (), lease_ttl_s=args.lease_ttl)
         host, port = parse_addr(args.addr)
         server = QueueServer(queue, host, port).start()
         print(f"queue server on {server.addr_str}: {len(units)} units, "

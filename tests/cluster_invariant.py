@@ -7,6 +7,7 @@ import itertools
 import json
 import tempfile
 import threading
+import time
 from pathlib import Path
 
 import numpy as np
@@ -28,6 +29,9 @@ def check_cluster_invariant(n_subjects: int, sessions: int, nodes: int,
                             harass_renew: bool = False,
                             harass_locality: bool = False,
                             harass_peers: bool = False,
+                            harass_coordinator: bool = False,
+                            netchaos: bool = False,
+                            framing: str = "binary",
                             dag_edges=None, fail_idx=None):
     """For the given unit list / node count / injected failures: every unit
     must end with exactly one committed ok provenance, and a concurrent
@@ -64,7 +68,19 @@ def check_cluster_invariant(n_subjects: int, sessions: int, nodes: int,
     attempt (retries exhaust): the unit must end terminally ``failed``, its
     transitive descendants terminally ``blocked`` — never granted, no
     output files, no provenance — and the blocked count surfaced in
-    ``stats_snapshot()['dag']``."""
+    ``stats_snapshot()['dag']``.
+
+    ``harass_coordinator=True`` (requires ``transport="rpc"``) journals the
+    queue and hard-kills + recovers the coordinator mid-run — twice, at
+    different progress points — via ``ClusterRunner.restart_coordinator``:
+    clients must reconnect and re-register on their own, leases held across
+    the kill must resolve through epoch fencing (no double-commit), and the
+    run must still end with exactly one ok per unit. ``netchaos=True`` puts
+    a :class:`~repro.dist.faults.ChaosProxy` between every client and the
+    coordinator (drops, delays, duplicates, close-mid-frame) and asserts
+    faults actually fired. ``framing`` pins the rpc wire (``"binary"``
+    negotiates frames, ``"json"`` forbids the upgrade) so both framings run
+    through the same chaos."""
     from repro.core import (Provenance, builtin_pipelines,
                             query_available_work, synthesize_dataset)
     from repro.dist import ClusterRunner
@@ -124,14 +140,53 @@ def check_cluster_invariant(n_subjects: int, sessions: int, nodes: int,
         w.start()
         use_cache = cache or harass_locality or harass_peers
         cache_root = Path(td) / "host-cache"
+        if harass_coordinator or netchaos:
+            assert transport == "rpc", \
+                "coordinator/network chaos needs the socket transport"
+        client_kwargs = {}
+        if framing == "json":
+            client_kwargs["binary"] = False
+        elif framing != "binary":
+            raise ValueError(f"unknown framing {framing!r}")
+        if netchaos:
+            # dropped chunks stall a call until the socket timeout: keep it
+            # short so the reconnect loop (not the test timeout) pays for it
+            client_kwargs.update(timeout_s=1.0, reconnect_window_s=60.0)
+        if harass_coordinator:
+            client_kwargs.setdefault("reconnect_window_s", 60.0)
+        proxy_box = {}
+        proxy_lock = threading.Lock()
+
+        def client_dial(upstream):
+            # one proxy for the whole run, built on first dial (the server
+            # address is only known once run() serves); the coordinator
+            # restarts on the *same* port, so the upstream stays valid
+            with proxy_lock:
+                if "proxy" not in proxy_box:
+                    from repro.dist.faults import ChaosProxy
+                    proxy_box["proxy"] = ChaosProxy(
+                        upstream, seed=die * 31 + nodes,
+                        drop_rate=0.02, delay_rate=0.05, delay_s=0.01,
+                        dup_rate=0.02, truncate_rate=0.02).start()
+                return proxy_box["proxy"].address
+
         runner = ClusterRunner(
             pipe, ds.root, nodes=nodes, fault_hook=fault, die_after=die_after,
-            lease_ttl_s=0.4, hb_interval_s=0.1, straggler_factor=100.0,
+            # restart + reconnect take real wall time: chaos modes widen the
+            # lease ttl so recovery/stall latency alone never expires a
+            # lease (netchaos: a dropped chunk silences a healthy node for
+            # a full socket timeout + redial before its next heartbeat)
+            lease_ttl_s=(5.0 if netchaos
+                         else 1.5 if harass_coordinator else 0.4),
+            hb_interval_s=0.1, straggler_factor=100.0,
             poll_s=0.02, transport=transport,
             cache_dir=cache_root if use_cache else None,
             cache_per_node=harass_locality or harass_peers,
             peer_fabric=harass_peers,
-            partition="backlog" if harass_locality else "round_robin")
+            partition="backlog" if harass_locality else "round_robin",
+            journal_dir=(Path(td) / "journal") if harass_coordinator else None,
+            client_kwargs=client_kwargs or None,
+            client_dial=client_dial if netchaos else None)
 
         wrongly_renewed = []
 
@@ -222,9 +277,36 @@ def check_cluster_invariant(n_subjects: int, sessions: int, nodes: int,
                         except OSError:
                             pass               # evicted under us: fine
 
+        coordinator_restarts = []
+
+        def coordinator_harasser():
+            # kill + recover the coordinator twice, at different progress
+            # points, so recovery is exercised both nearly-cold and
+            # mostly-done; a None from restart_coordinator means the run
+            # beat us to shutdown — fine, the restart count is asserted
+            # only to be >= 1 below
+            targets = [max(1, len(units) // 4), max(2, len(units) // 2)]
+            for want_done in targets:
+                deadline = time.monotonic() + 30
+                while not stop.is_set() and time.monotonic() < deadline:
+                    q = runner.queue
+                    if (q is not None and runner.server is not None
+                            and len(q.done_status()) >= want_done):
+                        break
+                    time.sleep(0.02)
+                if stop.is_set():
+                    return
+                info = runner.restart_coordinator()
+                if info is not None:
+                    coordinator_restarts.append(info)
+                time.sleep(0.3)      # let reconnects land before round two
+
         threads = []
         if harass_renew:
             threads.append(threading.Thread(target=harasser, daemon=True))
+        if harass_coordinator:
+            threads.append(threading.Thread(target=coordinator_harasser,
+                                            daemon=True))
         if harass_locality:
             threads.append(threading.Thread(target=locality_harasser,
                                             daemon=True))
@@ -240,7 +322,18 @@ def check_cluster_invariant(n_subjects: int, sessions: int, nodes: int,
             w.join(timeout=5)
             for t in threads:
                 t.join(timeout=5)
+            if "proxy" in proxy_box:
+                proxy_box["proxy"].stop()
         assert wrongly_renewed == []
+        if harass_coordinator:
+            # a chaos run that never managed to inject its chaos must fail
+            # loudly, not pass greenly
+            assert coordinator_restarts, "coordinator was never restarted"
+        if netchaos:
+            st = proxy_box["proxy"].stats()
+            assert st["chunks"] > 0, "no traffic crossed the chaos proxy"
+            assert (st["dropped"] + st["delayed"] + st["duplicated"]
+                    + st["truncated"]) > 0, f"no faults fired: {st}"
 
         assert violations == []
         assert sum(r.status == "ok" for r in results) == len(runnable)

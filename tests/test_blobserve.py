@@ -417,3 +417,42 @@ def test_cluster_peer_fabric_requires_per_node_caches(dataset):
     pipe, _ = _work(dataset)
     with pytest.raises(ValueError, match="peer_fabric"):
         ClusterRunner(pipe, dataset.root, peer_fabric=True)
+
+
+def test_fabric_quarantines_dead_peer_then_retries_after_expiry(tmp_path):
+    cache = InputCache(tmp_path / "serve")
+    data = _npy_bytes(np.arange(16, dtype=np.float32))
+    digest = _seed_blob(cache, data)
+    with BlobServer(cache) as srv:
+        dead = "127.0.0.1:1"
+        fab = PeerFabric(lambda ds: {d: [dead, srv.addr_str] for d in ds},
+                         timeout_s=2.0, quarantine_s=0.3)
+        # first fetch pays the doomed dial once and quarantines the addr
+        assert fab.fetch(digest) == (data, srv.addr_str)
+        assert fab.counters()["peer_dead"] == 1
+        # inside the window: the breaker skips the dial entirely
+        assert fab.fetch(digest) == (data, srv.addr_str)
+        assert fab.fetch(digest) == (data, srv.addr_str)
+        c = fab.counters()
+        assert c["peer_dead"] == 1 and c["peer_quarantine_skips"] == 2
+        # after expiry: one half-open probe re-dials (and re-quarantines)
+        time.sleep(0.35)
+        assert fab.fetch(digest) == (data, srv.addr_str)
+        c = fab.counters()
+        assert c["peer_dead"] == 2 and c["peer_quarantine_skips"] == 2
+        fab.close()
+
+
+def test_fabric_quarantine_disabled_with_nonpositive_window(tmp_path):
+    cache = InputCache(tmp_path / "serve")
+    data = _npy_bytes(np.arange(8, dtype=np.float32))
+    digest = _seed_blob(cache, data)
+    with BlobServer(cache) as srv:
+        fab = PeerFabric(lambda ds: {d: ["127.0.0.1:1", srv.addr_str]
+                                     for d in ds},
+                         timeout_s=2.0, quarantine_s=0)
+        for want_dead in (1, 2):         # every fetch re-dials the dead peer
+            assert fab.fetch(digest) == (data, srv.addr_str)
+            assert fab.counters()["peer_dead"] == want_dead
+        assert fab.counters()["peer_quarantine_skips"] == 0
+        fab.close()

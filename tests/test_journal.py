@@ -1,0 +1,421 @@
+"""Coordinator write-ahead journal: WAL framing + torn-tail repair,
+snapshot/compaction crash windows, WorkQueue journal->recover equivalence
+(including DAG gates, dead nodes, and epoch fencing across the restart),
+the stale-lease double-commit regression, version-skew interop in both
+directions, and the read-only inspect CLI."""
+import json
+import subprocess
+import sys
+import time
+import zlib
+from pathlib import Path
+
+import pytest
+
+from conftest import wait_until
+
+from repro.core import builtin_pipelines, query_available_work, \
+    synthesize_dataset
+from repro.dist import Journal, JournalCorrupt, WorkQueue
+from repro.dist.journal import _HEADER, _MAGIC
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+@pytest.fixture()
+def dataset(tmp_path):
+    return synthesize_dataset(tmp_path / "ds", "jds", n_subjects=4,
+                              sessions_per_subject=2, shape=(10, 10, 10))
+
+
+def _work(dataset):
+    pipe = builtin_pipelines()["bias_correct"]
+    units, _ = query_available_work(dataset, pipe)
+    return pipe, units
+
+
+# ---------------------------------------------------------------------------
+# WAL framing
+# ---------------------------------------------------------------------------
+
+def test_wal_roundtrip_assigns_monotonic_seq(tmp_path):
+    j = Journal(tmp_path / "j", fsync="never")
+    for i in range(5):
+        j.append({"t": "grant", "i": i, "n": "a", "e": 1, "lb": 0})
+    j.close()
+    records, torn, reason = Journal(tmp_path / "j").scan_wal()
+    assert [r["i"] for r in records] == list(range(5))
+    assert [r["q"] for r in records] == [1, 2, 3, 4, 5]
+    assert torn == 0 and reason is None
+
+
+def test_torn_payload_is_truncated_on_replay(tmp_path):
+    j = Journal(tmp_path / "j", fsync="never")
+    j.write_units([])
+    for i in range(3):
+        j.append({"t": "dead", "n": f"node-{i}"})
+    j.close()
+    wal = tmp_path / "j" / "wal.log"
+    # a record the crash cut short: honest header, half a payload
+    body = json.dumps({"t": "dead", "n": "node-torn", "q": 4}).encode()
+    with open(wal, "ab") as f:
+        f.write(len(body).to_bytes(4, "big")
+                + zlib.crc32(body).to_bytes(4, "big") + body[: len(body) // 2])
+    before = wal.stat().st_size
+    j2 = Journal(tmp_path / "j")
+    rows, state, tail, torn = j2.replay()
+    assert [r["n"] for r in tail] == ["node-0", "node-1", "node-2"]
+    assert torn == _HEADER + len(body) // 2
+    assert wal.stat().st_size == before - torn        # tail physically cut
+    # the journal keeps appending after the repair, seq continuing
+    j2.append({"t": "dead", "n": "node-3"})
+    j2.close()
+    records, torn, _ = Journal(tmp_path / "j").scan_wal()
+    assert [r["n"] for r in records][-1] == "node-3"
+    assert records[-1]["q"] == 4 and torn == 0
+
+
+def test_crc_mismatch_ends_the_trusted_prefix(tmp_path):
+    j = Journal(tmp_path / "j", fsync="never")
+    for i in range(4):
+        j.append({"t": "dead", "n": f"node-{i}"})
+    j.close()
+    wal = tmp_path / "j" / "wal.log"
+    data = bytearray(wal.read_bytes())
+    # flip one payload byte of the third record: records 0-1 stay good
+    off = len(_MAGIC)
+    for _ in range(2):
+        n = int.from_bytes(data[off:off + 4], "big")
+        off += _HEADER + n
+    data[off + _HEADER + 4] ^= 0xFF
+    wal.write_bytes(bytes(data))
+    records, torn, reason = Journal(tmp_path / "j").scan_wal()
+    assert [r["n"] for r in records] == ["node-0", "node-1"]
+    assert reason == "crc mismatch" and torn > 0
+
+
+def test_bad_magic_is_corrupt_not_torn(tmp_path):
+    j = Journal(tmp_path / "j", fsync="never")
+    j.append({"t": "dead", "n": "a"})
+    j.close()
+    wal = tmp_path / "j" / "wal.log"
+    wal.write_bytes(b"NOTAWAL0" + wal.read_bytes()[len(_MAGIC):])
+    with pytest.raises(JournalCorrupt, match="bad magic"):
+        Journal(tmp_path / "j").scan_wal()
+
+
+def test_oversize_length_field_ends_prefix(tmp_path):
+    from repro.dist.journal import MAX_RECORD_BYTES
+    j = Journal(tmp_path / "j", fsync="never")
+    j.append({"t": "dead", "n": "a"})
+    j.close()
+    wal = tmp_path / "j" / "wal.log"
+    with open(wal, "ab") as f:
+        f.write((MAX_RECORD_BYTES + 1).to_bytes(4, "big") + b"\0\0\0\0junk")
+    records, torn, reason = Journal(tmp_path / "j").scan_wal()
+    assert len(records) == 1 and "exceeds cap" in reason
+
+
+def test_fsync_policies(tmp_path):
+    for policy in ("always", "interval", "never"):
+        j = Journal(tmp_path / policy, fsync=policy)
+        j.append({"t": "dead", "n": "a"})
+        j.close()
+        records, _, _ = Journal(tmp_path / policy).scan_wal()
+        assert len(records) == 1
+    with pytest.raises(ValueError, match="unknown fsync policy"):
+        Journal(tmp_path / "bad", fsync="sometimes")
+
+
+def test_closed_journal_drops_appends_silently(tmp_path):
+    """The zombie fence: a dead incarnation's queue keeps calling append()
+    harmlessly while the new incarnation owns the files."""
+    j = Journal(tmp_path / "j", fsync="never")
+    j.append({"t": "dead", "n": "a"})
+    j.close()
+    j.append({"t": "dead", "n": "zombie"})     # no error, no write
+    j.close()                                   # idempotent
+    records, _, _ = Journal(tmp_path / "j").scan_wal()
+    assert [r["n"] for r in records] == ["a"]
+
+
+# ---------------------------------------------------------------------------
+# snapshot + compaction crash windows
+# ---------------------------------------------------------------------------
+
+def test_replay_skips_records_covered_by_snapshot(tmp_path):
+    """The rename-before-truncate crash window: a snapshot at seq N with the
+    old WAL still on disk must not double-apply records q <= N."""
+    j = Journal(tmp_path / "j", fsync="never")
+    j.write_units([])
+    for i in range(3):
+        j.append({"t": "dead", "n": f"node-{i}"})
+    pre_truncate_wal = (tmp_path / "j" / "wal.log").read_bytes()
+    j.compact({"nodes": [], "dead": [f"node-{i}" for i in range(3)]})
+    j.append({"t": "dead", "n": "node-after"})
+    j.close()
+    # resurrect the pre-compaction records in front of the post-compaction
+    # one — exactly what a crash between state.json rename and WAL truncate
+    # leaves behind
+    wal = tmp_path / "j" / "wal.log"
+    post = wal.read_bytes()[len(_MAGIC):]
+    wal.write_bytes(pre_truncate_wal + post)
+    rows, state, tail, torn = Journal(tmp_path / "j").replay()
+    assert state["seq"] == 3 and state["v"] == 1
+    assert [r["n"] for r in tail] == ["node-after"]   # q 1..3 skipped
+    assert torn == 0
+
+
+def test_compaction_continues_seq_across_snapshots(tmp_path):
+    j = Journal(tmp_path / "j", fsync="never")
+    j.write_units([])
+    j.append({"t": "dead", "n": "a"})
+    j.compact({})
+    j.append({"t": "dead", "n": "b"})
+    j.close()
+    rows, state, tail, _ = Journal(tmp_path / "j").replay()
+    assert state["seq"] == 1
+    assert [(r["n"], r["q"]) for r in tail] == [("b", 2)]
+
+
+def test_should_compact_threshold(tmp_path):
+    j = Journal(tmp_path / "j", fsync="never", compact_every=3)
+    assert not j.should_compact()
+    for _ in range(3):
+        j.append({"t": "dead", "n": "a"})
+    assert j.should_compact()
+    j.compact({})
+    assert not j.should_compact()
+    j.close()
+
+
+def test_replay_without_units_is_corrupt(tmp_path):
+    (tmp_path / "j").mkdir()
+    with pytest.raises(JournalCorrupt, match="no units.json"):
+        Journal(tmp_path / "j").replay()
+
+
+# ---------------------------------------------------------------------------
+# WorkQueue journal -> recover equivalence
+# ---------------------------------------------------------------------------
+
+def _drive(queue):
+    """A deterministic little history: grants, ok/failed completes, a dead
+    node with an orphaned lease. Returns (ok_idxs, failed_idx, orphan_idx)."""
+    assert queue.register("a") and queue.register("b")
+    ua, la = queue.next_unit("a")
+    ub, lb = queue.next_unit("b")
+    queue.complete(la.unit_idx, "a", "ok", meta={"seconds": 0.1,
+                                                 "status": "ok"})
+    queue.complete(lb.unit_idx, "b", "failed")
+    u2, l2 = queue.next_unit("a")
+    queue.complete(l2.unit_idx, "a", "ok")
+    uo, lo = queue.next_unit("b")        # orphaned: b dies holding it
+    queue.mark_dead("b")
+    return ([la.unit_idx, l2.unit_idx], lb.unit_idx, lo.unit_idx)
+
+
+def test_recover_rebuilds_queue_state(dataset, tmp_path):
+    pipe, units = _work(dataset)
+    q = WorkQueue(units, (), lease_ttl_s=5.0,
+                  journal=Journal(tmp_path / "j", fsync="never"))
+    ok_idxs, failed_idx, orphan_idx = _drive(q)
+
+    q2 = WorkQueue.recover(Journal(tmp_path / "j", fsync="never"),
+                           lease_ttl_s=5.0)
+    assert q2.done_status() == q.done_status()
+    assert set(q2.alive_nodes()) == {"a"}
+    assert q2.pending() == q.pending()
+    # the dead node's orphaned lease was requeued at mark_dead time (the
+    # record replays), so the orphan is grantable again — at a higher epoch
+    snap = q2.results_snapshot()
+    assert snap["primaries"][ok_idxs[0]]["node_id"] == "a"
+    grants = {}
+    while True:
+        got = q2.next_unit("a")
+        if got is None:
+            break
+        unit, lease = got
+        grants[lease.unit_idx] = lease
+    assert orphan_idx in grants
+    # terminal statuses stay terminal: the failed unit (node-side retries
+    # already exhausted) and the oks are never re-granted
+    assert q2.done_status()[failed_idx] == "failed"
+    for i in [failed_idx, *ok_idxs]:
+        assert i not in grants
+
+
+def test_recover_fences_pre_crash_epochs(dataset, tmp_path):
+    """A lease epoch granted before the crash must never be re-issued
+    after it: the zombie's renew is rejected, its complete is a dup."""
+    pipe, units = _work(dataset)
+    q = WorkQueue(units, (), lease_ttl_s=0.3,
+                  journal=Journal(tmp_path / "j", fsync="never"))
+    assert q.register("a")
+    _, lease = q.next_unit("a")
+    q2 = WorkQueue.recover(Journal(tmp_path / "j", fsync="never"),
+                           lease_ttl_s=0.3)
+    # "a" never reconnects: one ttl of grace, then the reaper collects it
+    wait_until(lambda: q2.reap() or "a" not in q2.alive_nodes(), timeout=5)
+    assert q2.register("b")
+    unit2, lease2 = q2.next_unit("b")
+    # b may be handed a different unit first; drain until the orphan shows
+    while lease2.unit_idx != lease.unit_idx:
+        q2.complete(lease2.unit_idx, "b", "ok")
+        unit2, lease2 = q2.next_unit("b")
+    assert lease2.epoch > lease.epoch
+    assert q2.renew(lease.unit_idx, "a", lease.epoch) is False
+
+
+def test_recover_releases_dag_children_of_pre_crash_parents(dataset,
+                                                            tmp_path):
+    pipe, units = _work(dataset)
+    units[2].depends_on = [units[0].job_id]
+    units[3].depends_on = [units[2].job_id]
+    q = WorkQueue(units, (), lease_ttl_s=5.0,
+                  journal=Journal(tmp_path / "j", fsync="never"))
+    assert q.register("a")
+    got = q.next_unit("a")
+    while got[1].unit_idx != 0:
+        q.complete(got[1].unit_idx, "a", "ok")
+        got = q.next_unit("a")
+    q.complete(0, "a", "ok")             # releases unit 2, not yet unit 3
+
+    q2 = WorkQueue.recover(Journal(tmp_path / "j", fsync="never"),
+                           lease_ttl_s=5.0)
+    assert q2.register("b")
+    grantable = set()
+    while (got := q2.next_unit("b")) is not None:
+        grantable.add(got[1].unit_idx)
+    assert 2 in grantable                # parent's ok survived the crash
+    assert 3 not in grantable            # still parked behind unit 2
+    q2.complete(2, "b", "ok")
+    unit3 = q2.next_unit("b")
+    assert unit3 is not None and unit3[1].unit_idx == 3
+
+
+def test_double_recover_is_idempotent(dataset, tmp_path):
+    pipe, units = _work(dataset)
+    q = WorkQueue(units, (), lease_ttl_s=5.0,
+                  journal=Journal(tmp_path / "j", fsync="never"))
+    _drive(q)
+    q2 = WorkQueue.recover(Journal(tmp_path / "j", fsync="never"),
+                           lease_ttl_s=5.0)
+    q3 = WorkQueue.recover(Journal(tmp_path / "j", fsync="never"),
+                           lease_ttl_s=5.0)
+    assert q3.done_status() == q2.done_status()
+    assert q3.pending() == q2.pending()
+    assert set(q3.alive_nodes()) == set(q2.alive_nodes())
+    assert q3.results_snapshot() == q2.results_snapshot()
+
+
+def test_recovered_queue_journals_onward(dataset, tmp_path):
+    """Recovery attaches the journal and compacts immediately, so the new
+    incarnation's own mutations are durable for the *next* recovery."""
+    pipe, units = _work(dataset)
+    q = WorkQueue(units, (), lease_ttl_s=5.0,
+                  journal=Journal(tmp_path / "j", fsync="never"))
+    assert q.register("a")
+    _, lease = q.next_unit("a")
+    q.complete(lease.unit_idx, "a", "ok")
+    q2 = WorkQueue.recover(Journal(tmp_path / "j", fsync="never"),
+                           lease_ttl_s=5.0)
+    _, l2 = q2.next_unit("a")
+    q2.complete(l2.unit_idx, "a", "ok")
+    q3 = WorkQueue.recover(Journal(tmp_path / "j", fsync="never"),
+                           lease_ttl_s=5.0)
+    assert q3.done_status() == {lease.unit_idx: "ok", l2.unit_idx: "ok"}
+
+
+# ---------------------------------------------------------------------------
+# the stale-lease double-commit regression (satellite): a worker that held
+# a live lease across a coordinator restart must not be able to double-commit
+# ---------------------------------------------------------------------------
+
+def test_stale_lease_across_restart_cannot_double_commit(dataset, tmp_path):
+    pipe, units = _work(dataset)
+    q = WorkQueue(units, (), lease_ttl_s=0.3,
+                  journal=Journal(tmp_path / "j", fsync="never"))
+    assert q.register("a")
+    unit, lease_a = q.next_unit("a")
+    idx = lease_a.unit_idx
+
+    # coordinator dies and recovers; a's lease rides along with one ttl of
+    # grace, but a never heartbeats the new incarnation
+    q2 = WorkQueue.recover(Journal(tmp_path / "j", fsync="never"),
+                           lease_ttl_s=0.3)
+    wait_until(lambda: q2.reap() or "a" not in q2.alive_nodes(), timeout=5)
+    assert q2.register("b")
+    got = q2.next_unit("b")
+    while got[1].unit_idx != idx:
+        q2.complete(got[1].unit_idx, "b", "ok")
+        got = q2.next_unit("b")
+    q2.complete(idx, "b", "ok", meta={"status": "ok", "seconds": 0.1})
+
+    # a finally wakes up and reports its (stale) success
+    q2.complete(idx, "a", "ok", meta={"status": "ok", "seconds": 9.9})
+
+    assert q2.done_status()[idx] == "ok"
+    snap = q2.results_snapshot()
+    assert snap["primaries"][idx]["node_id"] == "b"   # exactly one winner
+    dup_nodes = [m["node_id"] for m in snap["duplicates"] if m["idx"] == idx]
+    assert dup_nodes == ["a"]                         # the zombie is a dup
+
+
+# ---------------------------------------------------------------------------
+# version-skew interop: journal-disabled coordinators stay first-class
+# ---------------------------------------------------------------------------
+
+def test_journal_disabled_queue_unchanged(dataset):
+    pipe, units = _work(dataset)
+    q = WorkQueue(units, ("a",))
+    u, lease = q.next_unit("a")
+    q.complete(lease.unit_idx, "a", "ok")
+    assert q.done_status()[lease.unit_idx] == "ok"
+    assert q._journal is None
+
+
+def test_recover_requires_a_journal_directory(tmp_path):
+    with pytest.raises(JournalCorrupt):
+        WorkQueue.recover(Journal(tmp_path / "empty"))
+
+
+# ---------------------------------------------------------------------------
+# inspect CLI
+# ---------------------------------------------------------------------------
+
+def _inspect(path):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.dist.journal", "inspect", str(path)],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": str(REPO_ROOT / "src"), "PATH": "/usr/bin:/bin"})
+
+
+def test_inspect_cli_reports_replay_summary(dataset, tmp_path):
+    pipe, units = _work(dataset)
+    q = WorkQueue(units, (), lease_ttl_s=5.0,
+                  journal=Journal(tmp_path / "j", fsync="never"))
+    _drive(q)
+    wal = tmp_path / "j" / "wal.log"
+    size_before = wal.stat().st_size
+    wal.write_bytes(wal.read_bytes() + b"\x00\x00")   # torn header bytes
+    proc = _inspect(tmp_path / "j")
+    assert proc.returncode == 0, proc.stderr
+    out = proc.stdout
+    assert f"units           : {len(units)}" in out
+    assert "complete=" in out and "grant=" in out
+    assert "torn tail       : 2 byte(s)" in out
+    assert "ok=2" in out and "failed=1" in out
+    # read-only: inspect never repairs the file
+    assert wal.stat().st_size == size_before + 2
+
+
+def test_inspect_cli_exit_codes(tmp_path):
+    (tmp_path / "notajournal").mkdir()
+    assert _inspect(tmp_path / "notajournal").returncode == 2
+    j = Journal(tmp_path / "j", fsync="never")
+    j.write_units([])
+    j.close()
+    (tmp_path / "j" / "units.json").write_text("{not json")
+    proc = _inspect(tmp_path / "j")
+    assert proc.returncode == 1 and "CORRUPT" in proc.stdout

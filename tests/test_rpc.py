@@ -671,3 +671,136 @@ def test_new_client_sheds_batching_against_pre_batch_server(
     for d in digs:                               # the piggyback landed once
         q._summaries["a"].discard(d)
     assert len(q._summaries["a"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# reconnect + incarnation: clients ride out a coordinator restart
+# ---------------------------------------------------------------------------
+
+def test_client_reconnects_across_server_restart_on_same_port(dataset):
+    pipe, units = _work(dataset)
+    q1 = WorkQueue(units, [])
+    srv1 = QueueServer(q1).start()
+    host, port = srv1.address
+    c = QueueClient(srv1.address)
+    assert c.register("a") is True
+    unit, lease = c.next_unit("a")
+    srv1.crash()                         # no goodbye frames
+
+    q2 = WorkQueue(units, [])
+    srv2 = QueueServer(q2, host, port).start()
+    try:
+        # the next call redials transparently; the replayed register means
+        # the brand-new queue already knows node "a" when the call lands
+        assert c.pending() == len(units)
+        assert "a" in q2.alive_nodes()
+        u2, l2 = c.next_unit("a")
+        c.complete(l2.unit_idx, "a", "ok")
+        assert q2.done_status()[l2.unit_idx] == "ok"
+        c.close()
+    finally:
+        srv2.stop()
+
+
+def test_restart_hook_fires_on_incarnation_change(dataset):
+    pipe, units = _work(dataset)
+    q1 = WorkQueue(units, ["a"])
+    srv1 = QueueServer(q1).start()
+    host, port = srv1.address
+    c = QueueClient(srv1.address)
+    fired = []
+    c.add_restart_hook(lambda: fired.append(c._incarnation))
+    assert c.finished() is False
+    assert fired == []                   # first incarnation is not a restart
+    inc1 = c._incarnation
+    assert inc1 == srv1.incarnation
+    srv1.crash()
+    srv2 = QueueServer(WorkQueue(units, ["a"]), host, port).start()
+    try:
+        c.pending()
+        assert fired == [srv2.incarnation] and inc1 != srv2.incarnation
+        c.pending()
+        assert len(fired) == 1           # once per restart, not per call
+        c.close()
+    finally:
+        srv2.stop()
+
+
+def test_client_against_pre_incarnation_server(dataset):
+    """Version skew: a server that never stamps ``inc`` (an old build) must
+    leave a reconnect-capable client fully functional, hooks silent."""
+    pipe, units = _work(dataset)
+    q = WorkQueue(units, ["a"])
+    with QueueServer(q) as srv:
+        srv._srv.incarnation = None      # simulate the old wire
+        c = QueueClient(srv.address)
+        fired = []
+        c.add_restart_hook(lambda: fired.append(1))
+        assert c.finished() is False
+        unit, lease = c.next_unit("a")
+        c.complete(lease.unit_idx, "a", "ok")
+        assert c.done_status()[lease.unit_idx] == "ok"
+        assert c._incarnation is None and fired == []
+        c.close()
+
+
+def test_reconnect_false_preserves_poison_semantics(dataset):
+    pipe, units = _work(dataset)
+    q = WorkQueue(units, ["a"])
+    srv = QueueServer(q).start()
+    c = QueueClient(srv.address, reconnect=False)
+    assert c.finished() is False
+    srv.crash()
+    with pytest.raises(ConnectionError):
+        c.pending()
+    # poisoned: fails fast forever, even if a server comes back
+    with pytest.raises(ConnectionError, match="is down"):
+        c.pending()
+    c.close()
+
+
+def test_reconnect_gives_up_after_window(dataset):
+    pipe, units = _work(dataset)
+    q = WorkQueue(units, ["a"])
+    srv = QueueServer(q).start()
+    c = QueueClient(srv.address, reconnect_window_s=0.5, backoff_s=0.05)
+    assert c.finished() is False
+    srv.crash()                          # nothing ever comes back up
+    t0 = time.monotonic()
+    with pytest.raises(ConnectionError, match="gave up"):
+        c.pending()
+    assert 0.3 <= time.monotonic() - t0 < 10.0
+    with pytest.raises(ConnectionError, match="is down"):
+        c.pending()                      # window exhausted -> poisoned
+    c.close()
+
+
+def test_server_stop_is_idempotent_and_drains_inflight(dataset):
+    pipe, units = _work(dataset)
+
+    class SlowQueue(WorkQueue):
+        def pending(self):
+            time.sleep(0.4)              # a handler mid-call during stop()
+            return super().pending()
+
+    q = SlowQueue(units, ["a"])
+    srv = QueueServer(q, drain_s=5.0).start()
+    c = QueueClient(srv.address)
+    assert c.finished() is False
+    res = {}
+
+    def call():
+        try:
+            res["pending"] = c.pending()
+        except ConnectionError as e:
+            res["error"] = e
+    t = threading.Thread(target=call, daemon=True)
+    t.start()
+    time.sleep(0.1)                      # let the call reach the handler
+    srv.stop()
+    srv.stop()                           # second stop: no-op, no exception
+    t.join(timeout=10)
+    # the drain let the in-flight reply escape before the socket died
+    assert res.get("pending") == len(units), res
+    c.close()
+    srv.crash()                          # after stop: still a no-op
