@@ -456,6 +456,7 @@ class ClusterRunner:
                  cache_per_node: bool = False, peer_fabric: bool = False,
                  locality: bool = True, partition: str = "round_robin",
                  plan=None, journal_dir: Optional[Path] = None,
+                 journal_overwrite: bool = False,
                  client_kwargs: Optional[Dict] = None,
                  client_dial: Optional[Callable] = None):
         if nodes < 1:
@@ -502,8 +503,12 @@ class ClusterRunner:
         self.plan = plan
         # journal_dir turns on the coordinator write-ahead log: every queue
         # mutation is journaled there, and restart_coordinator() (or a fresh
-        # process pointed at the same dir) can rebuild the queue mid-run
+        # process pointed at the same dir) can rebuild the queue mid-run.
+        # run() refuses a directory that already holds a journal unless
+        # journal_overwrite=True — the leftover is a crashed run's only
+        # recoverable state (`rpc serve` recovers it; see docs/operating.md)
         self.journal_dir = Path(journal_dir) if journal_dir else None
+        self.journal_overwrite = bool(journal_overwrite)
         # client_kwargs feed every node's QueueClient (e.g. {"binary": False}
         # pins JSON framing; reconnect knobs); client_dial rewrites the
         # upstream (host, port) into the address clients actually dial —
@@ -537,6 +542,17 @@ class ClusterRunner:
         if self.journal_dir is not None:
             from .journal import Journal
             journal = Journal(self.journal_dir)
+            if journal.exists() and not self.journal_overwrite:
+                # attaching would truncate wal.log and overwrite state.json —
+                # destroying the one copy of a crashed run's recoverable
+                # state. Recovery is a deliberate act (`rpc serve --journal`
+                # or WorkQueue.recover), never a side effect of starting a
+                # new run over the same directory.
+                raise RuntimeError(
+                    f"{self.journal_dir} already holds a coordinator "
+                    f"journal; recover it (python -m repro.dist.rpc serve "
+                    f"--journal {self.journal_dir} ...) or pass "
+                    f"journal_overwrite=True to discard it")
         queue = WorkQueue(units, node_ids, lease_ttl_s=self.lease_ttl_s,
                           locality=self.locality, partition=self.partition,
                           plan=self.plan, journal=journal)

@@ -130,13 +130,38 @@ class Journal:
                 self._wal.write(_MAGIC)
                 self._wal.flush()
 
+    def _fsync_dir(self) -> None:
+        """Durably record a rename in the journal directory itself — on a
+        power loss an un-fsynced directory can resurface the rename with
+        the *old* (or no) inode behind it. Best-effort where the platform
+        can't fsync a directory handle."""
+        try:
+            fd = os.open(self.root, os.O_RDONLY)
+        except OSError:
+            return
+        try:
+            os.fsync(fd)
+        except OSError:
+            pass
+        finally:
+            os.close(fd)
+
     def write_units(self, units) -> None:
-        """Persist the admitted unit list (once, at attach). Atomic like
-        the snapshot: a crash mid-write leaves no half units.json."""
+        """Persist the admitted unit list (once, at attach). Atomic *and*
+        durable like the snapshot: the tmp file is fsynced before the
+        rename and the directory after it — a rename that survives a power
+        loss while its data doesn't would leave a truncated units.json,
+        and replay treats an unreadable units.json as
+        :class:`JournalCorrupt` (the intact snapshot and WAL become
+        unreachable with it)."""
         from ..core.query import units_to_rows
         tmp = self.units_path.with_name(self.units_path.name + ".tmp")
-        tmp.write_text(json.dumps(units_to_rows(list(units)), indent=1))
+        with open(tmp, "w") as f:
+            f.write(json.dumps(units_to_rows(list(units)), indent=1))
+            f.flush()
+            os.fsync(f.fileno())
         os.replace(tmp, self.units_path)
+        self._fsync_dir()
 
     def append(self, rec: Dict[str, Any]) -> None:
         """Frame + append one mutation record; fsync per policy. Dropped
@@ -184,6 +209,7 @@ class Journal:
             with open(tmp, "rb") as f:
                 os.fsync(f.fileno())
             os.replace(tmp, self.state_path)
+            self._fsync_dir()
             if self._wal is not None:
                 self._wal.close()
             self._wal = open(self.wal_path, "wb")

@@ -19,6 +19,13 @@ Protocol (see ``docs/cluster.md`` for the failure model):
   units (epoch++) and redistributes their queued entries to the
   least-loaded alive nodes. A reaped "zombie" that later finishes anyway is
   harmless: the provenance commit arbitration admits exactly one ok record.
+  ``reap()`` also expires *individual* leases that went a full TTL without
+  a renewal on a node that itself still heartbeats: holders renew every
+  in-hand lease each heartbeat, so an unrenewed lease on a live node means
+  the grant reply never reached the node (a connection dropped mid-reply
+  and the client replayed into a fresh grant, or a coordinator crash after
+  journaling the grant) — without per-lease expiry such an orphan would
+  stay leased forever and the campaign would never finish.
 * **Speculate** — ``speculate(idx, node)`` grants a *twin* lease on a
   different node for a straggling unit; twins race the primary through the
   same idempotent commit, and duplicates surface as ``status="speculative"``.
@@ -495,6 +502,10 @@ class WorkQueue:
                     meta=m if isinstance(m, dict) else None)
             elif t == "dead":
                 self._declare_dead(str(rec["n"]))
+            elif t == "expire":
+                # re-drives the same drop/settle path; the requeue side is
+                # irrelevant mid-replay (normalization rebuilds placement)
+                self._expire_lease(int(rec["i"]), bool(rec.get("s")))
             elif t == "renew":
                 pass    # pure liveness: recovery re-stamps every clock
         except (KeyError, TypeError, ValueError):
@@ -759,7 +770,15 @@ class WorkQueue:
             if idx in self._done:
                 self._spec.pop(idx, None)
                 continue
-            return self.units[idx], self._spec[idx]
+            lease = self._spec.get(idx)
+            if lease is None:
+                continue                   # twin evaporated while queued
+            # delivery starts the twin's expiry clock: while the entry sat
+            # in this queue the lease couldn't be lost in flight, so only
+            # from here on does "unrenewed for a TTL" mean a lost grant
+            lease = dataclasses.replace(lease, granted_at=self._now())
+            self._spec[idx] = lease
+            return self.units[idx], lease
         q = self._queues[node_id]
         if not q:
             self._fill_from_backlog(node_id)
@@ -1214,7 +1233,11 @@ class WorkQueue:
     def reap(self) -> List[int]:
         """Declare heartbeat-expired nodes dead; requeue their leased units
         (epoch bumps on re-grant) and redistribute their queued entries onto
-        the least-loaded alive nodes. Returns the requeued unit idxs."""
+        the least-loaded alive nodes. Then expire individual leases a full
+        TTL past their last renewal even though their holder still
+        heartbeats — the lost-grant case (see the module docstring): the
+        node never learned of the lease, so nobody will ever renew,
+        complete, or free it. Returns the requeued unit idxs."""
         with self._lock:
             now = self._now()
             newly_dead = [n for n, hb in self._heartbeats.items()
@@ -1222,8 +1245,68 @@ class WorkQueue:
             requeued: List[int] = []
             for n in newly_dead:
                 requeued.extend(self._declare_dead(n))
+            requeued.extend(self._expire_stale_leases(now))
             self._journal_maybe_compact()
             return requeued
+
+    def _expire_stale_leases(self, now: float) -> List[int]:
+        """Caller holds the lock. Reclaim leases whose ``granted_at`` is
+        older than ``lease_ttl_s`` while the holding node is alive: nodes
+        renew every in-hand lease on each heartbeat (refreshing
+        ``granted_at``), so staleness on a live node means the grant was
+        lost in flight. Dead holders are left to :meth:`_declare_dead` —
+        it already requeued (or will requeue) everything they held."""
+        requeued: List[int] = []
+        for idx, lease in list(self._leases.items()):
+            if lease.node_id not in self._dead \
+                    and now - lease.granted_at > self.lease_ttl_s:
+                requeued.extend(self._expire_lease(idx, False))
+        for idx, lease in list(self._spec.items()):
+            if lease.node_id in self._dead \
+                    or now - lease.granted_at <= self.lease_ttl_s:
+                continue
+            if idx in self._spec_queues.get(lease.node_id, ()):
+                # still queued coordinator-side: the twin was never handed
+                # out, so nothing was lost in flight — delivery (the spec
+                # pop in _next_unit_locked) restarts its expiry clock
+                continue
+            self._expire_lease(idx, True)
+        return requeued
+
+    def _expire_lease(self, idx: int, speculative: bool) -> List[int]:
+        """Caller holds the lock. Drop one stale lease and requeue its unit
+        (primary) or settle a deferred primary failure (twin — mirroring
+        the dead-node twin path). The epoch is deliberately *not* bumped
+        here: the next grant bumps it, so a re-run outranks the lost
+        lease, while a holder that merely received the grant late can
+        still complete — its report retires the unit through the ordinary
+        arbitration and the stale deque entry is skipped as done."""
+        lease = (self._spec if speculative else self._leases).pop(idx, None)
+        if lease is None:
+            return []
+        rec = {"t": "expire", "i": idx}
+        if speculative:
+            rec["s"] = 1
+        self._journal_append(rec)
+        if speculative:
+            # an expired twin evaporates; if the primary already failed and
+            # was only waiting on this twin, the unit settles as failed
+            if idx in self._failed_pending and idx not in self._done:
+                self._retire(idx, self._failed_pending.pop(idx))
+                pend = self._pending_meta.pop(idx, None)
+                if pend is not None:
+                    self._retire_meta(idx, pend)
+            return []
+        self._started.pop(idx, None)
+        if idx in self._done:
+            return []
+        alive = [n for n in self._queues if n not in self._dead]
+        if alive:
+            self._queues[self._best_node(idx, alive)].appendleft(idx)
+        else:
+            self._backlog_appendleft(idx)
+        self.requeues.append(idx)
+        return [idx]
 
     def _declare_dead(self, node_id: str) -> List[int]:
         if node_id in self._dead:

@@ -75,6 +75,13 @@ MAX_FRAME_BYTES = 8 << 20
 # start with "{", so one peeked byte disambiguates the framings per request.
 _FRAME_MAGIC = b"\x00"
 
+# Per-attempt connect timeout while redialing (reconnect path only; the
+# constructor's first dial keeps the caller's full timeout_s). Redials run
+# under the client's transport lock, so one attempt must stay well under
+# both the reconnect window and the coordinator's lease TTL — see
+# QueueClient._connect_locked.
+REDIAL_CONNECT_TIMEOUT_S = 1.5
+
 # The queue surface a client may invoke. getattr-dispatch is gated on this
 # allowlist so a malformed request can name only protocol methods, nothing
 # else on the object.
@@ -387,9 +394,13 @@ class QueueClient:
     **Reconnect** (default on): a transport error drops the socket and the
     call redials with capped exponential backoff + jitter for up to
     ``reconnect_window_s``, then replays the request — safe because the
-    entire queue surface is idempotent or epoch-guarded (a duplicate
-    ``complete`` lands in the dup log, a duplicate ``register`` refreshes a
-    heartbeat, a stale ``renew`` is rejected). Each redial renegotiates
+    queue surface is idempotent, epoch-guarded, or lease-TTL-backstopped
+    (a duplicate ``complete`` lands in the dup log, a duplicate
+    ``register`` refreshes a heartbeat, a stale ``renew`` is rejected; a
+    grant whose *reply* was lost — the one non-idempotent case, since the
+    replayed call draws a fresh lease — is reclaimed by the coordinator's
+    per-lease expiry: nobody ever renews a lease the node never received,
+    so ``reap()`` requeues it after one TTL). Each redial renegotiates
     binary framing from scratch and re-registers the node with its last
     summary. Every server response carries an incarnation id; when it
     changes (the coordinator restarted), registered restart hooks fire so
@@ -512,12 +523,24 @@ class QueueClient:
                 pass
         self._sock = None
 
-    def _connect_locked(self):
+    def _connect_locked(self, deadline: Optional[float] = None):
         """Redial. Framing restarts at JSON-lines — the server on the other
         end may be a different (even older) build than last time, so the
-        binary upgrade is renegotiated per connection, never remembered."""
-        self._sock = socket.create_connection(self.addr,
-                                              timeout=self.timeout_s)
+        binary upgrade is renegotiated per connection, never remembered.
+
+        The dial itself uses a short per-attempt timeout, clamped to the
+        time left before ``deadline`` (the reconnect window): this method
+        runs under the transport lock, and a single full-``timeout_s``
+        dial into a partition would both blow through the whole reconnect
+        window and serialize the node's heartbeat/renew threads behind the
+        lock — a healthy node would stop heartbeating and get reaped.
+        Once connected the socket reverts to the full ``timeout_s`` for
+        request/response traffic."""
+        timeout = min(self.timeout_s, REDIAL_CONNECT_TIMEOUT_S)
+        if deadline is not None:
+            timeout = min(timeout, max(0.05, deadline - time.monotonic()))
+        self._sock = socket.create_connection(self.addr, timeout=timeout)
+        self._sock.settimeout(self.timeout_s)
         self._file = self._sock.makefile("rb")
         self._binary = False
 
@@ -596,7 +619,7 @@ class QueueClient:
                         f"is down")
                 try:
                     if self._sock is None:
-                        self._connect_locked()
+                        self._connect_locked(deadline)
                         self._replay_session_locked()
                     resp = self._roundtrip_locked(method, params)
                 except _FatalStream as e:

@@ -111,6 +111,123 @@ def test_reap_requeues_leases_after_heartbeat_expiry(dataset):
     assert "a" not in q.alive_nodes() and "b" in q.alive_nodes()
 
 
+def test_reap_expires_unrenewed_lease_on_live_node(dataset):
+    """The lost-grant case: a grant whose reply never reached the node
+    (connection dropped mid-reply and the reconnect replay drew a fresh
+    lease, or a coordinator crash right after journaling it). The node
+    keeps heartbeating but never renews the orphaned lease, so reap()
+    must reclaim it lease-by-lease — without that the unit stays leased
+    forever and the campaign never finishes."""
+    t = {"now": 0.0}
+    q, units = _queue(dataset, ["a", "b"], lease_ttl_s=1.0,
+                      now=lambda: t["now"])
+    unit, lease = q.next_unit("a")
+    t["now"] = 0.9
+    q.heartbeat("a")
+    q.heartbeat("b")
+    assert q.reap() == []                    # within ttl: nothing
+    t["now"] = 1.1
+    q.heartbeat("a")
+    q.heartbeat("b")
+    assert q.reap() == [lease.unit_idx]      # orphan reclaimed...
+    assert set(q.alive_nodes()) == {"a", "b"}   # ...both nodes stay alive
+    # the unit is grantable again, at a higher epoch
+    got = None
+    while got is None or got[1].unit_idx != lease.unit_idx:
+        got = q.next_unit("b")
+    assert got[1].epoch == lease.epoch + 1
+    # the old holder (had the grant actually arrived late) renews into a
+    # rejection, exactly like any reaped lease
+    assert q.renew(lease.unit_idx, "a", lease.epoch) is False
+
+
+def test_renewed_lease_never_expires_on_live_node(dataset):
+    t = {"now": 0.0}
+    q, units = _queue(dataset, ["a", "b"], lease_ttl_s=1.0,
+                      now=lambda: t["now"])
+    unit, lease = q.next_unit("a")
+    t["now"] = 0.9
+    q.heartbeat("a")
+    q.heartbeat("b")
+    assert q.renew(lease.unit_idx, "a", lease.epoch)
+    t["now"] = 1.8                           # grant is stale, renewal is not
+    q.heartbeat("a")
+    q.heartbeat("b")
+    assert q.reap() == []
+    q.complete(lease.unit_idx, "a", "ok")
+    assert q.done_status()[lease.unit_idx] == "ok"
+
+
+def test_expired_lease_late_completion_stays_exactly_once(dataset):
+    """Expiry doesn't eagerly bump the epoch, so a holder whose grant
+    merely arrived late can still report; the re-run's duplicate lands in
+    the dup log — exactly one primary record either way."""
+    t = {"now": 0.0}
+    q, units = _queue(dataset, ["a", "b"], lease_ttl_s=1.0,
+                      now=lambda: t["now"])
+    unit, lease = q.next_unit("a")
+    idx = lease.unit_idx
+    t["now"] = 1.1
+    q.heartbeat("a")
+    q.heartbeat("b")
+    assert q.reap() == [idx]
+    q.complete(idx, "a", "ok", meta={"seconds": 0.1, "status": "ok"})
+    q.complete(idx, "b", "ok", meta={"seconds": 0.2, "status": "ok"})
+    snap = q.results_snapshot()
+    assert snap["primaries"][idx]["node_id"] == "a"
+    assert [d["idx"] for d in snap["duplicates"]] == [idx]
+
+
+def test_expired_twin_settles_deferred_primary_failure(dataset):
+    """A delivered twin whose reply was lost in flight (b's client redialed
+    and never learned of the lease) must not wedge a unit whose primary
+    already failed and was only waiting on the twin."""
+    t = {"now": 0.0}
+    q, units = _queue(dataset, ["a", "b"], lease_ttl_s=1.0,
+                      now=lambda: t["now"])
+    unit, lease = q.next_unit("a")
+    q.mark_started(lease.unit_idx)
+    assert q.speculate(lease.unit_idx, "b") is not None
+    got = q.next_unit("b")                        # delivery; reply then lost
+    assert got[1].speculative and got[1].unit_idx == lease.unit_idx
+    q.complete(lease.unit_idx, "a", "failed")     # deferred: twin racing
+    assert lease.unit_idx not in q.done_status()
+    t["now"] = 1.1
+    q.heartbeat("a")
+    q.heartbeat("b")
+    q.reap()                                      # b never renews the twin
+    assert q.done_status()[lease.unit_idx] == "failed"
+
+
+def test_queued_undelivered_twin_does_not_expire(dataset):
+    """A twin still sitting in its target's speculative queue was never on
+    the wire, so nothing can have been lost: expiry must leave it alone —
+    the target (busy with a long unit) picks it up whenever it next polls,
+    and delivery restarts the expiry clock."""
+    t = {"now": 0.0}
+    q, units = _queue(dataset, ["a", "b"], lease_ttl_s=1.0,
+                      now=lambda: t["now"])
+    unit, lease = q.next_unit("a")
+    q.mark_started(lease.unit_idx)
+    twin = q.speculate(lease.unit_idx, "b")
+    assert twin is not None
+    t["now"] = 1.5                                # b busy: hasn't polled yet
+    q.heartbeat("a")
+    q.heartbeat("b")
+    assert q.renew(lease.unit_idx, "a", lease.epoch)   # primary stays renewed
+    assert q.reap() == []
+    got = q.next_unit("b")                        # late pickup still works
+    assert got[1].speculative and got[1].unit_idx == lease.unit_idx
+    # the clock restarted at delivery: one TTL from now, not from grant
+    t["now"] = 2.4
+    q.heartbeat("a")
+    q.heartbeat("b")
+    assert q.renew(lease.unit_idx, "a", lease.epoch)
+    assert q.reap() == []
+    q.complete(lease.unit_idx, "b", "ok", speculative=True)
+    assert q.done_status()[lease.unit_idx] == "ok"
+
+
 def test_speculate_rejects_same_node_and_double_twin(dataset):
     q, units = _queue(dataset, ["a", "b"])
     unit, lease = q.next_unit("a")

@@ -294,6 +294,55 @@ def test_recover_releases_dag_children_of_pre_crash_parents(dataset,
     assert unit3 is not None and unit3[1].unit_idx == 3
 
 
+def test_expired_lease_is_not_resurrected_by_recovery(dataset, tmp_path):
+    """reap()'s per-lease expiry (the lost-grant case) journals an expire
+    record: a recovered coordinator must see the unit as grantable, not as
+    still leased to the node that never learned of it."""
+    pipe, units = _work(dataset)
+    t = {"now": 0.0}
+    q = WorkQueue(units, (), lease_ttl_s=1.0, now=lambda: t["now"],
+                  journal=Journal(tmp_path / "j", fsync="never"))
+    assert q.register("a")
+    _, lease = q.next_unit("a")
+    t["now"] = 1.1
+    q.heartbeat("a")                         # the holder stays alive...
+    assert q.reap() == [lease.unit_idx]      # ...the orphan lease expires
+
+    q2 = WorkQueue.recover(Journal(tmp_path / "j", fsync="never"),
+                           lease_ttl_s=60.0)
+    grants = {}
+    while (got := q2.next_unit("a")) is not None:
+        grants[got[1].unit_idx] = got[1]
+    # grantable immediately — no 60s reap wait — and fenced above the lost
+    # lease's epoch
+    assert lease.unit_idx in grants
+    assert grants[lease.unit_idx].epoch > lease.epoch
+
+
+def test_cluster_runner_refuses_to_overwrite_existing_journal(dataset,
+                                                              tmp_path):
+    """A leftover journal is a crashed run's only recoverable state:
+    run() must refuse it (and leave it intact) unless told to discard."""
+    from repro.dist import ClusterRunner
+    pipe, units = _work(dataset)
+    jdir = tmp_path / "j"
+    q = WorkQueue(units, (), journal=Journal(jdir, fsync="never"))
+    assert q.register("a")
+    _, lease = q.next_unit("a")
+    q.complete(lease.unit_idx, "a", "ok")    # durable history worth keeping
+
+    runner = ClusterRunner(pipe, dataset.root, nodes=1, journal_dir=jdir)
+    with pytest.raises(RuntimeError, match="already holds"):
+        runner.run(units)
+    # the refusal destroyed nothing: the journal still recovers
+    q2 = WorkQueue.recover(Journal(jdir, fsync="never"))
+    assert q2.done_status() == {lease.unit_idx: "ok"}
+
+    results = ClusterRunner(pipe, dataset.root, nodes=1, journal_dir=jdir,
+                            journal_overwrite=True).run(units)
+    assert sum(r.status == "ok" for r in results) == len(units)
+
+
 def test_double_recover_is_idempotent(dataset, tmp_path):
     pipe, units = _work(dataset)
     q = WorkQueue(units, (), lease_ttl_s=5.0,
