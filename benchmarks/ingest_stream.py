@@ -1,0 +1,207 @@
+"""Chunked streaming ingest vs load-then-verify, verification included.
+
+The paper's ingest path pays the storage link once to move each volume and
+then the host again to verify it (sha256 + fast QA) — two sequential costs
+per byte. ``repro.core.stream`` chunks the transfer so the incremental
+sha256 and the chunk-accumulating fused QA fold run *while* the next chunk
+is still on the link (a prefetch thread keeps the link busy). This bench
+measures exactly that overlap on one machine with the paper's 0.60 Gb/s
+lab-network storage model:
+
+* **load-then-verify arm** — each file's bytes cross the modelled link
+  first (per-chunk sleep at 0.60 Gb/s), then the host hashes them and runs
+  the one-shot QA+checksum fold. Verification is INCLUDED in the timing —
+  this is the honest sequential baseline, not a strawman read-only loop.
+* **chunked arm** — the same files, same modelled link, same verification
+  work, but driven through ``stream_chunks`` with the prefetching reader:
+  hash+fold of chunk *n* overlap the link time of chunk *n+1*.
+
+Both arms produce the sha256 and the full QAStats for every file; the
+bench asserts they are identical across arms (same bytes, same verdicts).
+
+Acceptance gates (checked here and in CI; a regression fails loud):
+
+* chunked-arm effective Gb/s (verification included) >= the
+  load-then-verify arm's — overlap must never cost throughput;
+* the chunked fold is bit-identical to the one-shot ``qa_stats`` kernel on
+  an oracle sweep of shapes x chunk sizes (incl. chunk > volume and
+  non-dividing tails, NaN/Inf), on both the host and device backends.
+
+Writes ``benchmarks/out/ingest_stream.json`` (CI artifact; override with
+``REPRO_BENCH_JSON``). Runs thread-pinned in a subprocess (see ``_pin``).
+"""
+from __future__ import annotations
+
+import hashlib
+import io
+import json
+import os
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from ._pin import run_pinned
+
+N_FILES = 24
+SHAPE = (64, 64, 64)                # 1 MiB float32 per volume (paper-scale:
+                                    # link speed, not per-file overhead,
+                                    # decides the comparison)
+CHUNK_BYTES = 128 << 10             # several chunks per volume
+PAPER_REFERENCE_GBPS = {"lab_network": 0.60, "cloud_storage": 0.33}
+MODEL_STORAGE_GBPS = PAPER_REFERENCE_GBPS["lab_network"]
+
+_INPROC_FLAG = "REPRO_INGEST_STREAM_BENCH_INPROC"
+_JSON_OUT = Path(__file__).resolve().parent / "out" / "ingest_stream.json"
+
+
+def _link_gbps(nbytes: int, seconds: float) -> float:
+    return nbytes * 8 / seconds / 1e9 if seconds > 0 else 0.0
+
+
+def _throttled_chunks(path: Path, chunk_bytes: int):
+    """The modelled 0.60 Gb/s storage link: every chunk pays its wire time
+    before it lands. Runs inside the prefetch thread in the chunked arm, so
+    the sleep is exactly the window the consumer has to hash+fold."""
+    with open(path, "rb") as f:
+        while True:
+            b = f.read(chunk_bytes)
+            if not b:
+                return
+            time.sleep(len(b) * 8 / (MODEL_STORAGE_GBPS * 1e9))
+            yield b
+
+
+def _oracle_sweep():
+    """Bit-exactness gate: chunked fold == one-shot qa_stats across shapes,
+    chunk sizes (incl. chunk > volume, non-dividing tails), NaN/Inf, both
+    backends. Any mismatch raises — wrong-but-fast is a failure."""
+    from repro.kernels.checksum import QAChecksumAccumulator, qa_stats
+    rng = np.random.default_rng(11)
+    cases = 0
+    for shape in [(1,), (16, 16, 16), (33, 7), (1025,)]:
+        vol = rng.normal(80, 25, shape).astype(np.float32)
+        if vol.size > 4:
+            vol.flat[1] = np.nan
+            vol.flat[vol.size - 1] = np.inf
+        ref = qa_stats(vol, interpret=True)
+        data = vol.tobytes()
+        for chunk in (7, 4096, 1 << 30):
+            for backend in ("host", "device"):
+                acc = QAChecksumAccumulator(vol.size, vol.dtype,
+                                            backend=backend, interpret=True)
+                for off in range(0, len(data), chunk):
+                    acc.update(data[off:off + chunk])
+                got = acc.finalize()
+                if got != ref:
+                    raise RuntimeError(
+                        f"chunked fold diverged from one-shot kernel: "
+                        f"shape={shape} chunk={chunk} backend={backend}: "
+                        f"{got} != {ref}")
+                cases += 1
+    return cases
+
+
+def _run_inproc():
+    from repro.core.stream import _Prefetcher, stream_chunks
+    from repro.kernels.checksum import QAChecksumAccumulator
+
+    oracle_cases = _oracle_sweep()
+    rows = [("ingest_stream_oracle_cases", oracle_cases,
+             "chunked-fold vs one-shot kernel bit-exactness sweep (all ok)")]
+
+    with tempfile.TemporaryDirectory() as td:
+        td = Path(td)
+        rng = np.random.default_rng(0)
+        files = []
+        for i in range(N_FILES):
+            vol = rng.normal(100, 20, SHAPE).astype(np.float32)
+            if i % 5 == 0:                       # QA work is not all-accept
+                vol.flat[i] = np.nan
+            p = td / f"vol-{i:03d}.npy"
+            np.save(p, vol)
+            files.append(p)
+        total_bytes = sum(p.stat().st_size for p in files)
+
+        # -- load-then-verify arm: link, THEN hash, THEN one-shot fold ------
+        baseline = {}
+        t0 = time.perf_counter()
+        for p in files:
+            data = b"".join(_throttled_chunks(p, CHUNK_BYTES))
+            digest = hashlib.sha256(data).hexdigest()
+            arr = np.load(io.BytesIO(data), allow_pickle=False)
+            acc = QAChecksumAccumulator(arr.size, arr.dtype, backend="host")
+            acc.update(arr.tobytes())
+            baseline[p.name] = (digest, acc.finalize())
+        base_s = time.perf_counter() - t0
+
+        # -- chunked arm: identical link + verification, overlapped --------
+        streamed = {}
+        read_s = hash_s = 0.0
+        t0 = time.perf_counter()
+        for p in files:
+            pf = _Prefetcher(_throttled_chunks(p, CHUNK_BYTES))
+            _, digest, qa, rep = stream_chunks(
+                pf, npy_qa=True, chunk_bytes=CHUNK_BYTES,
+                qa_backend="host", prefetch=pf)
+            streamed[p.name] = (digest, qa)
+            read_s += rep.read_s
+            hash_s += rep.hash_s
+        stream_s = time.perf_counter() - t0
+
+        if streamed != baseline:
+            diff = [n for n in baseline if streamed.get(n) != baseline[n]]
+            raise RuntimeError(
+                f"chunked arm diverged from load-then-verify on {diff}")
+        if any(qa is None for _, qa in streamed.values()):
+            raise RuntimeError("chunked arm skipped QA on some file")
+
+        base_gbps = round(_link_gbps(total_bytes, base_s), 3)
+        stream_gbps = round(_link_gbps(total_bytes, stream_s), 3)
+        overlap_s = round(base_s - stream_s, 3)
+        rows += [
+            ("ingest_stream_baseline_gbps", base_gbps,
+             f"load-then-verify Gb/s (verification included) over the "
+             f"{MODEL_STORAGE_GBPS} Gb/s-modelled link"),
+            ("ingest_stream_chunked_gbps", stream_gbps,
+             "chunked in-flight-verify Gb/s (verification included), "
+             "same link model"),
+            ("ingest_stream_overlap_saved_s", overlap_s,
+             f"wall seconds the overlap pipeline saved on "
+             f"{N_FILES} x {SHAPE} volumes"),
+        ]
+
+        # gate: overlap must never cost throughput
+        if stream_gbps < base_gbps:
+            raise RuntimeError(
+                f"chunked ingest {stream_gbps} Gb/s fell below "
+                f"load-then-verify {base_gbps} Gb/s — streaming regression")
+
+    out = Path(os.environ.get("REPRO_BENCH_JSON", _JSON_OUT))
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps({
+        "files": N_FILES, "shape": list(SHAPE), "chunk_bytes": CHUNK_BYTES,
+        "total_bytes": total_bytes,
+        "model_storage_gbps": MODEL_STORAGE_GBPS,
+        "paper_reference_gbps": PAPER_REFERENCE_GBPS,
+        "baseline": {"seconds": round(base_s, 3), "gbps": base_gbps},
+        "chunked": {"seconds": round(stream_s, 3), "gbps": stream_gbps,
+                    "read_s": round(read_s, 3), "hash_s": round(hash_s, 3)},
+        "oracle_cases": oracle_cases,
+        "gate": {"chunked_not_slower": True, "bit_exact_oracle": True,
+                 "digests_identical_across_arms": True},
+        "rows": [[n, v, d] for n, v, d in rows],
+    }, indent=1))
+    return rows
+
+
+def run():
+    """Benchmark entry (benchmarks.run): re-exec pinned — see ``_pin``."""
+    return run_pinned("benchmarks.ingest_stream", "ingest_stream_",
+                      _INPROC_FLAG, _run_inproc, timeout=900)
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(",".join(str(c) for c in row))

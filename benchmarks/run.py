@@ -12,15 +12,16 @@ def main() -> None:
     (Path(__file__).resolve().parent / "out").mkdir(parents=True,
                                                     exist_ok=True)
     from . import (campaign_plan, cluster_throughput, executor_throughput,
-                   kernel_bench, locality_throughput, peer_fabric,
-                   pipeline_throughput, recovery, rpc_throughput, table1_cost,
-                   train_step_bench)
+                   ingest_stream, kernel_bench, locality_throughput,
+                   peer_fabric, pipeline_throughput, recovery, rpc_throughput,
+                   table1_cost, train_step_bench)
     mods = [("table1_cost", table1_cost), ("pipeline_throughput", pipeline_throughput),
             ("executor_throughput", executor_throughput),
             ("cluster_throughput", cluster_throughput),
             ("rpc_throughput", rpc_throughput),
             ("locality_throughput", locality_throughput),
             ("peer_fabric", peer_fabric),
+            ("ingest_stream", ingest_stream),
             ("campaign_plan", campaign_plan),
             ("recovery", recovery),
             ("train_step", train_step_bench), ("kernels", kernel_bench)]

@@ -55,6 +55,14 @@ class Provenance:
     # origins — like cache_hit, this is pure data-plane provenance.
     peer_fetch: bool = False
     bytes_from_peer: int = 0
+    # Streaming-ingest provenance (repro.core.stream): the per-unit
+    # StreamReport dict when this commit's inputs were verified in-flight —
+    # digests (and, when enabled, the fused device QA fold) computed
+    # chunk-by-chunk while the bytes crossed the storage or peer link, with
+    # per-stage wall times and the overlap the pipeline won. None when every
+    # input was served resident or streaming was disabled; the recorded
+    # input checksums are identical either way.
+    stream: Optional[Dict] = None
 
     def save(self, out_dir: Path):
         """Atomic write (tmp + rename): a concurrent reader — or a racing
@@ -82,7 +90,8 @@ def make_provenance(pipeline: str, digest: str, inputs: Dict[str, str],
                     node_id: str = "", lease_epoch: int = 0,
                     cache_hit: bool = False, locality_score: float = 0.0,
                     bytes_from_cache: int = 0, peer_fetch: bool = False,
-                    bytes_from_peer: int = 0) -> Provenance:
+                    bytes_from_peer: int = 0,
+                    stream: Optional[Dict] = None) -> Provenance:
     return Provenance(
         pipeline=pipeline, pipeline_digest=digest,
         user=getpass.getuser(), host=platform.node(),
@@ -91,7 +100,7 @@ def make_provenance(pipeline: str, digest: str, inputs: Dict[str, str],
         attempt=attempt, node_id=node_id, lease_epoch=lease_epoch,
         cache_hit=cache_hit, locality_score=locality_score,
         bytes_from_cache=bytes_from_cache, peer_fetch=peer_fetch,
-        bytes_from_peer=bytes_from_peer)
+        bytes_from_peer=bytes_from_peer, stream=stream)
 
 
 def is_complete(out_dir: Path, digest: Optional[str] = None) -> bool:

@@ -40,6 +40,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from . import stream as stream_mod
 from .integrity import sha256_load_array, sha256_save_array
 from .manifest import DatasetManifest
 from .pipelines import Pipeline
@@ -234,8 +235,11 @@ def _commit_lock(out_dir: Path) -> _DirLock:
 
 # (inputs by suffix, rel-path -> sha256, every input served from host cache,
 #  input bytes off node-local disk rather than shared storage, input bytes
-#  streamed from warm peers over the blob fabric)
-LoadedInputs = Tuple[Dict[str, np.ndarray], Dict[str, str], bool, int, int]
+#  streamed from warm peers over the blob fabric, per-unit streaming-ingest
+#  report — StreamReport dict aggregated over the unit's streamed fetches,
+#  None when nothing streamed)
+LoadedInputs = Tuple[Dict[str, np.ndarray], Dict[str, str], bool, int, int,
+                     Optional[Dict]]
 
 
 def load_unit_inputs(unit: WorkUnit, data_root: Path,
@@ -254,7 +258,11 @@ def load_unit_inputs(unit: WorkUnit, data_root: Path,
     True iff *every* input came from the local cache — stamped into
     provenance as ``cache_hit`` — the fourth counts the input bytes the
     cache kept off the storage link (``bytes_from_cache``), and the fifth
-    the bytes that arrived over peer links (``bytes_from_peer``)."""
+    the bytes that arrived over peer links (``bytes_from_peer``). The sixth
+    is the unit's aggregated streaming-ingest report (digests computed
+    chunk-by-chunk while the bytes moved, ``repro.core.stream``; ``None``
+    when every input was served resident or streaming is disabled) —
+    stamped into provenance as ``stream``."""
     data_root = Path(data_root)
     inputs: Dict[str, np.ndarray] = {}
     in_sums: Dict[str, str] = {}
@@ -263,23 +271,37 @@ def load_unit_inputs(unit: WorkUnit, data_root: Path,
     hits = 0
     hit_bytes = 0
     peer_bytes = 0
+    stream_rep: Optional[stream_mod.StreamReport] = None
+    streaming = cache is None and stream_mod.stream_enabled()
     for suffix, rel in unit.inputs.items():
+        rep = None
         if cache is not None:
-            arr, digest, origin, nbytes = cache.fetch_array(
+            arr, digest, origin, nbytes, info = cache.fetch_array(
                 data_root / rel, digest_hint=digests.get(suffix),
                 size_hint=sizes.get(suffix))
+            if info is not None:
+                rep = stream_mod.StreamReport.from_dict(info)
             if origin == "cache":
                 hits += 1
                 hit_bytes += nbytes
             elif origin == "peer":
                 peer_bytes += nbytes
+        elif streaming:
+            arr, digest, _qa, rep = stream_mod.stream_load_npy(
+                data_root / rel)
         else:
             arr, digest = sha256_load_array(data_root / rel)
+        if rep is not None:
+            if stream_rep is None:
+                stream_rep = rep
+            else:
+                stream_rep.merge(rep)
         in_sums[rel] = digest
         inputs[suffix] = arr
     return (inputs, in_sums,
             bool(unit.inputs) and hits == len(unit.inputs), hit_bytes,
-            peer_bytes)
+            peer_bytes,
+            stream_rep.to_dict() if stream_rep is not None else None)
 
 
 def safe_load_unit_inputs(unit: WorkUnit, data_root: Path,
@@ -341,9 +363,10 @@ def run_unit(unit: WorkUnit, pipeline: Pipeline, data_root: Path,
         if fault_hook is not None:
             fault_hook(unit, attempt)       # test hook: injected node failures
         if preloaded is not None:
-            inputs, in_sums, cache_hit, hit_bytes, peer_bytes = preloaded
+            inputs, in_sums, cache_hit, hit_bytes, peer_bytes, stream = \
+                preloaded
         else:
-            inputs, in_sums, cache_hit, hit_bytes, peer_bytes = \
+            inputs, in_sums, cache_hit, hit_bytes, peer_bytes, stream = \
                 load_unit_inputs(unit, data_root, cache=cache)
         outputs = pipeline.run(inputs)
         out_sums = {}
@@ -361,7 +384,8 @@ def run_unit(unit: WorkUnit, pipeline: Pipeline, data_root: Path,
                             locality_score=locality_score,
                             bytes_from_cache=hit_bytes,
                             peer_fetch=peer_bytes > 0,
-                            bytes_from_peer=peer_bytes).save(out_dir)
+                            bytes_from_peer=peer_bytes,
+                            stream=stream).save(out_dir)
         _write_outputs_through(cache, out_dir, out_sums)
         return UnitResult(unit, "ok", time.time() - t0, attempt,
                           bytes_from_cache=hit_bytes,

@@ -42,6 +42,8 @@ import threading
 import time
 from typing import Callable, Dict, List, Optional, Tuple
 
+from ..core.stream import stream_chunk_bytes
+
 # Runbook knob (docs/operating.md): "host:port" this worker's blob server
 # binds; the *advertised* address replaces a wildcard host with the
 # machine's hostname so peers can actually reach it. Unset = no blob server
@@ -218,8 +220,14 @@ class _BlobConn:
         self._file = self._sock.makefile("rb")
         self._id = 0
 
-    def get(self, digest: str) -> bytes:
-        """Request one blob body (unverified; the fabric hashes it)."""
+    def get(self, digest: str) -> Tuple[bytes, str]:
+        """Request one blob body. The body is read off the socket in
+        streaming-ingest-sized chunks with the sha256 folded in as each
+        chunk lands (``repro.core.stream`` discipline: hashing overlaps the
+        transfer, socket buffers refill while the CPU hashes), so the
+        returned ``(data, sha256_hex)`` needs no post-transfer hashing
+        pass. The *caller* still owns the verify-vs-requested-digest
+        decision."""
         self._id += 1
         self._sock.sendall(json.dumps(
             {"id": self._id, "method": "get",
@@ -239,12 +247,20 @@ class _BlobConn:
         size = head.get("size")
         if not isinstance(size, int) or not 0 <= size <= _MAX_BLOB_BYTES:
             raise ValueError(f"blob peer {self.addr}: bad size {size!r}")
-        data = self._file.read(size)
-        if len(data) != size:
-            raise ConnectionError(
-                f"blob peer {self.addr}: body truncated at "
-                f"{len(data)}/{size} bytes")
-        return data
+        h = hashlib.sha256()
+        parts: List[bytes] = []
+        remaining = size
+        chunk_bytes = stream_chunk_bytes()
+        while remaining:
+            piece = self._file.read(min(remaining, chunk_bytes))
+            if not piece:
+                raise ConnectionError(
+                    f"blob peer {self.addr}: body truncated at "
+                    f"{size - remaining}/{size} bytes")
+            h.update(piece)
+            parts.append(piece)
+            remaining -= len(piece)
+        return b"".join(parts), h.hexdigest()
 
     def close(self):
         try:
@@ -259,11 +275,12 @@ def fetch_blob(addr: str, digest: str, *, timeout_s: float = 5.0) -> bytes:
     return the raw body. Raises :class:`BlobNotFound` on an explicit peer
     404 and ``OSError``/``ValueError`` on transport or framing trouble —
     the caller treats every one of those as "use shared storage". The body
-    is returned unverified; :class:`PeerFabric` hashes it (and reuses
-    connections instead of paying this dial per blob)."""
+    is returned unverified against ``digest``; :class:`PeerFabric` checks
+    the in-flight hash (and reuses connections instead of paying this dial
+    per blob)."""
     conn = _BlobConn(addr, timeout_s)
     try:
-        return conn.get(digest)
+        return conn.get(digest)[0]
     finally:
         conn.close()
 
@@ -388,7 +405,7 @@ class PeerFabric:
             try:
                 conn = self._conn_for(addr)
                 with conn.lock:
-                    data = conn.get(digest)
+                    data, got_digest = conn.get(digest)
             except BlobNotFound:
                 self._bump("peer_false_positives")
                 continue
@@ -398,9 +415,10 @@ class PeerFabric:
                 self._bump("peer_dead")
                 self._quarantine_peer(addr)
                 continue
-            if hashlib.sha256(data).hexdigest() != digest:
-                # corrupted body or a lying peer: the receiving-side
-                # re-verification is the fabric's correctness boundary
+            if got_digest != digest:
+                # corrupted body or a lying peer: the in-flight hash
+                # (folded chunk-by-chunk as the body streamed in) is the
+                # fabric's correctness boundary — no post-transfer pass
                 self._bump("peer_digest_mismatches")
                 continue
             return data, addr

@@ -75,6 +75,7 @@ from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from ..core import stream as stream_mod
 from ..core.integrity import atomic_write_bytes
 
 # Runbook knobs (docs/operating.md): where the host cache lives and how big
@@ -224,6 +225,15 @@ class InputCache:
         self.bytes_to_peers = 0
         self.storage_seconds = 0.0    # wall time on the storage link (misses)
         self.peer_seconds = 0.0       # wall time on peer links (fetch side)
+        # streaming-ingest meters (repro.core.stream): misses whose digest
+        # was computed chunk-by-chunk while the bytes moved, and the wall
+        # time the overlap pipeline saved versus a load-then-hash sequence
+        self.stream_fetches = 0
+        self.stream_bytes = 0
+        self.stream_chunks = 0
+        self.stream_hash_seconds = 0.0
+        self.stream_device_seconds = 0.0
+        self.stream_overlap_seconds = 0.0
         self._peer_bytes_by_addr: Dict[str, int] = {}   # per-link byte meter
         self._pins: Dict[str, int] = {}     # digest -> open-reader refcount
         # optional PeerFabric (repro.dist.blobserve): when attached, misses
@@ -402,6 +412,21 @@ class InputCache:
         faking the peer path; production never overrides it."""
         return Path(src).read_bytes()
 
+    def _storage_chunks(self, src: Path, chunk_bytes: int):
+        """Chunked twin of :meth:`_read_storage` for the streaming data
+        plane (``repro.core.stream``): yields the file's bytes in
+        ``chunk_bytes`` pieces so hashing and QA can overlap the transfer.
+        When a benchmark (or test) has monkeypatched ``_read_storage`` to
+        model the storage link, that seam is honored — its whole-file
+        result is re-chunked, so the modeled link cost still lands on the
+        read stage — and benchmarks that model a *chunked* link override
+        this method directly."""
+        rs = self._read_storage
+        if rs is not _DEFAULT_READ_STORAGE:
+            yield from stream_mod.bytes_chunks(rs(src), chunk_bytes)
+        else:
+            yield from stream_mod.file_chunks(Path(src), chunk_bytes)
+
     def _insert_blob(self, digest: str, data: bytes, key: Optional[str]):
         """Commit ``data`` as blob ``digest``, map ``key`` to it (when
         given), then evict down to budget. The multi-MB blob write happens
@@ -430,21 +455,26 @@ class InputCache:
 
     def fetch_array(self, src: Path, *, digest_hint: Optional[str] = None,
                     size_hint: Optional[int] = None,
-                    ) -> Tuple[np.ndarray, str, str, int]:
+                    device_qa: bool = False,
+                    ) -> Tuple[np.ndarray, str, str, int, Optional[dict]]:
         """Load the .npy at ``src``, serving from the host cache when its
-        bytes are already local. Returns ``(array, sha256, origin, nbytes)``
-        where ``origin`` is ``"cache"`` (local blob hit), ``"peer"`` (blob
-        streamed from a warm peer over the fabric) or ``"storage"`` (shared
-        storage read) — the digest is of the file content in every case, so
-        provenance input checksums are identical across origins, and
-        ``nbytes`` is the file size that moved over (or stayed off) each
-        link. On a local miss, a manifest ``digest_hint`` plus an attached
-        fabric tries the warmest peer first; any peer failure falls back to
-        one storage read, after which the bytes are inserted locally (then
-        evicted down to ``max_bytes``). ``size_hint`` (the manifest's byte
-        count) guards the peer path against a source file rewritten since
-        the manifest scan: on size disagreement the fetch goes straight to
-        storage so it observes the current bytes."""
+        bytes are already local. Returns
+        ``(array, sha256, origin, nbytes, stream)`` where ``origin`` is
+        ``"cache"`` (local blob hit), ``"peer"`` (blob streamed from a warm
+        peer over the fabric) or ``"storage"`` (shared storage read) — the
+        digest is of the file content in every case, so provenance input
+        checksums are identical across origins, and ``nbytes`` is the file
+        size that moved over (or stayed off) each link. ``stream`` is the
+        :class:`repro.core.stream.StreamReport` dict for a chunk-streamed
+        storage miss (digest — and with ``device_qa`` the fused QA fold —
+        computed while the bytes moved; see ``REPRO_STREAM_INGEST``), else
+        ``None``. On a local miss, a manifest ``digest_hint`` plus an
+        attached fabric tries the warmest peer first; any peer failure
+        falls back to one storage read, after which the bytes are inserted
+        locally (then evicted down to ``max_bytes``). ``size_hint`` (the
+        manifest's byte count) guards the peer path against a source file
+        rewritten since the manifest scan: on size disagreement the fetch
+        goes straight to storage so it observes the current bytes."""
         src = Path(src)
         key = self._source_key(src)
         with self._lock:
@@ -470,7 +500,7 @@ class InputCache:
                     self.hits += 1
                     self.bytes_from_cache += len(data)
                 return (np.load(io.BytesIO(data), allow_pickle=False),
-                        digest, "cache", len(data))
+                        digest, "cache", len(data), None)
             with self._lock:                # corrupt or vanished blob: drop it
                 size = self._blobs.pop(digest, None)
                 if size is not None:
@@ -517,24 +547,44 @@ class InputCache:
                     # alias a rewritten source onto old content
                     self._insert_blob(digest_hint, data,
                                       key if st_size == len(data) else None)
-                return arr, digest_hint, "peer", len(data)
-        # storage: one read of the shared link, hash the same bytes, insert
+                return arr, digest_hint, "peer", len(data), None
+        # storage: one pass over the shared link. With streaming on (the
+        # default) the bytes cross chunk-by-chunk and the sha256 — plus,
+        # when asked, the fused device QA fold — runs *while* they move; a
+        # prefetch thread keeps the link busy during each chunk's hashing.
+        # REPRO_STREAM_INGEST=0 restores the read-then-hash sequence.
+        stream_info: Optional[dict] = None
         t0 = time.perf_counter()
-        data = self._read_storage(src)
+        if stream_mod.stream_enabled():
+            cb = stream_mod.stream_chunk_bytes()
+            pf = stream_mod._Prefetcher(self._storage_chunks(src, cb))
+            data, digest, _qa, rep = stream_mod.stream_chunks(
+                pf, npy_qa=device_qa, chunk_bytes=cb, prefetch=pf)
+            stream_info = rep.to_dict()
+        else:
+            data = self._read_storage(src)
+            digest = hashlib.sha256(data).hexdigest()
+            rep = None
         dt = time.perf_counter() - t0
-        digest = hashlib.sha256(data).hexdigest()
         arr = np.load(io.BytesIO(data), allow_pickle=False)
         with self._lock:
             self.misses += 1
             self.bytes_from_storage += len(data)
             self.storage_seconds += dt
+            if rep is not None:
+                self.stream_fetches += 1
+                self.stream_bytes += rep.nbytes
+                self.stream_chunks += rep.chunks
+                self.stream_hash_seconds += rep.hash_s
+                self.stream_device_seconds += rep.device_s
+                self.stream_overlap_seconds += rep.overlap_s
         if len(data) > self.max_bytes:
             # an input bigger than the whole budget can never be served
             # later; inserting it would wipe every warm blob on the host
             # (and re-wipe on each fetch) for nothing — pass it through
-            return arr, digest, "storage", len(data)
+            return arr, digest, "storage", len(data), stream_info
         self._insert_blob(digest, data, key)
-        return arr, digest, "storage", len(data)
+        return arr, digest, "storage", len(data), stream_info
 
     def put_bytes(self, data: bytes, *, digest: Optional[str] = None,
                   source: Optional[Path] = None) -> Optional[str]:
@@ -572,6 +622,12 @@ class InputCache:
             "bytes_to_peers": self.bytes_to_peers,
             "storage_seconds": self.storage_seconds,
             "peer_seconds": self.peer_seconds,
+            "stream_fetches": self.stream_fetches,
+            "stream_bytes": self.stream_bytes,
+            "stream_chunks": self.stream_chunks,
+            "stream_hash_seconds": self.stream_hash_seconds,
+            "stream_device_seconds": self.stream_device_seconds,
+            "stream_overlap_seconds": self.stream_overlap_seconds,
             "peer_false_positives": 0,
             # per-link byte meter: {peer addr -> bytes fetched from it};
             # travels with the stats so WorkQueue.stats_snapshot can expose
@@ -640,6 +696,12 @@ class InputCache:
     def stats(self) -> Dict[str, object]:
         with self._lock:
             return self._stats_locked()
+
+
+# Captured at import so ``_storage_chunks`` can tell whether a benchmark or
+# test has monkeypatched the ``_read_storage`` seam (the modeled link then
+# keeps its cost, re-chunked).
+_DEFAULT_READ_STORAGE = InputCache._read_storage
 
 
 # ---------------------------------------------------------------------------

@@ -22,12 +22,15 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
-from .ref import M_POS, qa_block_size
+from .ref import M_POS, qa_block_size, tree_sum_f32
 
 
 def _auto_interpret(interpret):
@@ -200,6 +203,276 @@ def qa_checksum(x, *, blk: int = 1024, interpret=None):
     sums, qa, cnt = _qa_checksum_2d(x.reshape(1, -1), blk=blk,
                                     interpret=_auto_interpret(interpret))
     return sums[0], qa[0], cnt[0]
+
+
+# ---------------------------------------------------------------------------
+# chunk-accumulating variant (streaming ingest, repro.core.stream)
+# ---------------------------------------------------------------------------
+# The one-shot kernel above wants the whole volume resident before it can
+# launch — which is exactly the host-side pass the streaming ingest path
+# exists to kill. This variant folds the SAME per-block reduction over
+# arbitrary byte chunks as they arrive off the wire: each launch initialises
+# its outputs from the previous launch's (s1, s2, min, max, sum,
+# finite_count) carry and advances global word/value offsets, so the
+# arithmetic executed across all launches is operation-for-operation the
+# one-shot kernel's sequence — bit-exact by construction, for any chunking
+# (the accumulator below re-buffers to block alignment so callers may feed
+# arbitrary chunk sizes, including one chunk bigger than the volume).
+
+
+def _qa_chunk_kernel(w_ref, v_ref, off_ref, cs_ref, cqa_ref, ccnt_ref,
+                     sums_ref, qa_ref, cnt_ref, *, blk_w: int, blk_v: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        sums_ref[...] = cs_ref[...]
+        qa_ref[...] = cqa_ref[...]
+        cnt_ref[...] = ccnt_ref[...]
+
+    # checksum over the word view at the chunk's global word offset
+    w = w_ref[...]
+    idx = off_ref[0] + i * blk_w + jax.lax.iota(jnp.int32, blk_w)
+    valid = idx < off_ref[2]
+    w = jnp.where(valid, w, 0)
+    pos = jnp.where(valid, idx % M_POS, 0)
+    sums_ref[0] = sums_ref[0] + jnp.sum(w)
+    sums_ref[1] = sums_ref[1] + jnp.sum(w * pos)
+
+    # QA over the value view at the chunk's global value offset
+    v = v_ref[...].astype(jnp.float32)
+    vidx = off_ref[1] + i * blk_v + jax.lax.iota(jnp.int32, blk_v)
+    finite = jnp.isfinite(v) & (vidx < off_ref[3])
+    cnt_ref[0] = cnt_ref[0] + jnp.sum(finite.astype(jnp.int32))
+    qa_ref[0] = jnp.minimum(qa_ref[0],
+                            jnp.min(jnp.where(finite, v, jnp.inf)))
+    qa_ref[1] = jnp.maximum(qa_ref[1],
+                            jnp.max(jnp.where(finite, v, -jnp.inf)))
+    qa_ref[2] = qa_ref[2] + _tree_sum_f32(jnp.where(finite, v, 0.0))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("blk_w", "blk_v", "nsteps", "interpret"))
+def _qa_chunk_call(words, vals, off, carry_sums, carry_qa, carry_cnt, *,
+                   blk_w: int, blk_v: int, nsteps: int, interpret: bool):
+    return pl.pallas_call(
+        functools.partial(_qa_chunk_kernel, blk_w=blk_w, blk_v=blk_v),
+        grid=(nsteps,),
+        in_specs=[pl.BlockSpec((blk_w,), lambda i: (i,)),
+                  pl.BlockSpec((blk_v,), lambda i: (i,)),
+                  pl.BlockSpec((4,), lambda i: (0,)),
+                  pl.BlockSpec((2,), lambda i: (0,)),
+                  pl.BlockSpec((3,), lambda i: (0,)),
+                  pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=(pl.BlockSpec((2,), lambda i: (0,)),
+                   pl.BlockSpec((3,), lambda i: (0,)),
+                   pl.BlockSpec((1,), lambda i: (0,))),
+        out_shape=(jax.ShapeDtypeStruct((2,), jnp.int32),
+                   jax.ShapeDtypeStruct((3,), jnp.float32),
+                   jax.ShapeDtypeStruct((1,), jnp.int32)),
+        interpret=interpret,
+    )(words, vals, off, carry_sums, carry_qa, carry_cnt)
+
+
+def qa_checksum_chunk(words, vals, off, carry, *, blk_w: int, blk_v: int,
+                      interpret=None):
+    """One chunk launch of the accumulating kernel: fold ``nsteps`` blocks of
+    (``words``, ``vals``) — already block-padded — into ``carry``
+    (``(sums int32[2], qa f32[3], cnt int32[1])``). ``off`` is
+    ``int32[4] = (word_offset, value_offset, total_words, total_values)``;
+    offsets are traced (not static) so a fixed chunk size compiles once.
+    Returns the new carry."""
+    nsteps = max(words.shape[0] // blk_w, 1)
+    return _qa_chunk_call(words, vals, off, *carry, blk_w=blk_w, blk_v=blk_v,
+                          nsteps=nsteps, interpret=_auto_interpret(interpret))
+
+
+# dtypes both backends fold identically: little-endian native numerics that
+# jnp.asarray round-trips losslessly (f64/i64 would silently downcast under
+# default-x64-off jax, so they are excluded rather than wrong)
+ACCUMULATOR_DTYPES = ("float16", "float32", "int8", "uint8", "int16",
+                      "uint16", "int32", "uint32")
+
+
+class QAChecksumAccumulator:
+    """Fold one logical array's bytes through the fused QA+checksum pass,
+    chunk by chunk, bit-exact with one-shot :func:`qa_stats` on the whole
+    array.
+
+    Feed arbitrary byte chunks via :meth:`update` (internal re-buffering
+    aligns launches to the shared kernel/oracle block size, so chunk
+    boundaries never have to respect it) and call :meth:`finalize` when the
+    last byte is in — the :class:`QAStats` verdict is available the moment
+    the transfer completes, with no second pass over the bytes.
+
+    ``backend="device"`` launches the Pallas chunk kernel per fold (each
+    :meth:`update` stages its chunk host→device and dispatches
+    asynchronously; only :meth:`finalize` blocks). ``backend="host"`` runs a
+    vectorized numpy fold with the identical block tree — bit-exact with the
+    kernel — for hosts without an accelerator. The default picks ``device``
+    on TPU and ``host`` elsewhere (interpret-mode Pallas is for tests, not
+    data-plane throughput).
+    """
+
+    def __init__(self, n_vals: int, dtype, *, blk: int = 1024,
+                 interpret=None, backend: str = "auto"):
+        self.dtype = np.dtype(dtype)
+        if self.dtype.name not in ACCUMULATOR_DTYPES:
+            raise ValueError(
+                f"unsupported streaming-QA dtype {self.dtype} "
+                f"(supported: {', '.join(ACCUMULATOR_DTYPES)})")
+        if n_vals < 0:
+            raise ValueError(f"negative n_vals {n_vals}")
+        self.n_vals = int(n_vals)
+        self.itemsize = self.dtype.itemsize
+        self.blk_v = qa_block_size(self.n_vals, self.itemsize, blk)
+        self.blk_w = self.blk_v * self.itemsize // 4
+        self.align_bytes = self.blk_v * self.itemsize
+        self.nw = (self.n_vals * self.itemsize + 3) // 4
+        self.total_blocks = max(-(-self.n_vals // self.blk_v), 1)
+        if backend == "auto":
+            backend = "device" if jax.default_backend() == "tpu" else "host"
+        if backend not in ("device", "host"):
+            raise ValueError(f"unknown backend {backend!r}")
+        self.backend = backend
+        self.interpret = interpret
+        self.device_seconds = 0.0      # staging + fold dispatch + final sync
+        self._buf = bytearray()
+        self._blocks_done = 0
+        self._bytes_seen = 0
+        self._stats: Optional[QAStats] = None
+        if backend == "device":
+            self._carry = (jnp.zeros(2, jnp.int32),
+                           jnp.asarray([jnp.inf, -jnp.inf, 0.0], jnp.float32),
+                           jnp.zeros(1, jnp.int32))
+        else:
+            self._s1 = np.uint32(0)
+            self._s2 = np.uint32(0)
+            self._vmin = np.float32(np.inf)
+            self._vmax = np.float32(-np.inf)
+            self._vsum = np.float32(0.0)
+            self._cnt = 0
+
+    # -- per-launch plumbing -------------------------------------------------
+
+    def _chunk_arrays(self, chunk: bytes, nblocks: int
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+        """Block-pad one aligned chunk into (words, vals) launch operands —
+        the same zero-pad + mask discipline as the one-shot kernel, applied
+        at the chunk's global offset instead of index 0."""
+        vals = np.frombuffer(chunk, dtype=self.dtype)
+        want_v = nblocks * self.blk_v
+        if vals.size < want_v:
+            vals = np.concatenate(
+                [vals, np.zeros(want_v - vals.size, self.dtype)])
+        wpad = (-len(chunk)) % 4
+        words = np.frombuffer(bytes(chunk) + b"\0" * wpad, "<u4")
+        want_w = nblocks * self.blk_w
+        if words.size < want_w:
+            words = np.concatenate(
+                [words, np.zeros(want_w - words.size, np.uint32)])
+        return words.view(np.int32), vals
+
+    def _fold_device(self, words: np.ndarray, vals: np.ndarray, w0: int,
+                     v0: int):
+        off = np.array([w0, v0, self.nw, self.n_vals], np.int32)
+        t0 = time.perf_counter()
+        self._carry = qa_checksum_chunk(
+            jnp.asarray(words), jnp.asarray(vals), jnp.asarray(off),
+            self._carry, blk_w=self.blk_w, blk_v=self.blk_v,
+            interpret=self.interpret)
+        self.device_seconds += time.perf_counter() - t0
+
+    def _fold_host(self, words: np.ndarray, vals: np.ndarray, w0: int,
+                   v0: int):
+        """Vectorized numpy twin of the chunk kernel. Integer checksums are
+        associative mod 2^32, so whole-chunk sums match the kernel's
+        per-block folds bit-for-bit; the float sum keeps the kernel's exact
+        shape — per-block halving tree, then one sequential scalar add per
+        block in order."""
+        t0 = time.perf_counter()
+        w = words.view(np.uint32)
+        idx = w0 + np.arange(w.size, dtype=np.int64)
+        valid_w = idx < self.nw
+        with np.errstate(over="ignore"):
+            w = np.where(valid_w, w, np.uint32(0))
+            pos = np.where(valid_w, (idx % M_POS).astype(np.uint32),
+                           np.uint32(0))
+            self._s1 = np.uint32(self._s1 + np.sum(w, dtype=np.uint32))
+            self._s2 = np.uint32(self._s2 + np.sum(w * pos, dtype=np.uint32))
+        nblocks = vals.size // self.blk_v
+        v = vals.astype(np.float32).reshape(nblocks, self.blk_v)
+        vidx = (v0 + np.arange(vals.size)).reshape(nblocks, self.blk_v)
+        finite = np.isfinite(v) & (vidx < self.n_vals)
+        self._cnt += int(np.sum(finite))
+        self._vmin = np.minimum(self._vmin,
+                                np.float32(np.min(np.where(finite, v, np.inf))))
+        self._vmax = np.maximum(self._vmax,
+                                np.float32(np.max(np.where(finite, v,
+                                                           -np.inf))))
+        for t in tree_sum_f32(np.where(finite, v, np.float32(0.0))):
+            self._vsum = np.float32(self._vsum + t)
+        self.device_seconds += time.perf_counter() - t0
+
+    def _process(self, chunk: bytes, nblocks: int):
+        words, vals = self._chunk_arrays(chunk, nblocks)
+        w0 = self._blocks_done * self.blk_w
+        v0 = self._blocks_done * self.blk_v
+        if self.backend == "device":
+            self._fold_device(words, vals, w0, v0)
+        else:
+            self._fold_host(words, vals, w0, v0)
+        self._blocks_done += nblocks
+
+    # -- public surface ------------------------------------------------------
+
+    def update(self, data: bytes):
+        """Fold the next ``data`` bytes of the array's buffer. Whole blocks
+        launch immediately (async on device); a sub-block tail is carried to
+        the next update/finalize."""
+        if self._stats is not None:
+            raise RuntimeError("accumulator already finalized")
+        self._bytes_seen += len(data)
+        if self._bytes_seen > self.n_vals * self.itemsize:
+            raise ValueError(
+                f"stream overrun: fed {self._bytes_seen} bytes for a "
+                f"{self.n_vals * self.itemsize}-byte array")
+        self._buf += data
+        nblocks = len(self._buf) // self.align_bytes
+        if nblocks:
+            cut = nblocks * self.align_bytes
+            self._process(bytes(self._buf[:cut]), nblocks)
+            del self._buf[:cut]
+
+    def finalize(self) -> QAStats:
+        """Fold the carried tail (zero-padded + masked exactly like the
+        one-shot kernel's final block) and return the whole-array
+        :class:`QAStats`. Raises ``ValueError`` if the byte count fed does
+        not match the declared array size — a truncated transfer must fail
+        verification, not silently pass QA on a prefix."""
+        if self._stats is not None:
+            return self._stats
+        if self._bytes_seen != self.n_vals * self.itemsize:
+            raise ValueError(
+                f"stream truncated: fed {self._bytes_seen} of "
+                f"{self.n_vals * self.itemsize} bytes")
+        remaining = self.total_blocks - self._blocks_done
+        if remaining:
+            self._process(bytes(self._buf), remaining)
+            self._buf.clear()
+        if self.backend == "device":
+            t0 = time.perf_counter()
+            sums = np.asarray(self._carry[0]).view(np.uint32)
+            qa = np.asarray(self._carry[1])
+            cnt = int(np.asarray(self._carry[2])[0])
+            self.device_seconds += time.perf_counter() - t0
+            self._stats = QAStats(int(sums[0]), int(sums[1]), float(qa[0]),
+                                  float(qa[1]), float(qa[2]), cnt)
+        else:
+            self._stats = QAStats(int(self._s1), int(self._s2),
+                                  float(self._vmin), float(self._vmax),
+                                  float(self._vsum), self._cnt)
+        return self._stats
 
 
 @dataclasses.dataclass(frozen=True)

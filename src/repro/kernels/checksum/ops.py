@@ -1,3 +1,4 @@
 from .checksum import device_checksum as device_checksum_op  # noqa: F401
 from .checksum import qa_checksum as qa_checksum_op  # noqa: F401
 from .checksum import qa_checksum_batched as qa_checksum_batched_op  # noqa: F401
+from .checksum import qa_checksum_chunk as qa_checksum_chunk_op  # noqa: F401

@@ -288,7 +288,7 @@ def _two_caches_one_warm(tmp_path, src_arr):
     cold = InputCache(tmp_path / "cold")
     src = tmp_path / "input.npy"
     np.save(src, src_arr)
-    _, digest, origin, _ = warm.fetch_array(src)
+    _, digest, origin, *_ = warm.fetch_array(src)
     assert origin == "storage"
     return warm, cold, src, digest
 
@@ -299,7 +299,7 @@ def test_fetch_array_peer_origin_and_counters(tmp_path):
     with BlobServer(warm) as srv:
         cold.attach_fabric(PeerFabric(
             lambda ds: {d: [srv.addr_str] for d in ds}))
-        got, d2, origin, nbytes = cold.fetch_array(
+        got, d2, origin, nbytes, _ = cold.fetch_array(
             src, digest_hint=digest, size_hint=src.stat().st_size)
         assert origin == "peer" and d2 == digest
         assert np.array_equal(got, arr)
@@ -319,7 +319,7 @@ def test_fetch_array_falls_back_to_storage_on_dead_peer(tmp_path):
     _, cold, src, digest = _two_caches_one_warm(tmp_path, arr)
     cold.attach_fabric(PeerFabric(
         lambda ds: {d: ["127.0.0.1:1"] for d in ds}, timeout_s=1.0))
-    got, d2, origin, _ = cold.fetch_array(src, digest_hint=digest)
+    got, d2, origin, *_ = cold.fetch_array(src, digest_hint=digest)
     assert origin == "storage" and d2 == digest
     assert np.array_equal(got, arr)
     st = cold.stats()
@@ -341,8 +341,8 @@ def test_fetch_array_skips_peer_when_source_size_changed(tmp_path):
             return {d: [srv.addr_str] for d in ds}
 
         cold.attach_fabric(PeerFabric(locate))
-        got, d2, origin, _ = cold.fetch_array(src, digest_hint=digest,
-                                              size_hint=stale_size)
+        got, d2, origin, *_ = cold.fetch_array(src, digest_hint=digest,
+                                               size_hint=stale_size)
         assert origin == "storage"
         assert dialed == []                           # peer path never tried
         assert d2 != digest                           # current content digest
@@ -356,7 +356,7 @@ def test_load_unit_inputs_stamps_peer_bytes(dataset, tmp_path):
     with BlobServer(warm) as srv:
         cold.attach_fabric(PeerFabric(
             lambda ds: {d: [srv.addr_str] for d in ds}))
-        inputs, sums, cache_hit, hit_bytes, peer_bytes = load_unit_inputs(
+        inputs, sums, cache_hit, hit_bytes, peer_bytes, _ = load_unit_inputs(
             units[0], dataset.root, cache=cold)
         assert cache_hit is False and hit_bytes == 0
         assert peer_bytes > 0

@@ -137,3 +137,125 @@ def test_ingest_device_qa_uses_checksum_consistently(tmp_path):
     _, rec1 = ingest_directory(d, tmp_path / "b1", "s", device_qa=True)
     _, rec2 = ingest_directory(d, tmp_path / "b2", "s", device_qa=True)
     assert rec1[0].checksum and rec1[0].checksum == rec2[0].checksum
+
+
+# ---------------------------------------------------------------------------
+# ingest-path correctness: host/device verdict parity, streamed ingest,
+# atomic report commits
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [np.float16, np.float32, np.uint8,
+                                   np.int16, np.uint16])
+def test_host_and_device_qa_verdicts_agree_across_dtypes(tmp_path, dtype):
+    """The host fast-QA reduces in float32 — the fused kernel's dtype — so
+    both paths must reach the same accept/reject verdict for every input
+    dtype. (Regression: native-dtype std/mean overflowed to inf on float16
+    volumes at modest intensities, rejecting on the host path only.)"""
+    rng = np.random.default_rng(5)
+    d = tmp_path / "raw"
+    # intensities chosen so a float16 sum overflows but a float32 one is fine
+    if np.issubdtype(np.dtype(dtype), np.floating):
+        vol = rng.normal(300, 40, (16, 16, 16)).astype(dtype)
+    else:
+        vol = rng.integers(50, 200, (16, 16, 16)).astype(dtype)
+    write_raw_dump(d / "a.npz", vol, subject="001", session="01",
+                   protocol="T1w")
+    bad = vol.astype(np.float32)
+    bad[0, 0, 0] = np.nan
+    write_raw_dump(d / "b.npz", bad, subject="002", session="01",
+                   protocol="T1w")
+    _, rec_host = ingest_directory(d, tmp_path / "h", "s", device_qa=False)
+    _, rec_dev = ingest_directory(d, tmp_path / "d", "s", device_qa=True)
+    host = {r.source: r.status for r in rec_host}
+    dev = {r.source: r.status for r in rec_dev}
+    assert host == dev
+    assert host["a.npz"] == "ok" and host["b.npz"] == "failed_qa"
+
+
+def test_fast_qa_float16_not_rejected_by_overflow():
+    """Direct regression for the native-dtype reduction: a bright float16
+    volume whose f16 std/mean overflow must still pass host QA."""
+    from repro.core.ingest import IngestRule, _fast_qa
+    rng = np.random.default_rng(2)
+    vol = rng.normal(400, 60, (24, 24, 24)).astype(np.float16)
+    with np.errstate(over="ignore"):
+        assert not np.isfinite(vol.astype(np.float16).std())   # the trap
+    assert _fast_qa(vol, IngestRule()) == ""
+
+
+def test_streamed_ingest_matches_fused_and_records_sha256(tmp_path,
+                                                          monkeypatch):
+    """Streamed device QA (chunked fold + in-flight sha256) must be
+    bit-identical to the one-shot fused kernel, and the recorded sha256
+    must be the digest of the committed .npy bytes."""
+    import hashlib
+    from repro.core import stream as stream_mod
+    rng = np.random.default_rng(0)
+    d = tmp_path / "raw"
+    vol = rng.normal(100, 20, (48, 48, 48)).astype(np.float32)
+    write_raw_dump(d / "a.npz", vol, subject="001", session="01",
+                   protocol="T1w")
+    # 64 KiB chunks over a ~432 KiB volume: several chunks, non-dividing tail
+    monkeypatch.setenv(stream_mod.CHUNK_MB_ENV, "0.0625")
+    _, rec_stream = ingest_directory(d, tmp_path / "s", "ds", device_qa=True)
+    monkeypatch.setenv(stream_mod.STREAM_ENV, "0")
+    _, rec_fused = ingest_directory(d, tmp_path / "f", "ds", device_qa=True)
+    assert rec_stream[0].checksum == rec_fused[0].checksum
+    dest = Path(rec_stream[0].dest)
+    assert rec_stream[0].sha256 == hashlib.sha256(
+        dest.read_bytes()).hexdigest()
+    # the streamed and load-then-verify paths commit identical bytes
+    assert dest.read_bytes() == Path(rec_fused[0].dest).read_bytes()
+    report = json.loads((tmp_path / "s" / "ds" /
+                         "ingestion_report.json").read_text())
+    assert report["stream"]["chunks"] > 1
+    assert report["stream"]["device_qa"] is True
+
+
+def test_ingest_rule_default_not_shared_between_calls(raw_dir, tmp_path):
+    """Regression: the rule default used to be one shared dataclass
+    instance, so a caller mutating it changed every later call's filter."""
+    import repro.core.ingest as ingest
+    import inspect
+    default = inspect.signature(ingest.ingest_directory) \
+        .parameters["rule"].default
+    assert default is None                     # construct-per-call
+    _, rec1 = ingest_directory(raw_dir, tmp_path / "b1", "s")
+    # simulate the old failure: mutate a rule the caller owns, re-ingest
+    mine = IngestRule(allowed_protocols=("bold",))
+    _, rec_bold = ingest_directory(raw_dir, tmp_path / "b2", "s", rule=mine)
+    _, rec2 = ingest_directory(raw_dir, tmp_path / "b3", "s")
+    assert [r.status for r in rec1] == [r.status for r in rec2]
+
+
+def test_ingestion_report_commit_is_atomic(raw_dir, tmp_path, monkeypatch):
+    """A crash mid-report-write must leave the previous report intact, not
+    a torn file (tmp+fsync+rename discipline)."""
+    from repro.core import ingest as ingest_mod
+    manifest, _ = ingest_directory(raw_dir, tmp_path / "bids", "study")
+    rp = tmp_path / "bids" / "study" / "ingestion_report.json"
+    before = rp.read_bytes()
+    json.loads(before)                              # valid committed report
+
+    def torn_write(path, data, *, fsync=True):
+        path = Path(path)
+        if path.name == "ingestion_report.json":
+            # crash after the tmp file is partially written, before rename
+            tmp = path.with_name(".torn-tmp")
+            tmp.write_bytes(data[: len(data) // 2])
+            raise OSError("simulated crash mid-write")
+        return real_write(path, data, fsync=fsync)
+
+    real_write = ingest_mod.atomic_write_bytes
+    monkeypatch.setattr(ingest_mod, "atomic_write_bytes", torn_write)
+    with pytest.raises(OSError, match="simulated crash"):
+        ingest_directory(raw_dir, tmp_path / "bids", "study")
+    assert rp.read_bytes() == before                # old report untouched
+    json.loads(rp.read_text())
+
+
+def test_ingest_leaves_no_tmp_litter(raw_dir, tmp_path):
+    ingest_directory(raw_dir, tmp_path / "bids", "study", device_qa=True)
+    litter = [p for p in (tmp_path / "bids").rglob("*")
+              if p.name.startswith(".") and "tmp" in p.name]
+    assert litter == []

@@ -383,7 +383,7 @@ def test_cache_stats_track_bytes_moved(dataset, tmp_path):
     size = (Path(dataset.root) / units[0].inputs["T1w"]).stat().st_size
     assert st["bytes_from_storage"] == size      # one miss
     assert st["bytes_from_cache"] == size        # one hit
-    _, _, _, hit_bytes, _ = load_unit_inputs(units[0], dataset.root,
+    _, _, _, hit_bytes, *_ = load_unit_inputs(units[0], dataset.root,
                                              cache=cache)
     assert hit_bytes == size
 

@@ -230,3 +230,27 @@ def test_moe_dispatch_conservation(S, E, C):
     for row in range(E * C):
         if row not in used:
             assert np.allclose(np.asarray(buf)[row], 0.0)
+
+
+@given(st.lists(st.floats(-1e4, 1e4, allow_nan=True, allow_infinity=True,
+                          width=32),
+                min_size=0, max_size=600),
+       st.integers(1, 3000),
+       st.sampled_from(["float32", "float16", "int16", "uint8"]))
+@settings(max_examples=40, deadline=None)
+def test_chunked_qa_fold_bit_exact_vs_one_shot(xs, chunk, dtype):
+    """Streaming ingest invariant (repro.core.stream): feeding a volume's
+    bytes through the chunk-accumulating fused QA+checksum fold in ANY
+    chunking — including chunk > volume and non-dividing tails — must be
+    bit-identical to the one-shot kernel. (Deterministic slice of this sweep
+    lives in test_stream.py for environments without hypothesis.)"""
+    from repro.kernels.checksum import QAChecksumAccumulator, qa_stats
+    arr = np.asarray(xs, np.float32)
+    if dtype != "float32":
+        with np.errstate(invalid="ignore", over="ignore"):
+            arr = arr.astype(dtype)
+    acc = QAChecksumAccumulator(arr.size, arr.dtype, interpret=True)
+    data = arr.tobytes()
+    for off in range(0, max(len(data), 1), chunk):
+        acc.update(data[off:off + chunk])
+    assert acc.finalize() == qa_stats(arr, interpret=True)

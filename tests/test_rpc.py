@@ -45,10 +45,10 @@ def _work(dataset):
 def test_cache_hit_returns_identical_digest_and_bytes(dataset, tmp_path):
     pipe, units = _work(dataset)
     cache = InputCache(tmp_path / "cache", max_bytes=1 << 30)
-    i1, sums1, hit1, hb1, _ = load_unit_inputs(units[0], dataset.root,
-                                               cache=cache)
-    i2, sums2, hit2, hb2, _ = load_unit_inputs(units[0], dataset.root,
-                                               cache=cache)
+    i1, sums1, hit1, hb1, *_ = load_unit_inputs(units[0], dataset.root,
+                                                cache=cache)
+    i2, sums2, hit2, hb2, *_ = load_unit_inputs(units[0], dataset.root,
+                                                cache=cache)
     assert (hit1, hit2) == (False, True)
     assert sums1 == sums2                       # provenance-identical digests
     for k in i1:
@@ -96,7 +96,7 @@ def test_cache_oversize_input_passes_through_without_wiping(dataset, tmp_path):
     load_unit_inputs(units[0], dataset.root, cache=cache)   # warm blob
     big = tmp_path / "big.npy"
     np.save(big, np.zeros(one, dtype=np.float64))           # > max_bytes
-    arr, digest, origin, nbytes = cache.fetch_array(big)
+    arr, digest, origin, nbytes, _ = cache.fetch_array(big)
     assert origin == "storage" and arr.nbytes > cache.max_bytes
     st = cache.stats()
     assert st["evictions"] == 0 and st["blobs"] == 1        # warm blob intact
